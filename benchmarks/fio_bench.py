@@ -1,0 +1,155 @@
+"""Reproduces the paper's FIO study (Figs. 3 & 4).
+
+Eight workloads (randr / randrw90 / randrw / randw × uniform / zipf-95/5)
+× engines (nvpages, nvlog, psync reference) × NVMM budgets (2 GiB and
+100 GiB in the paper, scaled by --scale with all ratios preserved:
+NVMM-small = file/10, NVMM-large = 5×file, NVLog DRAM cache = file/10 —
+the paper's 20 GiB file / 2 GiB DRAM cache proportions).
+
+Completion time is the simulated time of the IO job (the paper's bar
+height). 5-run averages by default, like the paper.
+
+    PYTHONPATH=src python -m benchmarks.fio_bench --scale 64MiB --runs 3
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import all_workloads, run_workload
+from repro.core import NVCacheFS
+
+
+def parse_size(s: str) -> int:
+    units = {"kib": 1 << 10, "mib": 1 << 20, "gib": 1 << 30}
+    s = s.strip().lower()
+    for u, m in units.items():
+        if s.endswith(u):
+            return int(float(s[:-len(u)]) * m)
+    return int(s)
+
+
+def engine_fs(engine: str, nvmm: int, dram_cache: int) -> NVCacheFS:
+    return NVCacheFS(engine, nvmm_bytes=nvmm, dram_cache_bytes=dram_cache)
+
+
+def run_grid(file_bytes: int, runs: int, engines, include_fsync: bool):
+    results = []
+    nvmm_small = max(file_bytes // 10, 1 << 20)      # paper: 2 GiB vs 20 GiB
+    nvmm_large = 5 * file_bytes                      # paper: 100 GiB vs 20 GiB
+    dram_cache = max(file_bytes // 10, 1 << 20)      # paper: 2 GiB DRAM cache
+    for nvmm_name, nvmm in (("small", nvmm_small), ("large", nvmm_large)):
+        for wl in all_workloads(file_bytes, file_bytes):
+            for engine in engines:
+                times = []
+                for r in range(runs):
+                    fs = engine_fs(engine, nvmm, dram_cache)
+                    wl_r = wl.__class__(**{**wl.__dict__, "seed": r})
+                    sim, wall = run_workload(fs, wl_r)
+                    times.append(sim)
+                results.append({
+                    "figure": "fig3" if nvmm_name == "small" else "fig4",
+                    "nvmm": nvmm_name, "workload": wl.name, "engine": engine,
+                    "sim_time_s": float(np.mean(times)),
+                    "sim_time_std": float(np.std(times)),
+                })
+    if include_fsync:
+        # paper §III: psync+fsync-per-write is catastrophically slow — run
+        # one reduced-size job to quantify the ratio without hour-long sims
+        wl = all_workloads(file_bytes // 8, file_bytes // 8)[3]   # randw
+        fs = engine_fs("psync_fsync", nvmm_small, dram_cache)
+        sim, _ = run_workload(fs, wl)
+        results.append({"figure": "fig3", "nvmm": "small",
+                        "workload": "randw(1/8 size)",
+                        "engine": "psync_fsync", "sim_time_s": sim,
+                        "sim_time_std": 0.0})
+    return results
+
+
+def validate_paper_claims(results) -> list[str]:
+    """DESIGN.md §8: the findings the reproduction must show."""
+    idx = {(r["figure"], r["workload"], r["engine"]): r["sim_time_s"]
+           for r in results}
+    checks = []
+
+    def check(name, ok):
+        checks.append(("PASS" if ok else "FAIL") + " " + name)
+
+    for fig in ("fig3", "fig4"):
+        wins = sum(
+            idx[(fig, w, "nvlog")] <= idx[(fig, w, "nvpages")] * 1.05
+            for w in ("randr", "randrw", "randrw90", "randw",
+                      "randr-zipf", "randrw-zipf", "randrw90-zipf",
+                      "randw-zipf"))
+        want = 8 if fig == "fig4" else 6       # fig3: zipf-write crossover
+        check(f"{fig}: NVLog wins (or ties) nearly every workload "
+              f"[{wins}/8]", wins >= want)
+    check("randr: NVPages pays NVMM read bandwidth (≥3× NVLog)",
+          idx[("fig4", "randr", "nvpages")] >=
+          3 * idx[("fig4", "randr", "nvlog")])
+    check("psync (no persistence) is the fastest reference on randr",
+          idx[("fig3", "randr", "psync")] <=
+          min(idx[("fig3", "randr", "nvlog")],
+              idx[("fig3", "randr", "nvpages")]) * 1.1)
+    fsync = [r for r in results if r["engine"] == "psync_fsync"]
+    if fsync:
+        # compare per-op: the paper's ">1h for 20 GiB" ⇒ ~1 ms/op vs the
+        # log's ~µs/op persistence (fig4 = uncapped-log regime)
+        check("fsync-per-write ≫ log persistence (paper: >1h vs seconds)",
+              fsync[0]["sim_time_s"] * 8 >
+              50 * idx[("fig4", "randw", "nvlog")])
+    for w in ("randr", "randrw90"):
+        zipf_gap = (idx[("fig3", w + "-zipf", "nvpages")]
+                    / idx[("fig3", w + "-zipf", "nvlog")])
+        uni_gap = (idx[("fig3", w, "nvpages")]
+                   / idx[("fig3", w, "nvlog")])
+        check(f"zipf narrows the gap on {w} (hot set fits NVPages) "
+              f"without flipping it",
+              1.0 <= zipf_gap <= uni_gap * 1.05)
+    # the one regime where paging wins: zipf-heavy WRITES at small NVMM —
+    # the log saturates (drain-bound) while paging absorbs hot-page
+    # overwrites in NVMM. Consistent with the paper's hedged "almost every
+    # workload" (§III) and its burst-absorber Discussion; see EXPERIMENTS.md.
+    check("documented crossover: fig3 zipf-writes favour paging "
+          "(log saturated)",
+          idx[("fig3", "randw-zipf", "nvpages")] <
+          idx[("fig3", "randw-zipf", "nvlog")])
+    return checks
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="32MiB",
+                    help="file size (paper: 20GiB; ratios preserved)")
+    ap.add_argument("--runs", type=int, default=5)
+    ap.add_argument("--engines", default="nvpages,nvlog,psync")
+    ap.add_argument("--no-fsync-job", action="store_true")
+    ap.add_argument("--out", default="artifacts/fio_bench.json")
+    args = ap.parse_args(argv)
+
+    file_bytes = parse_size(args.scale)
+    results = run_grid(file_bytes, args.runs, args.engines.split(","),
+                       include_fsync=not args.no_fsync_job)
+    print(f"# fio grid: file={file_bytes >> 20}MiB runs={args.runs} "
+          f"(paper fig3/fig4 ratios)")
+    print("figure,workload,engine,sim_time_s")
+    for r in results:
+        print(f"{r['figure']},{r['workload']},{r['engine']},"
+              f"{r['sim_time_s']:.6f}")
+    checks = validate_paper_claims(results)
+    print("\n# paper-claim validation (DESIGN.md §8)")
+    for c in checks:
+        print(c)
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps({"file_bytes": file_bytes,
+                               "results": results,
+                               "checks": checks}, indent=1))
+    return results, checks
+
+
+if __name__ == "__main__":
+    main()

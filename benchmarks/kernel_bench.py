@@ -1,0 +1,93 @@
+"""Kernel micro-benchmarks: wall-time of the interpret-mode Pallas kernels vs
+their jnp oracles on CPU (correctness-scale), plus the analytic TPU-side
+FLOP/byte counts the roofline uses. Real-TPU timing happens on hardware; the
+bench records the work the kernels would do.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import flash_attention, log_patch, paged_attention
+from repro.roofline.hw import V5E
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                       # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def bench_flash(B=1, S=512, H=8, K=2, D=128):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, K, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, K, D)), jnp.float32)
+    t_ref = _time(lambda *a: flash_attention(*a, causal=True), q, k, v)
+    t_pal = _time(lambda *a: flash_attention(*a, causal=True,
+                                             force_pallas=True), q, k, v)
+    flops = 4 * B * H * S * S * D / 2            # causal
+    return {"kernel": "flash_attention", "shape": f"B{B} S{S} H{H} D{D}",
+            "ref_us": t_ref * 1e6, "pallas_interp_us": t_pal * 1e6,
+            "tpu_flops": flops,
+            "tpu_roofline_us": flops / V5E.peak_flops_bf16 * 1e6}
+
+
+def bench_paged(B=8, H=8, K=4, D=128, T=16, P=256, MP=16):
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    pk = jnp.asarray(rng.standard_normal((P, T, K, D)), jnp.float32)
+    pv = jnp.asarray(rng.standard_normal((P, T, K, D)), jnp.float32)
+    tbl = jnp.asarray(rng.integers(0, P, (B, MP)), jnp.int32)
+    lens = jnp.asarray(rng.integers(T, T * MP, B), jnp.int32)
+    t_ref = _time(paged_attention, q, pk, pv, tbl, lens)
+    t_pal = _time(lambda *a: paged_attention(*a, force_pallas=True),
+                  q, pk, pv, tbl, lens)
+    bytes_moved = B * MP * T * K * D * 2 * 2 * 4   # K+V pages per batch row
+    return {"kernel": "paged_attention", "shape": f"B{B} pages{MP}x{T}",
+            "ref_us": t_ref * 1e6, "pallas_interp_us": t_pal * 1e6,
+            "tpu_bytes": bytes_moved,
+            "tpu_roofline_us": bytes_moved / V5E.hbm_bandwidth * 1e6}
+
+
+def bench_log_patch(P=64, T=16, C=512, N=128):
+    rng = np.random.default_rng(2)
+    pool = jnp.asarray(rng.standard_normal((P, T, C)), jnp.float32)
+    pays = jnp.asarray(rng.standard_normal((N, C)), jnp.float32)
+    pg = jnp.asarray(rng.integers(0, P, N), jnp.int32)
+    sl = jnp.asarray(rng.integers(0, T, N), jnp.int32)
+    t_ref = _time(log_patch, pool, pays, pg, sl)
+    t_pal = _time(lambda *a: log_patch(*a, force_pallas=True),
+                  pool, pays, pg, sl)
+    bytes_moved = P * T * C * 4 * 2 + N * C * 4
+    return {"kernel": "log_patch", "shape": f"P{P} N{N} C{C}",
+            "ref_us": t_ref * 1e6, "pallas_interp_us": t_pal * 1e6,
+            "tpu_bytes": bytes_moved,
+            "tpu_roofline_us": bytes_moved / V5E.hbm_bandwidth * 1e6}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts/kernel_bench.json")
+    args = ap.parse_args(argv)
+    rows = [bench_flash(), bench_paged(), bench_log_patch()]
+    print("kernel,shape,ref_us,pallas_interp_us,tpu_roofline_us")
+    for r in rows:
+        print(f"{r['kernel']},{r['shape']},{r['ref_us']:.0f},"
+              f"{r['pallas_interp_us']:.0f},{r['tpu_roofline_us']:.2f}")
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

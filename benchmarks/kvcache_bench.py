@@ -1,0 +1,61 @@
+"""KV-cache tiering benchmark (DESIGN.md §2a): the paper's comparison at the
+serving call-site. Decode-append + periodic full-history gathers, paged vs
+log design; reports simulated tier time, write amplification, DMA traffic.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import SimClock
+from repro.core.kvcache import KVSpec, LogKVCache, PagedKVCache
+
+
+def bench(design: str, *, layers=8, kv_heads=8, head_dim=128, tokens=512,
+          gather_every=64, seqs=4, seed=0) -> dict:
+    spec = KVSpec(num_layers=layers, kv_heads=kv_heads, head_dim=head_dim,
+                  page_tokens=16)
+    clock = SimClock()
+    kv = (PagedKVCache(spec, clock, hbm_budget_bytes=2 << 20)
+          if design == "paged" else
+          LogKVCache(spec, clock, hot_window_tokens=128))
+    rng = np.random.default_rng(seed)
+    for t in range(tokens):
+        for s in range(seqs):
+            tok = rng.standard_normal(
+                (layers, 2, kv_heads, head_dim)).astype(np.float16)
+            kv.append(s, tok)
+        if (t + 1) % gather_every == 0:
+            for s in range(seqs):
+                kv.gather(s, layer=t % layers)
+    host_w = clock.bytes_moved("host", "write")
+    host_r = clock.bytes_moved("host", "read")
+    return {"design": design, "sim_time_s": clock.now,
+            "host_write_bytes": host_w, "host_read_bytes": host_r,
+            "write_amplification": host_w / (
+                tokens * seqs * spec.token_bytes * layers),
+            **{k: v for k, v in kv.stats.items()}}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tokens", type=int, default=512)
+    ap.add_argument("--out", default="artifacts/kvcache_bench.json")
+    args = ap.parse_args(argv)
+    rows = [bench(d, tokens=args.tokens) for d in ("paged", "log")]
+    print("design,sim_time_s,write_amp,host_read_MB")
+    for r in rows:
+        print(f"{r['design']},{r['sim_time_s']:.4f},"
+              f"{r['write_amplification']:.2f},"
+              f"{r['host_read_bytes']/1e6:.1f}")
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""§Perf hillclimb report: baseline vs optimized roofline terms per cell.
+
+Baseline artifacts: artifacts/dryrun (paper-faithful framework).
+Optimized artifacts: artifacts/dryrun_opt (triangular attention, token-gather
+EP decode, int8 KV cache).
+
+    PYTHONPATH=src python -m benchmarks.perf_compare
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES_BY_NAME, get_config
+from repro.roofline.analysis import (analytic_memory_bytes, model_flops,
+                                     reconstruct_totals, roofline_cell)
+from repro.roofline.hw import V5E
+
+REPO = Path(__file__).resolve().parent.parent
+BASE = REPO / "artifacts" / "dryrun"
+OPT = REPO / "artifacts" / "dryrun_opt"
+
+CELLS = [
+    ("minicpm-2b", "prefill_32k", "B: triangular causal attention",
+     "worst useful/HLO fraction (0.21): plain chunked scan computes the "
+     "full S² score square and masks half of it"),
+    ("arctic-480b", "decode_32k", "A: token-gather EP decode",
+     "most collective-bound (1.10s wire/step): baseline FSDP-gathers "
+     "expert weights every layer for every decoded token"),
+    ("starcoder2-15b", "decode_32k", "C: int8 KV cache",
+     "the paper-representative paged-KV serving cell; decode is "
+     "KV-read-bound"),
+]
+
+
+def terms(arch, shape_name, art_dir, kv_int8=False):
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    totals = reconstruct_totals(arch, shape_name, art_dir)
+    full = json.loads(
+        (art_dir / f"{arch}__{shape_name}__pod.json").read_text())
+    n_dev = 256
+    mb = full.get("microbatches", 1)
+    mem = analytic_memory_bytes(cfg, shape, n_dev, mb)
+    if kv_int8:
+        # KV portion moves to int8 (+1/128 scales); weights unchanged
+        w_local = 2.0 * cfg.param_count() / 16
+        kv = mem - w_local
+        mem = w_local + kv * (0.5 + 1 / 128)
+    out = {
+        "compute_s": (totals["flops"] / V5E.peak_flops_bf16
+                      if totals else None),
+        "memory_s": mem / V5E.hbm_bandwidth,
+        "collective_s": (totals["wire"] / (2 * V5E.ici_link_bandwidth)
+                         if totals else None),
+        "live_gb": full["per_device_live_bytes"] / 1e9,
+        "useful": (model_flops(cfg, shape) / (totals["flops"] * n_dev)
+                   if totals and totals["flops"] else None),
+    }
+    return out
+
+
+def fmt(v):
+    return "—" if v is None else f"{v:.4f}"
+
+
+def main():
+    print("## §Perf: hillclimb before/after (single-pod roofline terms)\n")
+    for arch, shape, title, why in CELLS:
+        print(f"### {title} — {arch} × {shape}")
+        print(f"*Why this cell:* {why}\n")
+        kv8 = "int8" in title
+        try:
+            b = terms(arch, shape, BASE)
+            o = terms(arch, shape, OPT, kv_int8=kv8)
+        except FileNotFoundError as e:
+            print(f"  missing artifacts: {e}\n")
+            continue
+        print("| term | baseline | optimized | Δ |")
+        print("|---|---|---|---|")
+        for k in ("compute_s", "memory_s", "collective_s", "live_gb",
+                  "useful"):
+            bv, ov = b[k], o[k]
+            delta = ("—" if bv in (None, 0) or ov is None
+                     else f"{(1 - ov / bv) * 100:+.1f}%".replace("+-", "-"))
+            print(f"| {k} | {fmt(bv)} | {fmt(ov)} | {delta} |")
+        print()
+
+
+if __name__ == "__main__":
+    main()

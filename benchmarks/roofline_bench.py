@@ -1,0 +1,90 @@
+"""Roofline harness (deliverable g): drives the reduced-depth dry-run
+compiles for every live (arch × shape) cell, then computes the three-term
+roofline table via repro.roofline.analysis.
+
+    PYTHONPATH=src python -m benchmarks.roofline_bench --archs all
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+ART = REPO / "artifacts" / "dryrun"
+
+
+def _dryrun(args: list[str]) -> int:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    r = subprocess.run([sys.executable, "-m", "repro.launch.dryrun", *args],
+                       env=env, cwd=REPO, capture_output=True, text=True)
+    if r.returncode != 0:
+        print(r.stdout[-2000:], r.stderr[-2000:])
+    return r.returncode
+
+
+def ensure_samples(arch: str, shape: str, force=False) -> None:
+    from repro.configs import get_config
+    from repro.roofline.analysis import sample_plan
+    cfg = get_config(arch)
+    for s in sample_plan(cfg):
+        tag = f"{arch}__{shape}__pod__L{s['layers']}"
+        if s.get("period"):
+            tag += f"P{s['period']}"
+        if not force and (ART / f"{tag}.json").exists():
+            continue
+        args = ["--arch", arch, "--shape", shape, "--mesh", "single",
+                "--layers", str(s["layers"]), "--out", str(ART)]
+        if s.get("period"):
+            args += ["--period", str(s["period"])]
+        args += ["--mb", "1", "--unroll"]
+        print(f"  sample compile: {tag}", flush=True)
+        _dryrun(args)
+
+
+def main(argv=None):
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.configs import ARCH_IDS, applicable_shapes, get_config
+    from repro.roofline.analysis import render_table, roofline_cell
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default="all")
+    ap.add_argument("--shapes", default="all")
+    ap.add_argument("--skip-compile", action="store_true",
+                    help="only analyse existing artifacts")
+    ap.add_argument("--out", default="artifacts/roofline.json")
+    args = ap.parse_args(argv)
+
+    archs = ARCH_IDS if args.archs == "all" else args.archs.split(",")
+    rows = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = [s.name for s in applicable_shapes(cfg)]
+        if args.shapes != "all":
+            shapes = [s for s in shapes if s in args.shapes.split(",")]
+        for shape in shapes:
+            if not args.skip_compile:
+                ensure_samples(arch, shape)
+            row = roofline_cell(arch, shape, ART)
+            if row is not None:
+                rows.append(row)
+                print(f"{arch:24s} {shape:12s} bound={row.bound:10s} "
+                      f"c={row.compute_s:.4f}s m={row.memory_s:.4f}s "
+                      f"x={row.collective_s:.4f}s "
+                      f"useful={row.model_flops_ratio:.2f}", flush=True)
+            else:
+                print(f"{arch:24s} {shape:12s} MISSING ARTIFACTS", flush=True)
+    print()
+    print(render_table(rows))
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps([r.as_dict() for r in rows], indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Benchmark runner: one section per paper table/figure + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract, where
+``derived`` carries the benchmark's headline quantity.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _section(title):
+    print(f"\n### {title}", flush=True)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller scales (CI)")
+    ap.add_argument("--with-roofline-compiles", action="store_true",
+                    help="also run the reduced-depth dry-run compiles "
+                         "(slow; usually done via benchmarks.roofline_bench)")
+    args = ap.parse_args(argv)
+
+    from benchmarks import fio_bench, kernel_bench, kvcache_bench, \
+        recovery_bench
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+
+    _section("fio grid (paper Figs. 3-4)")
+    scale = "8MiB" if args.fast else "32MiB"
+    runs = 2 if args.fast else 5
+    results, checks = fio_bench.main(["--scale", scale, "--runs", str(runs)])
+    n_ops = (8 << 20 if args.fast else 32 << 20) // 4096
+    for r in results:
+        print(f"fio/{r['figure']}/{r['workload']}/{r['engine']},"
+              f"{r['sim_time_s'] / n_ops * 1e6:.3f},"
+              f"sim_total_s={r['sim_time_s']:.4f}")
+    failed = [c for c in checks if c.startswith("FAIL")]
+    print(f"fio/claims,{0.0},passed={len(checks)-len(failed)}/{len(checks)}")
+
+    _section("recovery (paper §II crash protocol)")
+    for r in recovery_bench.main(["--sizes", "1,4" if args.fast else "1,4,16"]):
+        print(f"recovery/{r['engine']}/{r['dirty_mib']}MiB,"
+              f"{r['recovery_s'] * 1e6:.1f},lost={r['lost']}")
+
+    _section("kv-cache tiering (serving call-site)")
+    for r in kvcache_bench.main(["--tokens", "128" if args.fast else "512"]):
+        print(f"kvcache/{r['design']},{r['sim_time_s'] * 1e6:.1f},"
+              f"write_amp={r['write_amplification']:.2f}")
+
+    _section("kernels (interpret-mode vs oracle + TPU roofline)")
+    for r in kernel_bench.main([]):
+        print(f"kernel/{r['kernel']},{r['pallas_interp_us']:.0f},"
+              f"tpu_roofline_us={r['tpu_roofline_us']:.2f}")
+
+    _section("roofline table (from dry-run artifacts)")
+    try:
+        from benchmarks import roofline_bench
+        rows = roofline_bench.main(["--skip-compile"] +
+                                   ([] if not args.with_roofline_compiles
+                                    else []))
+        for r in rows:
+            print(f"roofline/{r.arch}/{r.shape},{max(r.compute_s, r.memory_s, r.collective_s)*1e6:.0f},"
+                  f"bound={r.bound}:useful={r.model_flops_ratio:.2f}")
+    except Exception as e:  # artifacts may not exist yet
+        print(f"roofline/skipped,0,reason={type(e).__name__}")
+
+    print(f"\n# total bench wall time: {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Quickstart: the paper's two cache designs behind one POSIX-like API,
+then the same switch at the framework's checkpoint call-site.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import NVCacheFS, PAGE_SIZE
+
+
+def main():
+    print("=== NVMM cache designs: logging vs paging (Dulong et al. 2023)\n")
+    for engine in ("nvpages", "nvlog", "psync"):
+        fs = NVCacheFS(engine, nvmm_bytes=8 << 20, dram_cache_bytes=2 << 20)
+        fd = fs.open("/demo/file")
+
+        # write 2 MiB, read it back hot
+        blob = b"\xAB" * PAGE_SIZE
+        for off in range(0, 2 << 20, PAGE_SIZE):
+            fs.pwrite(fd, blob, off)
+        for _ in range(2):
+            for off in range(0, 2 << 20, PAGE_SIZE):
+                fs.pread(fd, PAGE_SIZE, off)
+
+        # crash and recover — acked writes must survive (except psync!)
+        fs.crash()
+        rec_t = fs.recover()
+        fd = fs.open("/demo/file")
+        survived = fs.pread(fd, 4, 0) == b"\xAB" * 4
+        s = fs.stats()
+        print(f"{engine:9s} sim={s['sim_time_s']*1e3:8.2f}ms "
+              f"recovery={rec_t*1e3:6.2f}ms "
+              f"data_survived_crash={survived}")
+    print("\npsync loses un-synced data — the paper's motivation: both NVMM "
+          "designs give persistence at pwrite-return, at very different "
+          "costs (see benchmarks/fio_bench.py for the full Figs. 3-4 grid).")
+
+
+if __name__ == "__main__":
+    main()

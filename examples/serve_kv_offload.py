@@ -1,0 +1,42 @@
+"""Serving example: batched generation with the tiered KV cache, comparing
+the paper's two designs at the serving call-site (DESIGN.md §2a).
+
+    PYTHONPATH=src python examples/serve_kv_offload.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import ServeConfig, ServingEngine
+from repro.serving.engine import Request
+
+
+def main():
+    cfg = get_config("internlm2-1.8b-smoke")
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 24, dtype=np.int32)
+               for _ in range(3)]
+
+    outputs = {}
+    for design in ("paged", "log"):
+        engine = ServingEngine(model, params, ServeConfig(
+            max_len=64, design=design, page_tokens=8, hot_window_tokens=16))
+        reqs = [Request(rid=i, prompt=p.copy(), max_new=16)
+                for i, p in enumerate(prompts)]
+        engine.generate(reqs)
+        outputs[design] = [r.generated for r in reqs]
+        s = engine.stats()
+        print(f"design={design:6s} sim_tier_time={s['sim_time_s']*1e6:9.1f}us "
+              f"stats={ {k: v for k, v in s.items() if k != 'sim_time_s'} }")
+    assert outputs["paged"] == outputs["log"], "designs must agree on tokens"
+    print("\nboth designs generated identical tokens — they differ only in "
+          "tier traffic (paging pays 2× writes + page DMA on miss; logging "
+          "pays 1× sequential writes + patch reads), exactly the paper's "
+          "trade-off transplanted to the KV cache.")
+
+
+if __name__ == "__main__":
+    main()

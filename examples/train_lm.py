@@ -1,0 +1,81 @@
+"""End-to-end driver (deliverable b): train a ~100M-param LM for a few
+hundred steps on synthetic data with log-structured checkpointing, a
+mid-run simulated crash, and bit-exact resume.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import SyntheticLMDataset, make_batch_iterator
+from repro.models import build_model
+from repro.training import AdamWConfig, init_train_state, make_train_step
+
+
+def build_100m():
+    """A ~100M-parameter internlm2-family config."""
+    base = get_config("internlm2-1.8b")
+    return dataclasses.replace(
+        base, name="internlm2-100m", num_layers=10, d_model=768,
+        num_heads=12, num_kv_heads=4, d_ff=3072, vocab_size=16384,
+        head_dim=64)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--crash-at", type=int, default=None,
+                    help="simulate a crash at this step (default: midway)")
+    args = ap.parse_args()
+    # crash only after at least one checkpoint exists
+    crash_at = args.crash_at or max(args.steps // 2, 11)
+
+    cfg = build_100m()
+    model = build_model(cfg, remat=True)
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M")
+    opt = AdamWConfig(lr=1e-3, schedule="cosine",
+                      warmup_steps=args.steps // 20, total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(model, opt))
+    ds = SyntheticLMDataset(cfg.vocab_size, args.seq, args.batch, seed=0)
+    print(f"synthetic-data loss floor ≈ {ds.entropy_floor:.3f} nats")
+
+    mgr = CheckpointManager("log", nvmm_bytes=2 << 30, snapshot_every=4)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    it = make_batch_iterator(ds)
+    t0 = time.time()
+    step = 0
+    while step < args.steps:
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        state, metrics = step_fn(state, batch)
+        step += 1
+        if step % 20 == 0 or step == 1:
+            print(f"step {step:4d} loss={float(metrics['loss']):.4f} "
+                  f"lr={float(metrics['lr']):.2e}")
+        if step % 10 == 0:
+            mgr.save(step, state)
+        if step == crash_at:
+            print(f"*** simulated crash at step {step} "
+                  f"(power loss: volatile state dropped) ***")
+            mgr.crash()
+            restored_step, state = mgr.restore(state)
+            print(f"*** recovered via log replay → resuming at step "
+                  f"{restored_step} ***")
+            step = restored_step
+            it = make_batch_iterator(ds, start_step=step)
+    dt = time.time() - t0
+    toks = args.steps * args.batch * args.seq
+    print(f"done in {dt:.1f}s ({toks/dt:.0f} tok/s on CPU); final loss "
+          f"{float(metrics['loss']):.4f} vs floor {ds.entropy_floor:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""repro — a tiered-persistence JAX training/serving framework.
+
+Implements "NVMM cache design: Logging vs. Paging" (Dulong et al., 2023) as a
+first-class subsystem of a multi-pod JAX LM framework: both of the paper's
+cache designs (NVPages / NVLog) back the framework's KV-cache offload and
+checkpoint/restart paths, and the paper's FIO study is reproduced in
+benchmarks/fio_bench.py.
+"""
+__version__ = "1.0.0"

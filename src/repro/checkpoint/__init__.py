@@ -1,0 +1,4 @@
+"""Checkpoint manager over the paper's two cache designs."""
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

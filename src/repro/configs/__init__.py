@@ -1,0 +1,52 @@
+"""Config registry: every assigned architecture + the paper's cache configs.
+
+Usage::
+
+    from repro.configs import get_config, REGISTRY
+    cfg = get_config("starcoder2-15b")          # full published config
+    cfg = get_config("starcoder2-15b-smoke")    # reduced smoke sibling
+"""
+from __future__ import annotations
+
+from repro.configs.base import (
+    ModelConfig, MoEConfig, MLAConfig, SSMConfig, HybridConfig,
+    FrontendConfig, InputShape,
+    TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K, ALL_SHAPES, SHAPES_BY_NAME,
+    applicable_shapes, skipped_shapes,
+)
+
+from repro.configs import (
+    starcoder2_15b, internlm2_1p8b, minicpm_2b, gemma_7b, arctic_480b,
+    deepseek_v2_236b, seamless_m4t_large_v2, mamba2_1p3b, zamba2_1p2b,
+    llava_next_mistral_7b,
+)
+
+_MODULES = [
+    starcoder2_15b, internlm2_1p8b, minicpm_2b, gemma_7b, arctic_480b,
+    deepseek_v2_236b, seamless_m4t_large_v2, mamba2_1p3b, zamba2_1p2b,
+    llava_next_mistral_7b,
+]
+
+REGISTRY: dict[str, ModelConfig] = {}
+for _m in _MODULES:
+    _cfg = _m.CONFIG
+    REGISTRY[_cfg.name] = _cfg
+    REGISTRY[_cfg.name + "-smoke"] = _cfg.reduced()
+
+ARCH_IDS = [m.CONFIG.name for m in _MODULES]
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(REGISTRY)}") from None
+
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "HybridConfig",
+    "FrontendConfig", "InputShape", "TRAIN_4K", "PREFILL_32K", "DECODE_32K",
+    "LONG_500K", "ALL_SHAPES", "SHAPES_BY_NAME", "applicable_shapes",
+    "skipped_shapes", "REGISTRY", "ARCH_IDS", "get_config",
+]

@@ -1,0 +1,11 @@
+"""The paper's primary contribution: two NVMM cache designs (paging vs
+logging) as one library, plus their framework adapters (KV-cache tiering and
+checkpoint backends). See DESIGN.md §1-2."""
+from repro.core.api import NVCacheFS, ENGINES
+from repro.core.clock import SimClock
+from repro.core.disk import Disk, PAGE_SIZE
+from repro.core.nvlog import NVLog
+from repro.core.nvpages import NVPages
+
+__all__ = ["NVCacheFS", "ENGINES", "SimClock", "Disk", "PAGE_SIZE", "NVLog",
+           "NVPages"]

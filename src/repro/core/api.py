@@ -1,0 +1,169 @@
+"""POSIX-like shared-library surface of both caches (paper §II).
+
+``NVCacheFS`` provides open/pread/pwrite/fsync/close over one of four
+engines:
+
+* ``nvpages``      — the paging design (repro.core.nvpages)
+* ``nvlog``        — the logging design (repro.core.nvlog)
+* ``psync``        — the paper's FIO reference: plain LPC, **no** persistence
+* ``psync_fsync``  — psync + fsync after every pwrite (the >1 h configuration)
+
+A flag in NVMM is set to 1 on load and 0 on clean unload; if a crashed image
+is re-opened with flag==1, ``recover()`` flushes every pending modification
+to disk before serving IO (paper §II).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.clock import SimClock
+from repro.core.disk import Disk, PAGE_SIZE
+from repro.core.nvlog import NVLog
+from repro.core.nvpages import NVPages
+
+ENGINES = ("nvpages", "nvlog", "psync", "psync_fsync")
+
+# one open file occupies a 2^36-byte offset namespace inside the cache
+_FILE_SPAN_BITS = 36
+
+
+@dataclass
+class _OpenFile:
+    fd: int
+    path: str
+    base: int          # byte offset namespace start
+
+
+class NVCacheFS:
+    def __init__(self, engine: str = "nvlog", *, nvmm_bytes: int = 2 << 30,
+                 dram_cache_bytes: int = 2 << 30,
+                 lpc_capacity_pages: Optional[int] = None,
+                 o_direct: bool = False, shards: int = 1,
+                 drain_batch: int = 64, clock: Optional[SimClock] = None):
+        assert engine in ENGINES, engine
+        self.engine = engine
+        self.clock = clock or SimClock()
+        self.disk = Disk(self.clock, lpc_capacity_pages)
+        self.cache: Optional[object] = None
+        if engine == "nvpages":
+            self.cache = NVPages(nvmm_bytes, self.disk, self.clock,
+                                 o_direct=o_direct, shards=shards)
+        elif engine == "nvlog":
+            self.cache = NVLog(nvmm_bytes, self.disk, self.clock,
+                               dram_cache_bytes=dram_cache_bytes,
+                               drain_batch=drain_batch, log_shards=shards)
+        # persistent NVMM mount flag (paper: 1 while loaded, 0 after unload)
+        self.nvmm_flag = 1 if self.cache is not None else 0
+        self._files: dict[int, _OpenFile] = {}
+        self._paths: dict[str, int] = {}
+        self._next_fd = 3
+        self._next_slot = 0
+        self.crashed = False
+
+    # ----------------------------------------------------------------- files
+    def open(self, path: str) -> int:
+        if path in self._paths:
+            slot = self._paths[path]
+        else:
+            slot = self._next_slot
+            self._next_slot += 1
+            self._paths[path] = slot
+        fd = self._next_fd
+        self._next_fd += 1
+        self._files[fd] = _OpenFile(fd, path, slot << _FILE_SPAN_BITS)
+        return fd
+
+    def _abs(self, fd: int, offset: int) -> int:
+        f = self._files[fd]
+        assert 0 <= offset < (1 << _FILE_SPAN_BITS), "offset out of file span"
+        return f.base + offset
+
+    # -------------------------------------------------------------------- IO
+    def pwrite(self, fd: int, data: bytes, offset: int) -> int:
+        assert not self.crashed, "fs crashed; call recover_image()"
+        pos = self._abs(fd, offset)
+        if self.cache is not None:
+            return self.cache.pwrite(pos, data)
+        # psync engines: through the LPC
+        done = 0
+        while done < len(data):
+            pno = (pos + done) // PAGE_SIZE
+            in_page = (pos + done) % PAGE_SIZE
+            n = min(PAGE_SIZE - in_page, len(data) - done)
+            if in_page == 0 and n == PAGE_SIZE:
+                self.disk.write_page_lpc(pno, data[done:done + n])
+            else:
+                page = bytearray(self.disk.read_page(pno))
+                page[in_page:in_page + n] = data[done:done + n]
+                self.disk.write_page_lpc(pno, bytes(page))
+            done += n
+        if self.engine == "psync_fsync":
+            self.disk.fsync()
+        return len(data)
+
+    def pread(self, fd: int, n: int, offset: int) -> bytes:
+        assert not self.crashed
+        pos = self._abs(fd, offset)
+        if self.cache is not None:
+            return self.cache.pread(pos, n)
+        out = bytearray()
+        done = 0
+        while done < n:
+            pno = (pos + done) // PAGE_SIZE
+            in_page = (pos + done) % PAGE_SIZE
+            take = min(PAGE_SIZE - in_page, n - done)
+            out += self.disk.read_page(pno)[in_page:in_page + take]
+            done += take
+        return bytes(out)
+
+    def fsync(self, fd: int) -> None:
+        assert not self.crashed
+        if self.cache is not None:
+            self.cache.fsync()          # no-op: already durable (paper §III)
+        else:
+            self.disk.fsync()
+
+    def close(self, fd: int) -> None:
+        self._files.pop(fd, None)
+
+    def unload(self) -> None:
+        """Clean shutdown: drain/flush everything, clear the NVMM flag."""
+        if isinstance(self.cache, NVLog):
+            self.cache.drain_all()
+        elif isinstance(self.cache, NVPages):
+            self.cache.flush_all()
+        else:
+            self.disk.fsync()
+        self.nvmm_flag = 0
+
+    # -------------------------------------------------------- crash / recovery
+    def crash(self) -> None:
+        """Simulated power loss. Volatile state is dropped; NVMM + SSD
+        survive. The NVMM flag stays 1 → recovery required."""
+        self.crashed = True
+        if self.cache is not None:
+            self.cache.crash()
+        else:
+            self.disk.crash()
+
+    def recover(self) -> float:
+        """Run the paper's recovery procedure; returns simulated seconds."""
+        t0 = self.clock.now
+        if self.nvmm_flag == 1 and self.cache is not None:
+            self.cache.recover()
+        self.nvmm_flag = 1
+        self.crashed = False
+        return self.clock.now - t0
+
+    # ------------------------------------------------------------------ stats
+    @property
+    def simulated_time(self) -> float:
+        return self.clock.now
+
+    def stats(self) -> dict:
+        s = {"engine": self.engine, "sim_time_s": self.clock.now,
+             "tallies": dict(self.clock.tallies)}
+        if self.cache is not None:
+            s.update(self.cache.stats)
+        return s

@@ -1,0 +1,67 @@
+"""Simulated-time accounting for the tiered cache (DESIGN.md §2).
+
+All data movement in ``repro.core`` is functionally real (real bytes move);
+*time* is modeled, because the container has neither Optane nor a TPU host
+fabric. Costs come from the calibrated tier specs in ``repro.roofline.hw``.
+
+Two actors share the simulation: the foreground application thread and the
+background drainer. The drainer is modeled as a single-server queue whose
+entry finish-times are computed analytically (arrival/service), so foreground
+stalls (log full) and crash cut-offs (which entries are durable at time t)
+are exact functions of simulated time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.roofline.hw import TierSpec
+
+
+@dataclass
+class SimClock:
+    now: float = 0.0
+    # accounting by (tier, op) for reporting read/write amplification
+    tallies: dict = field(default_factory=dict)
+
+    def charge(self, tier: TierSpec, op: str, nbytes: int,
+               random_access: bool = True, advance: bool = True) -> float:
+        """Account one IO. Returns the cost in seconds."""
+        if op == "read":
+            bw = tier.rand_read_bw if random_access else tier.read_bw
+            lat = tier.read_latency
+        else:
+            bw = tier.rand_write_bw if random_access else tier.write_bw
+            lat = tier.write_latency
+        cost = lat + nbytes / bw
+        key = (tier.name, op)
+        cnt, tot = self.tallies.get(key, (0, 0))
+        self.tallies[key] = (cnt + 1, tot + nbytes)
+        if advance:
+            self.now += cost
+        return cost
+
+    def advance(self, seconds: float) -> None:
+        self.now += seconds
+
+    def wait_until(self, t: float) -> None:
+        if t > self.now:
+            self.now = t
+
+    def bytes_moved(self, tier_name: str, op: str) -> int:
+        return self.tallies.get((tier_name, op), (0, 0))[1]
+
+
+@dataclass
+class DrainQueue:
+    """Analytic single-server queue for the background drainer.
+
+    ``push`` registers a unit of drain work arriving at time ``t`` with
+    service time ``svc``; returns the finish time. Entries finish in FIFO
+    order: finish_i = max(arrival_i, finish_{i-1}) + svc_i.
+    """
+    last_finish: float = 0.0
+
+    def push(self, arrival: float, service: float) -> float:
+        start = max(arrival, self.last_finish)
+        self.last_finish = start + service
+        return self.last_finish

@@ -1,0 +1,128 @@
+"""Backing store: SSD contents + a Linux-page-cache (LPC) model in DRAM.
+
+Functionally real: SSD content is a dict of 4 KiB pages; the LPC is a
+write-back DRAM cache over it. The psync FIO baseline in the paper *is* the
+LPC — no persistence until fsync. ``crash()`` drops the LPC (volatile),
+keeping only fsync'd SSD content.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.clock import SimClock
+from repro.core.lru import LRUList
+from repro.roofline.hw import DRAM, SSD, SSD_FSYNC_LATENCY
+
+PAGE_SIZE = 4096
+_ZERO_PAGE = bytes(PAGE_SIZE)
+
+
+class Disk:
+    def __init__(self, clock: SimClock, lpc_capacity_pages: Optional[int] = None):
+        self.clock = clock
+        self.ssd: dict[int, bytes] = {}
+        self.lpc: dict[int, bytearray] = {}
+        self.lpc_dirty: set[int] = set()
+        self.lpc_lru = LRUList()
+        self.lpc_capacity = lpc_capacity_pages   # None = unbounded
+
+    # -- internals ------------------------------------------------------------
+    def _lpc_insert(self, pno: int, data: bytearray, dirty: bool) -> None:
+        if (self.lpc_capacity is not None and pno not in self.lpc
+                and len(self.lpc) >= self.lpc_capacity):
+            victim = None
+            for cand in self.lpc_lru.lru_order():
+                victim = cand
+                break
+            if victim is not None:
+                if victim in self.lpc_dirty:
+                    self._writeback(victim)
+                self.lpc.pop(victim, None)
+                self.lpc_lru.remove(victim)
+        self.lpc[pno] = data
+        self.lpc_lru.touch(pno)
+        if dirty:
+            self.lpc_dirty.add(pno)
+
+    def _writeback(self, pno: int) -> None:
+        self.clock.charge(SSD, "write", PAGE_SIZE, random_access=True)
+        self.ssd[pno] = bytes(self.lpc[pno])
+        self.lpc_dirty.discard(pno)
+
+    # -- public ----------------------------------------------------------------
+    def read_page(self, pno: int, bypass_lpc: bool = False) -> bytes:
+        """Read a page; charges DRAM (LPC hit) or SSD (miss) time."""
+        if not bypass_lpc and pno in self.lpc:
+            self.clock.charge(DRAM, "read", PAGE_SIZE)
+            self.lpc_lru.touch(pno)
+            return bytes(self.lpc[pno])
+        self.clock.charge(SSD, "read", PAGE_SIZE, random_access=True)
+        data = self.ssd.get(pno, _ZERO_PAGE)
+        if not bypass_lpc:
+            self.clock.charge(DRAM, "write", PAGE_SIZE)
+            self._lpc_insert(pno, bytearray(data), dirty=False)
+        return bytes(data)
+
+    def write_page_lpc(self, pno: int, data: bytes) -> None:
+        """Buffered write into the LPC (no persistence until fsync)."""
+        self.clock.charge(DRAM, "write", len(data))
+        page = self.lpc.get(pno)
+        if page is None:
+            if len(data) < PAGE_SIZE and pno in self.ssd:
+                # read-modify-write of a partially-overwritten page
+                self.clock.charge(SSD, "read", PAGE_SIZE, random_access=True)
+                page = bytearray(self.ssd[pno])
+            else:
+                page = bytearray(PAGE_SIZE)
+            self._lpc_insert(pno, page, dirty=True)
+        else:
+            self.lpc_lru.touch(pno)
+            self.lpc_dirty.add(pno)
+        page[:len(data)] = data
+
+    def write_page_through(self, pno: int, data: bytes) -> None:
+        """Durable writeback that keeps a clean LPC copy (cache eviction
+        path: the page must be durable before its NVMM copy is dropped, but
+        readers should still find it at DRAM speed)."""
+        assert len(data) == PAGE_SIZE
+        self.clock.charge(SSD, "write", PAGE_SIZE, random_access=True)
+        self.ssd[pno] = bytes(data)
+        self.clock.charge(DRAM, "write", PAGE_SIZE)
+        self._lpc_insert(pno, bytearray(data), dirty=False)
+
+    def write_page_direct(self, pno: int, data: bytes) -> None:
+        """O_DIRECT-style write: straight to SSD, invalidating the LPC copy."""
+        assert len(data) == PAGE_SIZE
+        self.clock.charge(SSD, "write", PAGE_SIZE, random_access=True)
+        self.ssd[pno] = bytes(data)
+        self.lpc.pop(pno, None)
+        self.lpc_dirty.discard(pno)
+        self.lpc_lru.remove(pno)
+
+    def fsync(self) -> None:
+        """Flush all dirty LPC pages to SSD + barrier latency."""
+        for pno in sorted(self.lpc_dirty):
+            self.clock.charge(SSD, "write", PAGE_SIZE, random_access=True)
+            self.ssd[pno] = bytes(self.lpc[pno])
+        self.lpc_dirty.clear()
+        self.clock.advance(SSD_FSYNC_LATENCY)
+
+    # -- crash semantics ---------------------------------------------------------
+    def crash(self) -> None:
+        """Power loss: the LPC (volatile DRAM) is gone; SSD content survives."""
+        self.lpc.clear()
+        self.lpc_dirty.clear()
+        self.lpc_lru = LRUList()
+
+    # -- silent ops (background drainer: time is charged analytically) -----------
+    def apply_silent(self, pno: int, offset_in_page: int, payload: bytes) -> None:
+        page = bytearray(self.ssd.get(pno, _ZERO_PAGE))
+        page[offset_in_page:offset_in_page + len(payload)] = payload
+        self.ssd[pno] = bytes(page)
+        # the drainer writes *through the LPC* (paper §II: NVLog uses the LPC
+        # as a read extension of its DRAM cache) — land a clean copy there
+        lpc_page = self.lpc.get(pno)
+        if lpc_page is not None:
+            lpc_page[offset_in_page:offset_in_page + len(payload)] = payload
+        else:
+            self._lpc_insert(pno, bytearray(page), dirty=False)

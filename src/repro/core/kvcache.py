@@ -1,0 +1,221 @@
+"""Tiered KV-cache for long-context serving: paged vs log (DESIGN.md §2a).
+
+The TPU translation of the paper's question. Tiers: HBM (fast, small) ↔ host
+DRAM over PCIe (big, bandwidth-asymmetric) ↔ disk (preempted sequences).
+
+* ``PagedKVCache``  (NVPages): fixed-size token pages live in a host pool; a
+  block table maps (seq, logical page) → physical page; an HBM LRU holds the
+  working set; appends go through a redo buffer then into the page (2×
+  write); misses DMA whole pages up. Attention over resident pages uses the
+  ``paged_attention`` Pallas kernel's block-table layout.
+* ``LogKVCache``  (NVLog): appends go to one sequential host log (1× write);
+  a per-sequence HBM hot-window holds the most recent tokens (the paper's
+  small DRAM cache); a background drainer compacts log segments into host
+  pages; cold reads patch pages from the log (``log_patch`` kernel layout).
+
+Data movement is real (numpy); PCIe/HBM timing is modeled via SimClock.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.clock import DrainQueue, SimClock
+from repro.core.lru import LRUList
+from repro.roofline.hw import TierSpec
+
+# PCIe gen4 x16-ish host link as seen from the device, and HBM for reference
+HOST_LINK = TierSpec("host", read_bw=16e9, write_bw=16e9,
+                     rand_read_bw=4e9, rand_write_bw=4e9,
+                     read_latency=5e-6, write_latency=5e-6)
+HBM = TierSpec("hbm", read_bw=819e9, write_bw=819e9,
+               rand_read_bw=400e9, rand_write_bw=400e9,
+               read_latency=1e-6, write_latency=1e-6)
+
+
+@dataclass
+class KVSpec:
+    num_layers: int
+    kv_heads: int
+    head_dim: int
+    page_tokens: int = 16
+    dtype: np.dtype = np.dtype(np.float16)
+
+    @property
+    def token_bytes(self) -> int:          # K+V for one token, one layer
+        return 2 * self.kv_heads * self.head_dim * self.dtype.itemsize
+
+    @property
+    def page_bytes(self) -> int:
+        return self.page_tokens * self.token_bytes
+
+    def empty_page(self) -> np.ndarray:
+        return np.zeros((2, self.page_tokens, self.kv_heads, self.head_dim),
+                        self.dtype)
+
+
+class PagedKVCache:
+    """NVPages design over (layer, seq) KV pages."""
+
+    def __init__(self, spec: KVSpec, clock: SimClock, *,
+                 hbm_budget_bytes: int):
+        self.spec = spec
+        self.clock = clock
+        self.pool: dict[tuple, np.ndarray] = {}      # (layer, phys) → page
+        self.block_table: dict[int, list[int]] = {}  # seq → [phys per logical]
+        self.seq_len: dict[int, int] = {}
+        self.hbm_lru = LRUList()                     # (layer, phys) resident
+        self.hbm_capacity = max(hbm_budget_bytes // spec.page_bytes, 1)
+        self.next_phys = 0
+        self.stats = {"hbm_hits": 0, "hbm_misses": 0, "dma_up_bytes": 0,
+                      "host_writes": 0, "redo_bytes": 0}
+
+    def _ensure_resident(self, layer: int, phys: int) -> None:
+        key = (layer, phys)
+        if key in self.hbm_lru:
+            self.stats["hbm_hits"] += 1
+            self.hbm_lru.touch(key)
+            return
+        self.stats["hbm_misses"] += 1
+        if len(self.hbm_lru) >= self.hbm_capacity:
+            self.hbm_lru.pop_lru()                   # clean: host copy is truth
+        # DMA whole page up — the paper's miss-copy cost
+        self.clock.charge(HOST_LINK, "read", self.spec.page_bytes,
+                          random_access=True)
+        self.stats["dma_up_bytes"] += self.spec.page_bytes
+        self.hbm_lru.touch(key)
+
+    def append(self, seq: int, kv_token: np.ndarray) -> None:
+        """kv_token: (layers, 2, kv_heads, head_dim) — one decoded token."""
+        spec = self.spec
+        pos = self.seq_len.get(seq, 0)
+        logical = pos // spec.page_tokens
+        slot = pos % spec.page_tokens
+        table = self.block_table.setdefault(seq, [])
+        if logical >= len(table):
+            table.append(self.next_phys)
+            self.next_phys += 1
+            for layer in range(spec.num_layers):
+                self.pool[(layer, table[logical])] = spec.empty_page()
+        phys = table[logical]
+        for layer in range(spec.num_layers):
+            # redo-buffer write then page write: the paging design's 2× write
+            self.clock.charge(HOST_LINK, "write", spec.token_bytes,
+                              random_access=False)           # redo append
+            self.stats["redo_bytes"] += spec.token_bytes
+            self.clock.charge(HOST_LINK, "write", spec.token_bytes,
+                              random_access=True)            # into the page
+            self.stats["host_writes"] += 1
+            self.pool[(layer, phys)][:, slot] = kv_token[layer]
+        self.seq_len[seq] = pos + 1
+
+    def gather(self, seq: int, layer: int) -> np.ndarray:
+        """Materialize (2, T, kv_heads, head_dim) for attention; pages are
+        DMA'd to HBM on miss (block-table indirection)."""
+        spec = self.spec
+        T = self.seq_len.get(seq, 0)
+        out = np.zeros((2, T, spec.kv_heads, spec.head_dim), spec.dtype)
+        for logical, phys in enumerate(self.block_table.get(seq, [])):
+            self._ensure_resident(layer, phys)
+            lo = logical * spec.page_tokens
+            hi = min(lo + spec.page_tokens, T)
+            if lo >= T:
+                break
+            page = self.pool[(layer, phys)]
+            out[:, lo:hi] = page[:, :hi - lo]
+            self.clock.charge(HBM, "read", (hi - lo) * spec.token_bytes)
+        return out
+
+
+class LogKVCache:
+    """NVLog design: sequential host log + HBM hot window + drain/compact."""
+
+    def __init__(self, spec: KVSpec, clock: SimClock, *,
+                 hot_window_tokens: int = 256, drain_batch: int = 32):
+        self.spec = spec
+        self.clock = clock
+        self.hot_window = hot_window_tokens
+        self.drain_batch = drain_batch
+        self.queue = DrainQueue()
+        # the sequential log: list of (seq, pos, kv_token) + drain finish time
+        self.log: deque = deque()
+        # compacted host pages: (seq, layer, logical) → page
+        self.pages: dict[tuple, np.ndarray] = {}
+        # per-sequence HBM hot window (most recent tokens, all layers)
+        self.hot: dict[int, deque] = {}
+        self.seq_len: dict[int, int] = {}
+        self.stats = {"log_appends": 0, "patches": 0, "hot_hits": 0,
+                      "host_reads": 0, "drained": 0}
+
+    def _drain_service(self) -> float:
+        b = self.spec.token_bytes * self.spec.num_layers
+        return HOST_LINK.write_latency / self.drain_batch + b / HOST_LINK.write_bw
+
+    def _advance(self, now: float) -> None:
+        spec = self.spec
+        while self.log and self.log[0][3] <= now:
+            seq, pos, kv_token, _ = self.log.popleft()
+            logical, slot = divmod(pos, spec.page_tokens)
+            for layer in range(spec.num_layers):
+                key = (seq, layer, logical)
+                page = self.pages.get(key)
+                if page is None:
+                    page = spec.empty_page()
+                    self.pages[key] = page
+                page[:, slot] = kv_token[layer]
+            self.stats["drained"] += 1
+
+    def append(self, seq: int, kv_token: np.ndarray) -> None:
+        spec = self.spec
+        pos = self.seq_len.get(seq, 0)
+        nbytes = spec.token_bytes * spec.num_layers
+        # one sequential log write — the logging design's 1× write
+        self.clock.charge(HOST_LINK, "write", nbytes, random_access=False)
+        finish = self.queue.push(self.clock.now, self._drain_service())
+        self.log.append((seq, pos, kv_token.copy(), finish))
+        self.stats["log_appends"] += 1
+        hot = self.hot.setdefault(seq, deque(maxlen=self.hot_window))
+        hot.append((pos, kv_token.copy()))
+        self.seq_len[seq] = pos + 1
+        self._advance(self.clock.now)
+
+    def gather(self, seq: int, layer: int) -> np.ndarray:
+        """(2, T, kv_heads, head_dim): hot window from HBM; cold history from
+        compacted pages, patched from the log where the drainer hasn't
+        caught up (the log_patch kernel's layout)."""
+        spec = self.spec
+        self._advance(self.clock.now)
+        T = self.seq_len.get(seq, 0)
+        out = np.zeros((2, T, spec.kv_heads, spec.head_dim), spec.dtype)
+        hot = self.hot.get(seq, ())
+        hot_positions = set()
+        for pos, kv_token in hot:
+            out[:, pos] = kv_token[layer]
+            hot_positions.add(pos)
+        if hot_positions:
+            self.stats["hot_hits"] += len(hot_positions)
+            self.clock.charge(
+                HBM, "read", len(hot_positions) * spec.token_bytes)
+        cold_T = min(T, min(hot_positions) if hot_positions else T)
+        npages = -(-cold_T // spec.page_tokens) if cold_T else 0
+        for logical in range(npages):
+            lo = logical * spec.page_tokens
+            hi = min(lo + spec.page_tokens, cold_T)
+            page = self.pages.get((seq, layer, logical))
+            if page is not None:
+                out[:, lo:hi] = page[:, :hi - lo]
+            self.clock.charge(HOST_LINK, "read",
+                              (hi - lo) * spec.token_bytes,
+                              random_access=False)
+            self.stats["host_reads"] += 1
+        # patch undrained entries overlapping the cold range
+        for seq_i, pos, kv_token, _ in self.log:
+            if seq_i == seq and pos < cold_T and pos not in hot_positions:
+                out[:, pos] = kv_token[layer]
+                self.clock.charge(HOST_LINK, "read", spec.token_bytes,
+                                  random_access=True)
+                self.stats["patches"] += 1
+        return out

@@ -1,0 +1,76 @@
+"""4-level 256-ary radix tree: page number → metadata (NVPages' volatile index).
+
+Mirrors the paper's "radix tree in volatile memory [that] looks for a volatile
+metadata structure that contains a pointer to the non-volatile page".
+"""
+from __future__ import annotations
+
+from typing import Any, Iterator, Optional
+
+_LEVELS = 4
+_FANOUT = 256
+_SHIFTS = [(8 * (_LEVELS - 1 - i)) for i in range(_LEVELS)]   # 24,16,8,0
+_MAX_KEY = _FANOUT ** _LEVELS
+
+
+class RadixTree:
+    __slots__ = ("_root", "_count")
+
+    def __init__(self):
+        self._root: list = [None] * _FANOUT
+        self._count = 0
+
+    def _indices(self, key: int):
+        if not (0 <= key < _MAX_KEY):
+            raise KeyError(f"key {key} out of radix range")
+        return [(key >> s) & 0xFF for s in _SHIFTS]
+
+    def lookup(self, key: int) -> Optional[Any]:
+        node = self._root
+        for ix in self._indices(key):
+            node = node[ix]
+            if node is None:
+                return None
+        return node
+
+    def insert(self, key: int, value: Any) -> None:
+        idx = self._indices(key)
+        node = self._root
+        for ix in idx[:-1]:
+            nxt = node[ix]
+            if nxt is None:
+                nxt = [None] * _FANOUT
+                node[ix] = nxt
+            node = nxt
+        if node[idx[-1]] is None:
+            self._count += 1
+        node[idx[-1]] = value
+
+    def delete(self, key: int) -> None:
+        idx = self._indices(key)
+        node = self._root
+        path = []
+        for ix in idx[:-1]:
+            nxt = node[ix]
+            if nxt is None:
+                return
+            path.append((node, ix))
+            node = nxt
+        if node[idx[-1]] is not None:
+            node[idx[-1]] = None
+            self._count -= 1
+
+    def __len__(self) -> int:
+        return self._count
+
+    def items(self) -> Iterator[tuple[int, Any]]:
+        def walk(node, prefix, level):
+            for ix, child in enumerate(node):
+                if child is None:
+                    continue
+                key = prefix | (ix << _SHIFTS[level])
+                if level == _LEVELS - 1:
+                    yield key, child
+                else:
+                    yield from walk(child, key, level + 1)
+        yield from walk(self._root, 0, 0)

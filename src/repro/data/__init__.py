@@ -1,0 +1,4 @@
+"""Deterministic synthetic LM data pipeline (sharded, restart-stable)."""
+from repro.data.synthetic import SyntheticLMDataset, make_batch_iterator
+
+__all__ = ["SyntheticLMDataset", "make_batch_iterator"]

@@ -1,0 +1,7 @@
+"""Distribution layer: mesh axes, logical sharding rules, ZeRO-1 state
+sharding, gradient compression. See DESIGN.md §5."""
+from repro.distributed.sharding import (
+    batch_specs, cache_specs, data_axes, param_specs, zero1_specs)
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "zero1_specs",
+           "data_axes"]

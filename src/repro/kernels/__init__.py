@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the framework's compute hot-spots (DESIGN.md §2a):
+
+* flash_attention — chunked online-softmax attention (train/prefill)
+* paged_attention — decode attention over a paged KV pool with block-table
+  indirection (the paging design's on-device read path)
+* log_patch       — apply KV log records to page-shaped buffers (the logging
+  design's on-device drain/patch path)
+
+Each package has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper + XLA fallback) and ref.py (pure-jnp oracle). Kernels are validated
+in interpret mode on CPU; the TPU path is selected automatically on TPU
+backends.
+"""
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.log_patch.ops import log_patch
+
+__all__ = ["flash_attention", "paged_attention", "log_patch"]

@@ -1,0 +1,126 @@
+"""Flash attention Pallas TPU kernel (GQA-aware, causal-block skipping).
+
+Grid: (B, H, num_q_blocks, num_kv_blocks) — the kv axis is innermost and
+sequential on TPU, so the online-softmax state lives in VMEM scratch across
+kv iterations. Block shapes are MXU-aligned (q/kv block 128(+) × head_dim).
+Causal runs still visit every block but fully-masked blocks early-out with
+``pl.when`` (no MXU work issued).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               scale: float, causal: bool, block_q: int, block_k: int,
+               kv_len: int, q_offset: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    last_k = pl.num_programs(3) - 1
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * block_q + q_offset      # query positions in kv coordinates
+    k_start = ik * block_k
+    # a block is live unless causal and strictly above the diagonal band
+    live = jnp.logical_or(not causal, k_start <= q_start + block_q - 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)            # (bq, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)            # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (block_q, block_k), 0)
+            k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (block_q, block_k), 1)
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        # mask kv padding (when kv_len % block_k != 0)
+        k_idx = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+        s = jnp.where(k_idx < kv_len, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == last_k)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           scale: float | None = None, block_q: int = 128,
+                           block_k: int = 128, interpret: bool = False):
+    """q: (B, Sq, H, D); k, v: (B, Skv, K, D), H = K*G. Returns (B, Sq, H, D).
+
+    Causal convention matches the oracle: queries are the *last* Sq positions
+    of the Skv keys (q_offset = Skv - Sq), the standard decode/prefill-
+    continuation alignment.
+    """
+    B, Sq, H, D = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    q_offset = Skv - Sq
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    # pad sequence dims to block multiples
+    pq = (-Sq) % block_q
+    pk = (-Skv) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq = q.shape[1] // block_q
+    nk = k.shape[1] // block_k
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, kv_len=Skv, q_offset=q_offset)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D),
+                         lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, block_k, 1, D),
+                         lambda b, h, i, j: (b, j, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, D),
+                               lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    if pq:
+        out = out[:, :Sq]
+    return out

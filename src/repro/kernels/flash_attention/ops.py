@@ -1,0 +1,30 @@
+"""jit'd public wrapper: Pallas on TPU (or interpret for validation), XLA
+chunked fallback elsewhere."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "scale", "block_q", "block_k",
+                                   "force_pallas"))
+def flash_attention(q, k, v, *, causal: bool = True, scale=None,
+                    block_q: int = 128, block_k: int = 128,
+                    force_pallas: bool = False):
+    """Flash attention: q (B,Sq,H,D), k/v (B,Skv,K,D) → (B,Sq,H,D)."""
+    if _on_tpu():
+        return flash_attention_pallas(q, k, v, causal=causal, scale=scale,
+                                      block_q=block_q, block_k=block_k)
+    if force_pallas:
+        return flash_attention_pallas(q, k, v, causal=causal, scale=scale,
+                                      block_q=block_q, block_k=block_k,
+                                      interpret=True)
+    return flash_attention_ref(q, k, v, causal=causal, scale=scale)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for flash_attention (GQA, optional causal)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        scale: float | None = None):
+    """q: (B, Sq, H, D); k, v: (B, Skv, K, D) with H = K*G. Returns like q."""
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(B, Sq, K, G, D).astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32)) * scale
+    if causal:
+        Skv = k.shape[1]
+        q_pos = jnp.arange(Sq)[:, None] + (Skv - Sq)
+        allow = jnp.arange(Skv)[None, :] <= q_pos
+        s = jnp.where(allow[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)

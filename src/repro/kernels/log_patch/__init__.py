@@ -1,0 +1,3 @@
+from repro.kernels.log_patch.ops import log_patch
+
+__all__ = ["log_patch"]

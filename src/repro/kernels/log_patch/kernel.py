@@ -1,0 +1,75 @@
+"""log_patch Pallas TPU kernel: apply KV-log records to page buffers.
+
+The logging design's on-device drain/patch path (DESIGN.md §2a): a batch of
+log records (token-granular KV vectors with (page, slot) targets) is
+scattered into the page pool. The record index drives a scalar-prefetched
+page lookup, one grid step per record; TPU grid iteration is sequential, so
+records apply in log order (later records win — replay semantics).
+
+The page block is copied through VMEM (read-modify-write of one page per
+record); on TPU consecutive records hitting the same page keep the block
+resident, which is exactly the sequential-locality the log layout provides.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lp_kernel(page_idx_ref, slot_idx_ref, valid_ref, pool_ref, rec_ref,
+               o_ref, *, num_records: int):
+    p = pl.program_id(0)
+    # each grid step owns one page: copy it through VMEM once...
+    o_ref[...] = pool_ref[...]
+
+    # ...then apply every record targeting it, in log order (later wins)
+    def body(n, _):
+        slot = slot_idx_ref[n]
+        match = jnp.logical_and(page_idx_ref[n] == p, valid_ref[n] != 0)
+
+        @pl.when(match)
+        def _apply():
+            o_ref[0, pl.ds(slot, 1), :] = rec_ref[pl.ds(n, 1), :].astype(
+                o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, num_records, body, 0)
+
+
+def log_patch_pallas(pool, payloads, page_idx, slot_idx, valid=None, *,
+                     interpret: bool = False):
+    """pool: (P, T, C); payloads: (N, C); page/slot_idx: (N,). → patched pool.
+
+    Grid is over *pages* (each visited exactly once — clean write set,
+    no aliasing hazards); the in-kernel loop scans the record batch, which is
+    resident in VMEM (drain batches are ≤ a few hundred records).
+    """
+    P, T, C = pool.shape
+    N = payloads.shape[0]
+    if valid is None:
+        valid = jnp.ones((N,), jnp.int32)
+    else:
+        valid = valid.astype(jnp.int32)
+    page_idx = jnp.clip(page_idx, 0, P - 1).astype(jnp.int32)
+    slot_idx = jnp.clip(slot_idx, 0, T - 1).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(P,),
+        in_specs=[
+            pl.BlockSpec((1, T, C), lambda p, pg, sl, vd: (p, 0, 0)),
+            pl.BlockSpec((N, C), lambda p, pg, sl, vd: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, T, C), lambda p, pg, sl, vd: (p, 0, 0)),
+    )
+    kernel = functools.partial(_lp_kernel, num_records=N)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        interpret=interpret,
+    )(page_idx, slot_idx, valid, pool, payloads)

@@ -1,0 +1,21 @@
+"""jit'd public wrapper for log_patch."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.log_patch.kernel import log_patch_pallas
+from repro.kernels.log_patch.ref import log_patch_ref
+
+
+@partial(jax.jit, static_argnames=("force_pallas",), )
+def log_patch(pool, payloads, page_idx, slot_idx, valid=None, *,
+              force_pallas: bool = False):
+    """Apply KV log records onto page buffers (see kernel.py)."""
+    if jax.default_backend() == "tpu":
+        return log_patch_pallas(pool, payloads, page_idx, slot_idx, valid)
+    if force_pallas:
+        return log_patch_pallas(pool, payloads, page_idx, slot_idx, valid,
+                                interpret=True)
+    return log_patch_ref(pool, payloads, page_idx, slot_idx, valid)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for log_patch: replay KV log records onto pages in order."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def log_patch_ref(pool, payloads, page_idx, slot_idx, valid=None):
+    """Apply records in sequence order (later records win).
+
+    pool:     (P, T, C)
+    payloads: (N, C)
+    page_idx: (N,) int32;  slot_idx: (N,) int32;  valid: (N,) bool
+    Returns the patched pool.
+    """
+    if valid is None:
+        valid = jnp.ones(payloads.shape[:1], bool)
+    # sequential-order scatter: .at[] with duplicate indices applies in order
+    # only for some modes; enforce by masking earlier duplicates
+    N = payloads.shape[0]
+
+    def body(pool, i):
+        p = pool.at[page_idx[i], slot_idx[i]].set(
+            jnp.where(valid[i], payloads[i].astype(pool.dtype),
+                      pool[page_idx[i], slot_idx[i]]))
+        return p, None
+    import jax
+    pool, _ = jax.lax.scan(body, pool, jnp.arange(N))
+    return pool

@@ -1,0 +1,106 @@
+"""Paged decode-attention Pallas TPU kernel.
+
+The paging design's on-device read path (DESIGN.md §2a): the KV cache lives
+as fixed-size token pages in a physical pool; the block table is
+scalar-prefetched (SMEM) and drives the BlockSpec index maps, so each grid
+step DMAs exactly one page of K and V into VMEM — block-table indirection
+*inside* the kernel, the TPU analogue of NVPages' radix-tree → page pointer
+walk.
+
+Grid: (B, K, max_pages); online-softmax state in VMEM scratch across the
+page axis. Pages past ``lengths[b]`` are skipped with ``pl.when`` (no DMA
+cost on TPU since their index maps clamp to page 0 and the body is skipped).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _pa_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+               m_ref, l_ref, acc_ref, *, scale: float, page_tokens: int):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    last_p = pl.num_programs(2) - 1
+    length = len_ref[b]
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    live = (p * page_tokens) < length
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (T, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)            # (T, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = p * page_tokens + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)              # (G, T)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        pr = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(pr, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            pr, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(p == last_p)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q, pool_k, pool_v, block_table, lengths, *,
+                           scale: float | None = None,
+                           interpret: bool = False):
+    """q: (B,H,D); pool_k/v: (P,T,K,D); block_table: (B,MP); lengths: (B,)."""
+    B, H, D = q.shape
+    P, T, K, _ = pool_k.shape
+    MP = block_table.shape[1]
+    G = H // K
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(B, K, G, D)
+    # clamp table so dead pages have a valid physical index (skipped anyway)
+    table = jnp.clip(block_table, 0, P - 1).astype(jnp.int32)
+
+    kernel = functools.partial(_pa_kernel, scale=scale, page_tokens=T)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, MP),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, k, p, tbl, ln: (b, k, 0, 0)),
+            pl.BlockSpec((1, T, 1, D),
+                         lambda b, k, p, tbl, ln: (tbl[b, p], 0, k, 0)),
+            pl.BlockSpec((1, T, 1, D),
+                         lambda b, k, p, tbl, ln: (tbl[b, p], 0, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, k, p, tbl, ln: (b, k, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
+        interpret=interpret,
+    )(table, lengths.astype(jnp.int32), qg, pool_k, pool_v)
+    return out.reshape(B, H, D)

@@ -1,0 +1,23 @@
+"""jit'd public wrapper for paged decode attention."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention_pallas
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+@partial(jax.jit, static_argnames=("scale", "force_pallas"))
+def paged_attention(q, pool_k, pool_v, block_table, lengths, *, scale=None,
+                    force_pallas: bool = False):
+    """Decode attention over a paged KV pool (see kernel.py)."""
+    if jax.default_backend() == "tpu":
+        return paged_attention_pallas(q, pool_k, pool_v, block_table, lengths,
+                                      scale=scale)
+    if force_pallas:
+        return paged_attention_pallas(q, pool_k, pool_v, block_table, lengths,
+                                      scale=scale, interpret=True)
+    return paged_attention_ref(q, pool_k, pool_v, block_table, lengths,
+                               scale=scale)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for paged decode attention (block-table indirection)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, pool_k, pool_v, block_table, lengths, *,
+                        scale: float | None = None):
+    """Decode attention over a paged KV pool.
+
+    q:           (B, H, D)           one query token per sequence
+    pool_k/v:    (P, T, K, D)        physical pages of T tokens
+    block_table: (B, MaxPages) int32 logical→physical page mapping
+    lengths:     (B,) int32          tokens valid per sequence
+    Returns (B, H, D).
+    """
+    B, H, D = q.shape
+    P, T, K, _ = pool_k.shape
+    G = H // K
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    # gather logical KV: (B, MaxPages*T, K, D)
+    k = pool_k[block_table].reshape(B, -1, K, D)
+    v = pool_v[block_table].reshape(B, -1, K, D)
+    S = k.shape[1]
+    qg = q.reshape(B, K, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32)) * scale
+    valid = jnp.arange(S)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,34 @@
+"""Production mesh builders (DESIGN.md §5).
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state). Single pod: (16, 16) = 256 v5e chips, axes (data, model).
+Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model); ``pod`` is the
+outermost gradient-parallel axis (DCN-connected in a real deployment).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    override = os.environ.get("REPRO_TEST_MESH")      # e.g. "2x2" or "2x2x2"
+    if override:
+        dims = tuple(int(x) for x in override.split("x"))
+        shape = dims
+        axes = ("pod", "data", "model")[-len(dims):]
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CI-scale sharding tests (host devices)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def required_devices(multi_pod: bool) -> int:
+    return 512 if multi_pod else 256

@@ -1,0 +1,119 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` → batch spec dict; ``abstract_state`` /
+``abstract_cache`` derive parameter/cache shapes via jax.eval_shape so the
+dry-run lowers exactly what the runtime executes.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.distributed import (batch_specs, cache_specs, param_specs,
+                               zero1_specs)
+from repro.training.optimizer import adamw_init
+from repro.training.step import TrainState
+
+ENC_FRAMES = 4096          # stub audio frontend length for enc-dec shapes
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, dtype=jnp.bfloat16,
+                microbatches: int = 1) -> dict:
+    """ShapeDtypeStructs for one batch of this (arch × input-shape) cell.
+
+    With microbatches > 1 (training), leaves are (mb, B/mb, ...) — the data
+    pipeline delivers this layout so grad-accumulation scans need no
+    resharding.
+    """
+    B, S = shape.global_batch, shape.seq_len
+
+    def tok(s):
+        if microbatches > 1:
+            s = (microbatches, s[0] // microbatches) + s[1:]
+        return jax.ShapeDtypeStruct(s, jnp.int32)
+
+    def emb(s):
+        if microbatches > 1:
+            s = (microbatches, s[0] // microbatches) + s[1:]
+        return jax.ShapeDtypeStruct(s, dtype)
+
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": tok((B, S)), "labels": tok((B, S))}
+    else:  # decode: one new token against an S-token cache
+        batch = {"tokens": tok((B, 1))}
+    if cfg.frontend.kind == "vision" and shape.kind != "decode":
+        batch["frontend_embeds"] = emb(
+            (B, cfg.frontend.num_tokens, cfg.frontend.d_frontend))
+    if cfg.family == "encdec" and shape.kind != "decode":
+        batch["frontend_embeds"] = emb((B, ENC_FRAMES, cfg.d_model))
+    return batch
+
+
+def prefill_batch_for_cache(cfg: ModelConfig, shape: InputShape,
+                            dtype=jnp.bfloat16) -> dict:
+    """The abstract prompt used to derive decode-cache shapes."""
+    B = shape.global_batch
+    prompt = min(128, shape.seq_len)
+    batch = {"tokens": jax.ShapeDtypeStruct((B, prompt), jnp.int32)}
+    if cfg.frontend.kind == "vision":
+        batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend.num_tokens, cfg.frontend.d_frontend), dtype)
+    if cfg.family == "encdec":
+        batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (B, ENC_FRAMES, cfg.d_model), dtype)
+    return batch
+
+
+def abstract_params(model) -> Any:
+    return jax.eval_shape(model.init, jax.random.key(0))
+
+
+def abstract_state(model, moment_dtype=jnp.float32) -> Any:
+    """TrainState shapes (params + AdamW state) without allocation."""
+    def mk(rng):
+        params = model.init(rng)
+        if model.compute_dtype == jnp.bfloat16:
+            params = jax.tree.map(
+                lambda a: a.astype(jnp.bfloat16)
+                if a.dtype == jnp.float32 else a, params)
+        return TrainState(params=params,
+                          opt_state=adamw_init(params, moment_dtype),
+                          step=jnp.zeros((), jnp.int32))
+    return jax.eval_shape(mk, jax.random.key(0))
+
+
+def abstract_cache(model, cfg, shape: InputShape, dtype=jnp.bfloat16) -> Any:
+    """Decode-cache shapes for this cell via eval_shape of prefill."""
+    batch = prefill_batch_for_cache(cfg, shape, dtype)
+    _, cache = jax.eval_shape(
+        lambda p, b: model.prefill(p, b, shape.seq_len),
+        abstract_params(model), batch)
+    return cache
+
+
+def with_shardings(shape_tree: Any, spec_tree: Any, mesh) -> Any:
+    """Attach NamedShardings to a ShapeDtypeStruct tree."""
+    def fn(s, spec):
+        return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(fn, shape_tree, spec_tree,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def state_specs(state_shape: Any, cfg, mesh) -> Any:
+    """PartitionSpecs for a TrainState."""
+    return TrainState(
+        params=param_specs(state_shape.params, cfg, mesh),
+        opt_state={
+            "mu": zero1_specs(state_shape.opt_state["mu"], cfg, mesh),
+            "nu": zero1_specs(state_shape.opt_state["nu"], cfg, mesh),
+            "master": zero1_specs(state_shape.opt_state["master"], cfg, mesh),
+            "count": P(),
+        },
+        step=P(),
+    )

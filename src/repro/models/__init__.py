@@ -1,0 +1,4 @@
+"""Model zoo: unified LM interface over dense/GQA/MLA/MoE/SSM/hybrid/enc-dec/VLM."""
+from repro.models.model import build_model, LM
+
+__all__ = ["build_model", "LM"]

@@ -1,0 +1,129 @@
+"""Shared primitive layers: norms, RoPE, FFNs, embeddings, inits.
+
+Pure-functional style: ``init_*`` build param pytrees, ``apply`` functions take
+(params, inputs). Matmuls run in ``compute_dtype`` (bf16 on target), norm/
+softmax statistics in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal_init(key, shape, scale, dtype):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    std = scale / np.sqrt(fan_in)
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, scale=1.0):
+    return truncated_normal_init(key, (d_in, d_out), scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    exponents = np.arange(0, head_dim, 2, dtype=np.float32) / head_dim
+    return jnp.asarray(1.0 / (theta ** exponents))  # (head_dim/2,)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                   # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                          # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN (dense; gated and plain)
+# ---------------------------------------------------------------------------
+def init_ffn(key, d_model, d_ff, activation, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if activation in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(k1, d_model, d_ff, dtype),
+            "w_up": dense_init(k2, d_model, d_ff, dtype),
+            "w_down": dense_init(k3, d_ff, d_model, dtype),
+        }
+    return {
+        "w_up": dense_init(k1, d_model, d_ff, dtype),
+        "w_down": dense_init(k2, d_ff, d_model, dtype),
+    }
+
+
+def _act(name, x):
+    if name == "swiglu":
+        return jax.nn.silu(x)
+    if name == "geglu":
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.gelu(x, approximate=True)
+
+
+def apply_ffn(params, x, activation):
+    if "w_gate" in params:
+        h = _act(activation, x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = _act(activation, x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+def init_embedding(key, vocab, d_model, dtype):
+    return {"table": truncated_normal_init(key, (vocab, d_model), 1.0, dtype)}
+
+
+def embed(params, tokens, scale=1.0):
+    out = jnp.take(params["table"], tokens, axis=0)
+    if scale != 1.0:
+        out = out * jnp.asarray(scale, out.dtype)
+    return out
+
+
+def lm_logits(embed_params, head_params, h, tie: bool, logit_scale=1.0,
+              soft_cap=0.0, vocab_size: int | None = None):
+    """Logits over the (possibly padded) vocab; padded columns masked to
+    -1e30 so softmax/argmax ignore them."""
+    table = embed_params["table"] if tie else head_params["table"]
+    logits = jnp.einsum("...d,vd->...v", h, table).astype(jnp.float32)
+    if logit_scale != 1.0:
+        logits = logits * logit_scale
+    if soft_cap > 0.0:
+        logits = soft_cap * jnp.tanh(logits / soft_cap)
+    if vocab_size is not None and vocab_size < table.shape[0]:
+        pad_mask = jnp.arange(table.shape[0]) < vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return logits
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """logits fp32 (..., V); labels int (...). Returns mean NLL over mask."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

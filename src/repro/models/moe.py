@@ -1,0 +1,278 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity + sort-based dispatch.
+
+TPU-idiomatic (GShard-style capacity, but gather/scatter dispatch instead of
+one-hot einsums so the compiled FLOPs are the *useful* expert matmuls — this
+keeps the roofline's MODEL_FLOPS/HLO_FLOPs ratio honest).
+
+Supports DeepSeek-V2 shared experts and Arctic's parallel dense residual.
+Experts are sharded over the ``model`` mesh axis (expert parallelism).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import _act, dense_init, init_ffn, apply_ffn
+
+
+def init_moe(key, cfg, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    keys = jax.random.split(key, 6)
+    p = {"router": dense_init(keys[0], d, m.num_experts, dtype)}
+    ke = jax.random.split(keys[1], 3)
+    p["experts"] = {
+        "w_gate": jax.vmap(lambda k: dense_init(k, d, m.d_expert, dtype))(
+            jax.random.split(ke[0], m.num_experts)),
+        "w_up": jax.vmap(lambda k: dense_init(k, d, m.d_expert, dtype))(
+            jax.random.split(ke[1], m.num_experts)),
+        "w_down": jax.vmap(lambda k: dense_init(k, m.d_expert, d, dtype))(
+            jax.random.split(ke[2], m.num_experts)),
+    }
+    if m.num_shared_experts:
+        p["shared"] = init_ffn(keys[2], d, m.d_expert * m.num_shared_experts,
+                               cfg.ffn_activation, dtype)
+    if m.dense_residual:
+        p["dense"] = init_ffn(keys[3], d, m.d_dense_residual,
+                              cfg.ffn_activation, dtype)
+    return p
+
+
+def _route(router_w, x_flat, num_experts, top_k):
+    """Returns (top_ids (T,k), top_w (T,k) fp32, aux_loss scalar)."""
+    logits = (x_flat.astype(jnp.float32)
+              @ router_w.astype(jnp.float32))                  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, top_k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+    # GShard load-balancing aux loss
+    T = x_flat.shape[0]
+    me = jnp.mean(probs, axis=0)                               # (E,)
+    ce = jnp.zeros((num_experts,), jnp.float32).at[top_ids.reshape(-1)].add(
+        1.0) / (T * top_ids.shape[-1])
+    aux = num_experts * jnp.sum(me * ce)
+    return top_ids, top_w, aux
+
+
+def moe_dispatch_combine(experts, x_flat, top_ids, top_w, num_experts,
+                         capacity, activation):
+    """Sort-based capacity dispatch → per-expert GLU FFN → weighted combine."""
+    T, d = x_flat.shape
+    k = top_ids.shape[-1]
+    flat_e = top_ids.reshape(-1)                               # (T*k,)
+    sort_idx = jnp.argsort(flat_e)                             # stable
+    sorted_e = flat_e[sort_idx]
+    counts = jnp.zeros((num_experts,), jnp.int32).at[sorted_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - starts[sorted_e]
+    keep = pos_in_e < capacity
+    slot = jnp.where(keep, pos_in_e, capacity)                 # OOB → dropped
+    tok_idx = sort_idx // k
+
+    xbuf = jnp.zeros((num_experts, capacity, d), x_flat.dtype)
+    xbuf = xbuf.at[sorted_e, slot].set(x_flat[tok_idx], mode="drop")
+
+    h = (_act(activation, jnp.einsum("ecd,edf->ecf", xbuf, experts["w_gate"]))
+         * jnp.einsum("ecd,edf->ecf", xbuf, experts["w_up"]))
+    ybuf = jnp.einsum("ecf,efd->ecd", h, experts["w_down"])
+
+    gathered = ybuf.at[sorted_e, slot].get(mode="fill", fill_value=0)  # (T*k, d)
+    w_sorted = top_w.reshape(-1)[sort_idx].astype(gathered.dtype)
+    contrib = gathered * (w_sorted * keep.astype(gathered.dtype))[:, None]
+    y = jnp.zeros((T, d), x_flat.dtype).at[tok_idx].add(
+        contrib.astype(x_flat.dtype))
+    return y
+
+
+def apply_moe(params, cfg, x, ep_axes=()):
+    """x: (B, S, d). Returns (y, aux_loss).
+
+    With ``ep_axes`` set (distributed runs), dispatch goes through the
+    shard_map EP path; otherwise the single-device XLA path.
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    x_flat = x.reshape(B * S, d)
+    mesh = jax.sharding.get_abstract_mesh()
+    use_ep = bool(ep_axes) and "model" in (mesh.axis_names or ())
+    if use_ep and B * S <= 4096:
+        # decode-scale token counts: move the (tiny) tokens, not the (huge)
+        # FSDP'd expert weights — §Perf hillclimb A in EXPERIMENTS.md
+        y, aux = _moe_ep_tokengather(params, cfg, x_flat, ep_axes)
+    elif use_ep:
+        y, aux = _moe_ep(params, cfg, x_flat, ep_axes)
+    else:
+        top_ids, top_w, aux = _route(params["router"], x_flat, m.num_experts,
+                                     m.top_k)
+        capacity = int(m.capacity_factor * (B * S * m.top_k) / m.num_experts)
+        capacity = max(capacity, 4)
+        y = moe_dispatch_combine(params["experts"], x_flat, top_ids, top_w,
+                                 m.num_experts, capacity, cfg.ffn_activation)
+    if "shared" in params:
+        y = y + apply_ffn(params["shared"], x_flat, cfg.ffn_activation)
+    if "dense" in params:
+        y = y + apply_ffn(params["dense"], x_flat, cfg.ffn_activation)
+    return y.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Expert parallelism (shard_map): DESIGN.md §5
+#
+# Tokens are data-sharded and TP-replicated between blocks, so every model
+# rank can route the *same* local tokens (duplicated routing is negligible),
+# keep only its E_loc experts' assignments, run its expert FFNs locally, and
+# psum partial outputs over the model axis. No global sort, no all-to-all;
+# the only collective is one (T_loc, d) all-reduce per layer — the same class
+# as the TP FFN reduce. FSDP'd expert weights are all-gathered over the data
+# axes inside the region (one gather per layer, overlappable).
+# ---------------------------------------------------------------------------
+def _moe_ep(params, cfg, x_flat, ep_axes):
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    m = cfg.moe
+    mesh = jax.sharding.get_abstract_mesh()
+    dp = tuple(a for a in ep_axes if a in mesh.axis_names)
+    n_model = mesh.shape.get("model", 1)
+    T, d = x_flat.shape
+    T_loc = T // int(np.prod([mesh.shape[a] for a in dp])) if dp else T
+    capacity = max(int(m.capacity_factor * (T_loc * m.top_k)
+                       / m.num_experts), 4)
+    E_loc = m.num_experts // n_model
+    act = cfg.ffn_activation
+
+    def local(x_loc, router_w, w_gate, w_up, w_down):
+        # x_loc: (T_loc, d) — replicated over model; weights: this rank's
+        # E_loc experts, hidden dim FSDP-sharded over dp
+        rank = jax.lax.axis_index("model")
+        if dp:
+            w_gate = jax.lax.all_gather(w_gate, dp, axis=2, tiled=True)
+            w_up = jax.lax.all_gather(w_up, dp, axis=2, tiled=True)
+            w_down = jax.lax.all_gather(w_down, dp, axis=1, tiled=True)
+        top_ids, top_w, aux = _route(router_w, x_loc, m.num_experts, m.top_k)
+        k = m.top_k
+        flat_e = top_ids.reshape(-1)
+        sort_idx = jnp.argsort(flat_e)
+        sorted_e = flat_e[sort_idx]
+        counts = jnp.zeros((m.num_experts,), jnp.int32).at[sorted_e].add(1)
+        starts = jnp.cumsum(counts) - counts
+        pos_in_e = (jnp.arange(T_loc * k, dtype=jnp.int32)
+                    - starts[sorted_e])
+        eid_local = sorted_e - rank * E_loc
+        valid = ((pos_in_e < capacity) & (eid_local >= 0)
+                 & (eid_local < E_loc))
+        eid_c = jnp.clip(eid_local, 0, E_loc - 1)
+        slot = jnp.where(valid, pos_in_e, capacity)       # OOB → dropped
+        tok_idx = sort_idx // k
+
+        xbuf = jnp.zeros((E_loc, capacity, d), x_loc.dtype)
+        xbuf = xbuf.at[eid_c, slot].set(x_loc[tok_idx], mode="drop")
+        h = (_act(act, jnp.einsum("ecd,edf->ecf", xbuf, w_gate))
+             * jnp.einsum("ecd,edf->ecf", xbuf, w_up))
+        ybuf = jnp.einsum("ecf,efd->ecd", h, w_down)
+        gathered = ybuf.at[eid_c, slot].get(mode="fill", fill_value=0)
+        w_sorted = top_w.reshape(-1)[sort_idx].astype(gathered.dtype)
+        contrib = gathered * (w_sorted * valid.astype(gathered.dtype))[:, None]
+        y = jnp.zeros((T_loc, d), x_loc.dtype).at[tok_idx].add(
+            contrib.astype(x_loc.dtype))
+        y = jax.lax.psum(y, "model")
+        return y, aux[None]
+
+    e_specs = {
+        "w_gate": P("model", None, dp if dp else None),
+        "w_up": P("model", None, dp if dp else None),
+        "w_down": P("model", dp if dp else None, None),
+    }
+    y, aux_arr = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp if dp else None, None), P(None, None),
+                  e_specs["w_gate"], e_specs["w_up"], e_specs["w_down"]),
+        out_specs=(P(dp if dp else None, None), P(dp if dp else None)),
+    )(x_flat, params["router"], params["experts"]["w_gate"],
+      params["experts"]["w_up"], params["experts"]["w_down"])
+    return y, jnp.mean(aux_arr)
+
+
+def _moe_ep_tokengather(params, cfg, x_flat, ep_axes):
+    """EP for decode-scale batches: weights never move.
+
+    Baseline (`_moe_ep`) all-gathers the FSDP'd expert hidden dim over the
+    data axes — ~hundreds of MB *per layer per token step* at decode. Here
+    each device instead all-gathers the tokens (KBs), computes its
+    (E_loc experts × f_loc hidden slice) partial GLU — exact, since the
+    hidden dim is elementwise through the gate — and one psum over
+    (data, model) completes both the expert reduction and the hidden-shard
+    reduction. Wire bytes drop from O(expert weights) to O(tokens·d).
+    """
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    m = cfg.moe
+    mesh = jax.sharding.get_abstract_mesh()
+    dp = tuple(a for a in ep_axes if a in mesh.axis_names)
+    n_model = mesh.shape.get("model", 1)
+    T, d = x_flat.shape
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    T_loc = T // dp_size if (dp and T % dp_size == 0) else T
+    tokens_sharded = dp and T % dp_size == 0
+    capacity = max(int(m.capacity_factor * (T * m.top_k)
+                       / m.num_experts), 4)
+    E_loc = m.num_experts // n_model
+    act = cfg.ffn_activation
+
+    def local(x_loc, router_w, w_gate, w_up, w_down):
+        rank = jax.lax.axis_index("model")
+        if tokens_sharded:
+            x_all = jax.lax.all_gather(x_loc, dp, axis=0, tiled=True)
+        else:
+            x_all = x_loc
+        top_ids, top_w, aux = _route(router_w, x_all, m.num_experts, m.top_k)
+        k = m.top_k
+        flat_e = top_ids.reshape(-1)
+        sort_idx = jnp.argsort(flat_e)
+        sorted_e = flat_e[sort_idx]
+        counts = jnp.zeros((m.num_experts,), jnp.int32).at[sorted_e].add(1)
+        starts = jnp.cumsum(counts) - counts
+        pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - starts[sorted_e]
+        eid_local = sorted_e - rank * E_loc
+        valid = ((pos_in_e < capacity) & (eid_local >= 0)
+                 & (eid_local < E_loc))
+        eid_c = jnp.clip(eid_local, 0, E_loc - 1)
+        slot = jnp.where(valid, pos_in_e, capacity)
+        tok_idx = sort_idx // k
+
+        xbuf = jnp.zeros((E_loc, capacity, d), x_all.dtype)
+        xbuf = xbuf.at[eid_c, slot].set(x_all[tok_idx], mode="drop")
+        # partial hidden slice: exact through the elementwise gate
+        h = (_act(act, jnp.einsum("ecd,edf->ecf", xbuf, w_gate))
+             * jnp.einsum("ecd,edf->ecf", xbuf, w_up))
+        ybuf = jnp.einsum("ecf,efd->ecd", h, w_down)      # partial over f
+        gathered = ybuf.at[eid_c, slot].get(mode="fill", fill_value=0)
+        w_sorted = top_w.reshape(-1)[sort_idx].astype(gathered.dtype)
+        contrib = gathered * (w_sorted * valid.astype(gathered.dtype))[:, None]
+        y_all = jnp.zeros((T, d), x_all.dtype).at[tok_idx].add(
+            contrib.astype(x_all.dtype))
+        y_all = jax.lax.psum(y_all, dp + ("model",) if dp else ("model",))
+        if tokens_sharded:
+            idx = jnp.zeros((), jnp.int32)
+            mult = 1
+            for a in reversed(dp):
+                idx = idx + jax.lax.axis_index(a) * mult
+                mult *= mesh.shape[a]
+            y_loc = jax.lax.dynamic_slice_in_dim(y_all, idx * T_loc, T_loc, 0)
+        else:
+            y_loc = y_all
+        return y_loc, aux[None]
+
+    tok_spec = P(dp if tokens_sharded else None, None)
+    y, aux_arr = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(tok_spec, P(None, None),
+                  P("model", None, dp if dp else None),
+                  P("model", None, dp if dp else None),
+                  P("model", dp if dp else None, None)),
+        out_specs=(tok_spec, P(dp if dp else None)),
+    )(x_flat, params["router"], params["experts"]["w_gate"],
+      params["experts"]["w_up"], params["experts"]["w_down"])
+    return y, jnp.mean(aux_arr)

@@ -1,0 +1,192 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked algorithm: within-chunk quadratic (attention-like) term + inter-chunk
+state recurrence (lax.scan over chunks). Single-token decode maintains
+(conv_state, ssm_state) exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.ngroups * s.d_state
+    return s, d_inner, nheads, conv_dim
+
+
+def init_ssm(key, cfg, dtype):
+    s, d_inner, nheads, conv_dim = _dims(cfg)
+    keys = jax.random.split(key, 5)
+    d_in_proj = 2 * d_inner + 2 * s.ngroups * s.d_state + nheads
+    # dt bias initialised so softplus(dt_bias) spans [1e-3, 1e-1]
+    dt = jnp.exp(jax.random.uniform(keys[2], (nheads,)) *
+                 (jnp.log(1e-1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": dense_init(keys[0], cfg.d_model, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(keys[1], (s.d_conv, conv_dim)) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "a_log": jnp.log(jnp.arange(1, nheads + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(keys[3], d_inner, cfg.d_model, dtype),
+    }
+
+
+def _split_in_proj(cfg, zxbcdt):
+    s, d_inner, nheads, conv_dim = _dims(cfg)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    return z, xbc, dt
+
+
+def _gated_norm(params, y, z, eps):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps)
+            * params["norm_scale"].astype(jnp.float32)).astype(y.dtype)
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k] (i>=j)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk_size, initial_state=None,
+                unroll: bool = False):
+    """SSD over a full sequence, streamed chunk-by-chunk (lax.scan).
+
+    x:  (b, T, H, P)   — per-head inputs
+    dt: (b, T, H)      — positive step sizes (already softplus'd)
+    A:  (H,)           — negative scalars
+    B,C: (b, T, N)     — shared across heads (ngroups=1)
+    Returns (y (b,T,H,P), final_state (b,H,P,N)).
+
+    Scanning bounds live memory to one chunk's quadratic term (b·H·Q²) —
+    at 32k/512k sequence lengths the all-chunks-at-once layout is tens of
+    GB per device, the streamed one is tens of MB.
+    """
+    b, T, H, P = x.shape
+    N = B.shape[-1]
+    Q = chunk_size
+    assert T % Q == 0, f"seq {T} not divisible by chunk {Q}"
+    nc = T // Q
+
+    xd = (x * dt[..., None]).astype(jnp.float32)               # fold dt into x
+    dA = (dt * A[None, None, :]).astype(jnp.float32)           # (b,T,H) ≤ 0
+
+    xc = xd.reshape(b, nc, Q, H, P).transpose(1, 0, 2, 3, 4)
+    Bc = B.reshape(b, nc, Q, N).astype(jnp.float32).transpose(1, 0, 2, 3)
+    Cc = C.reshape(b, nc, Q, N).astype(jnp.float32).transpose(1, 0, 2, 3)
+    dAc = dA.reshape(b, nc, Q, H).transpose(1, 0, 2, 3)
+
+    s0 = (jnp.zeros((b, H, P, N), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def body(s_prev, xs):
+        xcj, Bcj, Ccj, dAcj = xs          # (b,Q,H,P) (b,Q,N) (b,Q,N) (b,Q,H)
+        L = jnp.exp(_segsum(dAcj.transpose(0, 2, 1)))          # (b,H,Q,Q)
+        CB = jnp.einsum("bin,bjn->bij", Ccj, Bcj)              # (b,Q,Q)
+        y_diag = jnp.einsum("bij,bhij,bjhp->bihp", CB, L, xcj)
+        dA_cum = jnp.cumsum(dAcj, axis=1)                      # (b,Q,H)
+        decay_to_end = jnp.exp(dA_cum[:, -1:, :] - dA_cum)
+        state_c = jnp.einsum("bjn,bjh,bjhp->bhpn",
+                             Bcj, decay_to_end, xcj)           # (b,H,P,N)
+        y_off = jnp.einsum("bin,bih,bhpn->bihp",
+                           Ccj, jnp.exp(dA_cum), s_prev)
+        s_new = (s_prev * jnp.exp(dA_cum[:, -1, :])[:, :, None, None]
+                 + state_c)
+        return s_new, (y_diag + y_off)
+
+    s_final, ys = jax.lax.scan(body, s0, (xc, Bc, Cc, dAc), unroll=unroll)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, T, H, P)
+    return y.astype(x.dtype), s_final
+
+
+def apply_ssm(params, cfg, x, initial_state=None, unroll: bool = False):
+    """Full-sequence Mamba-2 block. x: (B, T, d_model).
+
+    Returns (y, (conv_state, ssm_state)) — states for decode continuation.
+    """
+    s, d_inner, nheads, conv_dim = _dims(cfg)
+    B_, T, _ = x.shape
+    zxbcdt = x @ params["in_proj"]
+    z, xbc, dt = _split_in_proj(cfg, zxbcdt)
+
+    # causal depthwise conv over xbc
+    xbc_pad = jnp.pad(xbc, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+    win = jnp.stack([xbc_pad[:, i:i + T] for i in range(s.d_conv)], 0)
+    xbc = jax.nn.silu(jnp.einsum("kbtc,kc->btc", win, params["conv_w"])
+                      + params["conv_b"])
+    conv_state = xbc_pad[:, -(s.d_conv - 1):]                  # (B, d_conv-1, conv_dim)
+
+    xs, Bmat, Cmat = jnp.split(
+        xbc, [d_inner, d_inner + s.ngroups * s.d_state], axis=-1)
+    xh = xs.reshape(B_, T, nheads, s.head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])   # (B,T,H)
+    A = -jnp.exp(params["a_log"])                              # (H,)
+
+    # pad T to a chunk multiple; padded steps get dt=0 (decay 1, update 0),
+    # so they are exact no-ops for both outputs and the final state.
+    Q = s.chunk_size
+    T_pad = (-T) % Q
+    if T_pad:
+        xh = jnp.pad(xh, ((0, 0), (0, T_pad), (0, 0), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, T_pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, T_pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, T_pad), (0, 0)))
+
+    y, final_state = ssd_chunked(xh, dt, A, Bmat, Cmat, s.chunk_size,
+                                 initial_state, unroll=unroll)
+    if T_pad:
+        y = y[:, :T]
+        xh = xh[:, :T]
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B_, T, d_inner).astype(x.dtype)
+    y = _gated_norm(params, y, z, cfg.norm_eps)
+    return y @ params["out_proj"], (conv_state, final_state)
+
+
+def ssm_decode(params, cfg, x, conv_state, ssm_state):
+    """Single-token decode. x: (B, 1, d).
+
+    conv_state: (B, d_conv-1, conv_dim); ssm_state: (B, H, P, N) fp32.
+    """
+    s, d_inner, nheads, conv_dim = _dims(cfg)
+    B_ = x.shape[0]
+    zxbcdt = x @ params["in_proj"]
+    z, xbc_new, dt = _split_in_proj(cfg, zxbcdt)               # (B,1,·)
+
+    window = jnp.concatenate([conv_state, xbc_new], axis=1)    # (B, d_conv, c)
+    new_conv_state = window[:, 1:]
+    xbc = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, params["conv_w"])
+                      + params["conv_b"])[:, None, :]
+
+    xs, Bmat, Cmat = jnp.split(
+        xbc, [d_inner, d_inner + s.ngroups * s.d_state], axis=-1)
+    xh = xs.reshape(B_, nheads, s.head_dim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + params["dt_bias"][None, :])         # (B,H)
+    A = -jnp.exp(params["a_log"])
+    dA = jnp.exp(dt * A[None, :])                              # (B,H)
+    Bv = Bmat[:, 0].astype(jnp.float32)                        # (B,N)
+    Cv = Cmat[:, 0].astype(jnp.float32)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bv)
+    new_state = ssm_state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cv)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(B_, 1, d_inner).astype(x.dtype)
+    y = _gated_norm(params, y, z, cfg.norm_eps)
+    return y @ params["out_proj"], (new_conv_state, new_state)

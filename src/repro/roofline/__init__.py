@@ -1,0 +1,2 @@
+"""Roofline analysis: three-term model (compute / memory / collective) derived
+from the compiled multi-pod dry-run artifacts. See DESIGN.md §6."""

@@ -1,0 +1,113 @@
+"""Parse collective ops (with wire-byte estimates) out of compiled HLO text.
+
+``cost_analysis()`` does not report collective bytes, so we walk the HLO for
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops, recover shapes + replica-group sizes, and convert to per-device *wire*
+bytes with standard ring-algorithm factors:
+
+    all-gather        (g-1)/g × result_bytes
+    reduce-scatter    (g-1)/g × operand_bytes
+    all-reduce        2 (g-1)/g × operand_bytes          (RS + AG)
+    all-to-all        (g-1)/g × operand_bytes
+    collective-permute  operand_bytes
+
+Ops inside ``while`` bodies are counted once per appearance; scan trip counts
+are recovered by the L=1/L=2 differencing in repro.roofline.analysis
+(DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.3 = bf16[16,512]{1,0} all-gather(bf16[1,512]{1,0} %x), ...
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[\d,]*\])(?:\{[^}]*\})?)\s+"
+    r"(all-reduce-start|all-reduce|all-gather-start|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(([^)]*)\)(.*)")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_EXPLICIT_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    operand_bytes: int
+    group_size: int
+
+    @property
+    def wire_bytes(self) -> float:
+        g = max(self.group_size, 1)
+        f = (g - 1) / g
+        if self.kind.startswith("all-reduce"):
+            return 2 * f * self.operand_bytes
+        if self.kind.startswith("all-gather"):
+            return f * self.result_bytes
+        if self.kind == "reduce-scatter":
+            return f * self.operand_bytes
+        if self.kind == "all-to-all":
+            return f * self.operand_bytes
+        return float(self.operand_bytes)          # collective-permute
+
+
+def parse_collectives(hlo_text: str) -> list[CollectiveOp]:
+    ops = []
+    for line in hlo_text.splitlines():
+        if not any(c in line for c in _COLLECTIVES):
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        tuple_result, single_result, kind, operands, rest = m.groups()
+        if kind.endswith("-start"):
+            kind = kind[:-6]
+        result_src = tuple_result if tuple_result else single_result
+        result_bytes = sum(_shape_bytes(d, s)
+                           for d, s in _SHAPE_RE.findall(result_src or ""))
+        operand_bytes = sum(_shape_bytes(d, s)
+                            for d, s in _SHAPE_RE.findall(operands))
+        gm = _IOTA_GROUPS_RE.search(rest)
+        if gm:
+            group_size = int(gm.group(2))
+        else:
+            em = _EXPLICIT_GROUPS_RE.search(rest)
+            group_size = len(em.group(1).split(",")) if em else 2
+        ops.append(CollectiveOp(kind, result_bytes, operand_bytes, group_size))
+    return ops
+
+
+def total_wire_bytes(hlo_text: str) -> float:
+    return sum(op.wire_bytes for op in parse_collectives(hlo_text))
+
+
+def collective_summary(hlo_text: str) -> dict:
+    ops = parse_collectives(hlo_text)
+    out: dict = {}
+    for op in ops:
+        d = out.setdefault(op.kind, {"count": 0, "wire_bytes": 0.0})
+        d["count"] += 1
+        d["wire_bytes"] += op.wire_bytes
+    out["total_wire_bytes"] = sum(op.wire_bytes for op in ops)
+    out["num_ops"] = len(ops)
+    return out

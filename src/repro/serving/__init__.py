@@ -1,0 +1,4 @@
+"""Serving: prefill/decode engine with tiered KV offload (paper's designs)."""
+from repro.serving.engine import ServeConfig, ServingEngine
+
+__all__ = ["ServeConfig", "ServingEngine"]

@@ -1,0 +1,7 @@
+"""Training substrate: optimizer (AdamW + WSD/cosine), train step builder,
+gradient compression, microbatching. See DESIGN.md §5."""
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update, lr_at
+from repro.training.step import TrainState, make_train_step, init_train_state
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "lr_at", "TrainState",
+           "make_train_step", "init_train_state"]

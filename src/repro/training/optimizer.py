@@ -1,0 +1,101 @@
+"""AdamW with fp32 master weights and WSD / cosine schedules.
+
+Hand-rolled (no optax in this environment). State pytree:
+
+    {"mu": f32 like params, "nu": f32 like params,
+     "master": f32 like params, "count": i32 scalar}
+
+With ZeRO-1, mu/nu/master carry data-axis shardings (distributed.zero1_specs)
+so XLA emits reduce-scatter(grads) → sharded update → all-gather(params).
+
+The WSD (warmup-stable-decay) schedule is the MiniCPM training schedule
+[arXiv:2404.06395]: linear warmup → constant → short decay tail.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"      # "cosine" | "wsd" | "const"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1       # WSD: fraction of steps in the decay tail
+
+
+def lr_at(cfg: AdamWConfig, step):
+    """Schedule multiplier × base lr (jnp-traceable)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "const":
+        return cfg.lr * warm
+    if cfg.schedule == "wsd":
+        decay_steps = max(int(cfg.total_steps * cfg.decay_frac), 1)
+        decay_start = cfg.total_steps - decay_steps
+        frac = jnp.clip((step - decay_start) / decay_steps, 0.0, 1.0)
+        # exponential-ish decay tail to 10% (MiniCPM uses sqrt-style tails)
+        tail = 0.1 ** frac
+        return cfg.lr * warm * tail
+    # cosine to 10 %
+    prog = jnp.clip(step / max(cfg.total_steps, 1), 0.0, 1.0)
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def adamw_init(params, moment_dtype=jnp.float32):
+    """moment_dtype=bf16 halves mu/nu memory — required to fit 100B+ MoE
+    training in v5e HBM (EXPERIMENTS.md §Dry-run memory math)."""
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt_state, params):
+    """Returns (new_params, new_opt_state, metrics)."""
+    count = opt_state["count"] + 1
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = lr_at(cfg, count)
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, mu, nu, master):
+        g = g.astype(jnp.float32) * clip
+        mdt = mu.dtype
+        mu32 = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g
+        nu32 = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        step = (mu32 / b1c) / (jnp.sqrt(nu32 / b2c) + cfg.eps)
+        wd = cfg.weight_decay * master if master.ndim >= 2 else 0.0
+        master = master - lr * (step + wd)
+        return mu32.astype(mdt), nu32.astype(mdt), master
+
+    flat = jax.tree.map(upd, grads, opt_state["mu"], opt_state["nu"],
+                        opt_state["master"])
+    mu = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree.map(lambda t: t[2], flat,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(
+        lambda m, p: m.astype(p.dtype), master, params)
+    new_state = {"mu": mu, "nu": nu, "master": master, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,19 @@
+import os
+
+# tests run on ONE device (the dry-run sets its own 512-device env in a
+# subprocess); keep any inherited dry-run flags out of the test process
+os.environ.pop("XLA_FLAGS", None)
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "repro", deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+settings.load_profile("repro")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

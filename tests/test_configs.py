@@ -1,0 +1,75 @@
+"""Config registry: published sizes, shape applicability, reduced siblings."""
+import pytest
+
+from repro.configs import (ARCH_IDS, REGISTRY, applicable_shapes, get_config,
+                           skipped_shapes)
+
+# published parameter counts (±12% — analytic counts vs reported marketing
+# numbers differ by embeddings/rounding)
+PUBLISHED = {
+    "starcoder2-15b": 15.5e9,
+    "internlm2-1.8b": 1.9e9,
+    "minicpm-2b": 2.7e9,       # 2.4B non-embedding + tied embeddings
+    "gemma-7b": 8.5e9,
+    "arctic-480b": 480e9,
+    "deepseek-v2-236b": 236e9,
+    "seamless-m4t-large-v2": 1.6e9,   # text backbone (speech tower stubbed)
+    "mamba2-1.3b": 1.3e9,
+    "zamba2-1.2b": 1.2e9,
+    "llava-next-mistral-7b": 7.2e9,
+}
+
+ACTIVE = {"arctic-480b": 17e9, "deepseek-v2-236b": 21e9}
+
+
+def test_registry_has_all_archs():
+    assert len(ARCH_IDS) == 10
+    for a in ARCH_IDS:
+        assert a in REGISTRY and a + "-smoke" in REGISTRY
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_counts_match_published(arch):
+    got = get_config(arch).param_count()
+    want = PUBLISHED[arch]
+    assert abs(got - want) / want < 0.12, (arch, got, want)
+
+
+@pytest.mark.parametrize("arch,want", sorted(ACTIVE.items()))
+def test_active_params(arch, want):
+    got = get_config(arch).active_param_count()
+    assert abs(got - want) / want < 0.15, (arch, got, want)
+
+
+def test_shape_applicability():
+    # long_500k only for sub-quadratic backbones
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        names = [s.name for s in applicable_shapes(cfg)]
+        if arch in ("mamba2-1.3b", "zamba2-1.2b"):
+            assert "long_500k" in names
+        else:
+            assert "long_500k" not in names
+            assert any(s == "long_500k" for s, _ in skipped_shapes(cfg))
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= set(names)
+
+
+def test_total_cell_count():
+    live = sum(len(applicable_shapes(get_config(a))) for a in ARCH_IDS)
+    skipped = sum(len(skipped_shapes(get_config(a))) for a in ARCH_IDS)
+    assert live + skipped == 40          # the assigned 10×4 grid
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_configs_are_small(arch):
+    cfg = get_config(arch + "-smoke")
+    assert cfg.param_count() < 50e6
+    assert cfg.family == get_config(arch).family
+
+
+def test_padded_vocab_divisible():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        assert cfg.padded_vocab % 256 == 0
+        assert cfg.padded_vocab >= cfg.vocab_size
+        assert cfg.padded_vocab % 16 == 0     # TP axis of the production mesh

@@ -1,0 +1,139 @@
+"""Engine behaviour: read-after-write, persistence semantics, the paper's
+write-amplification and bandwidth asymmetries."""
+import random
+
+import pytest
+
+from repro.core import NVCacheFS, PAGE_SIZE
+from repro.roofline.hw import DRAM, NVMM
+
+
+def _rand_ops(fs, fd, n_ops, file_bytes, seed=7, write_frac=0.5):
+    rng = random.Random(seed)
+    oracle = {}
+    for _ in range(n_ops):
+        off = rng.randrange(0, file_bytes - 64)
+        if rng.random() < write_frac:
+            data = bytes([rng.randrange(256)]) * rng.randrange(1, 64)
+            fs.pwrite(fd, data, off)
+            for j, b in enumerate(data):
+                oracle[off + j] = b
+        else:
+            n = rng.randrange(1, 64)
+            got = fs.pread(fd, n, off)
+            want = bytes(oracle.get(off + j, 0) for j in range(n))
+            assert got == want
+    return oracle
+
+
+@pytest.mark.parametrize("engine", ["nvpages", "nvlog", "psync",
+                                    "psync_fsync"])
+def test_read_after_write(engine):
+    fs = NVCacheFS(engine, nvmm_bytes=1 << 20, dram_cache_bytes=1 << 18)
+    fd = fs.open("/f")
+    _rand_ops(fs, fd, 1500, 1 << 18)
+
+
+@pytest.mark.parametrize("engine", ["nvpages", "nvlog"])
+def test_crash_recovery_no_data_loss(engine):
+    fs = NVCacheFS(engine, nvmm_bytes=1 << 20, dram_cache_bytes=1 << 17)
+    fd = fs.open("/f")
+    oracle = _rand_ops(fs, fd, 1200, 1 << 18)
+    fs.crash()
+    fs.recover()
+    fd = fs.open("/f")
+    for off in range(0, 1 << 18, PAGE_SIZE):
+        got = fs.pread(fd, PAGE_SIZE, off)
+        want = bytes(oracle.get(off + j, 0) for j in range(PAGE_SIZE))
+        assert got == want, f"lost page at {off}"
+
+
+def test_psync_loses_unsynced_data():
+    """The paper's point: the LPC gives no persistence without fsync."""
+    fs = NVCacheFS("psync")
+    fd = fs.open("/f")
+    fs.pwrite(fd, b"\xAA" * PAGE_SIZE, 0)
+    fs.fsync(fd)
+    fs.pwrite(fd, b"\xBB" * PAGE_SIZE, PAGE_SIZE)    # never synced
+    fs.crash()
+    fs.recover()
+    fd = fs.open("/f")
+    assert fs.pread(fd, 4, 0) == b"\xAA" * 4          # fsync'd survived
+    assert fs.pread(fd, 4, PAGE_SIZE) == b"\x00" * 4  # unsynced lost
+
+
+def test_nvpages_double_write_amplification():
+    """Paper §III: the redo log makes NVPages write data to NVMM twice."""
+    fs = NVCacheFS("nvpages", nvmm_bytes=8 << 20)
+    fd = fs.open("/f")
+    payload = 256 * 1024
+    for off in range(0, payload, PAGE_SIZE):
+        fs.pwrite(fd, b"\x11" * PAGE_SIZE, off)
+    written = fs.clock.bytes_moved("nvmm", "write")
+    assert written >= 2 * payload                     # redo + page
+    assert written < 2.2 * payload
+
+
+def test_nvlog_single_write_amplification():
+    fs = NVCacheFS("nvlog", nvmm_bytes=8 << 20)
+    fd = fs.open("/f")
+    payload = 256 * 1024
+    for off in range(0, payload, PAGE_SIZE):
+        fs.pwrite(fd, b"\x22" * PAGE_SIZE, off)
+    written = fs.clock.bytes_moved("nvmm", "write")
+    assert payload <= written < 1.1 * payload         # log header overhead only
+
+
+def test_nvlog_reads_at_dram_speed_nvpages_at_nvmm_speed():
+    """The paper's root cause: NVLog serves hot reads from DRAM, NVPages from
+    NVMM — and NVMM read bandwidth ≪ DRAM."""
+    results = {}
+    for engine in ("nvlog", "nvpages"):
+        fs = NVCacheFS(engine, nvmm_bytes=32 << 20,
+                       dram_cache_bytes=32 << 20)
+        fd = fs.open("/f")
+        blob = b"\x33" * PAGE_SIZE
+        for off in range(0, 1 << 20, PAGE_SIZE):
+            fs.pwrite(fd, blob, off)
+        t0 = fs.simulated_time
+        for _ in range(3):
+            for off in range(0, 1 << 20, PAGE_SIZE):
+                fs.pread(fd, PAGE_SIZE, off)
+        results[engine] = fs.simulated_time - t0
+    # DRAM rand read 25 GB/s vs NVMM rand read 2.5 GB/s → ~10× gap
+    assert results["nvpages"] > 3 * results["nvlog"]
+
+
+def test_nvlog_stalls_when_log_full():
+    fs = NVCacheFS("nvlog", nvmm_bytes=64 << 10)      # tiny log
+    fd = fs.open("/f")
+    for off in range(0, 1 << 20, PAGE_SIZE):
+        fs.pwrite(fd, b"\x44" * PAGE_SIZE, off)
+    assert fs.cache.stats["stall_time"] > 0           # drainer became the limit
+
+
+def test_nvpages_eviction_bounded_by_capacity():
+    nvmm = 1 << 20
+    fs = NVCacheFS("nvpages", nvmm_bytes=nvmm)
+    fd = fs.open("/f")
+    for off in range(0, 4 << 20, PAGE_SIZE):          # 4× the cache
+        fs.pwrite(fd, b"\x55" * PAGE_SIZE, off)
+    cache = fs.cache
+    resident = sum(len(sh.pool) for sh in cache.shards)
+    max_frames = sum(sh.max_frames for sh in cache.shards)
+    assert cache.stats["evictions"] > 0
+    assert resident <= max_frames
+
+
+def test_sharded_nvpages_multithread_design():
+    """Paper §IV future work: independent redo logs per shard."""
+    fs = NVCacheFS("nvpages", nvmm_bytes=4 << 20, shards=4)
+    fd = fs.open("/f")
+    oracle = _rand_ops(fs, fd, 800, 1 << 19, seed=3)
+    fs.crash()
+    fs.recover()
+    fd = fs.open("/f")
+    for off in range(0, 1 << 19, PAGE_SIZE):
+        got = fs.pread(fd, PAGE_SIZE, off)
+        want = bytes(oracle.get(off + j, 0) for j in range(PAGE_SIZE))
+        assert got == want

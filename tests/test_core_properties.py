@@ -1,0 +1,111 @@
+"""Hypothesis property tests on the cache invariants (deliverable c).
+
+Core invariant (both persistent designs): after ANY op sequence, an optional
+crash, and recovery, every acked write is readable — the recovered file
+equals the oracle built from acked writes.
+"""
+import random
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import NVCacheFS, PAGE_SIZE
+
+FILE_BYTES = 1 << 16
+
+
+ops_strategy = st.lists(
+    st.tuples(
+        st.sampled_from(["w", "r", "f"]),
+        st.integers(0, FILE_BYTES - 64),
+        st.integers(1, 64),
+        st.integers(0, 255),
+    ),
+    min_size=1, max_size=120,
+)
+
+
+def _apply(fs, fd, ops):
+    oracle = {}
+    for kind, off, n, val in ops:
+        if kind == "w":
+            data = bytes([val]) * n
+            fs.pwrite(fd, data, off)
+            for j in range(n):
+                oracle[off + j] = val
+        elif kind == "r":
+            got = fs.pread(fd, n, off)
+            want = bytes(oracle.get(off + j, 0) for j in range(n))
+            assert got == want
+        else:
+            fs.fsync(fd)
+    return oracle
+
+
+def _check_oracle(fs, fd, oracle):
+    for off in range(0, FILE_BYTES, PAGE_SIZE):
+        got = fs.pread(fd, PAGE_SIZE, off)
+        want = bytes(oracle.get(off + j, 0) for j in range(PAGE_SIZE))
+        assert got == want, f"mismatch at page {off // PAGE_SIZE}"
+
+
+@settings(max_examples=30)
+@given(ops=ops_strategy, engine=st.sampled_from(["nvpages", "nvlog"]),
+       crash=st.booleans())
+def test_acked_writes_survive_any_sequence(ops, engine, crash):
+    fs = NVCacheFS(engine, nvmm_bytes=256 << 10, dram_cache_bytes=64 << 10)
+    fd = fs.open("/f")
+    oracle = _apply(fs, fd, ops)
+    if crash:
+        fs.crash()
+        fs.recover()
+        fd = fs.open("/f")
+    _check_oracle(fs, fd, oracle)
+
+
+@settings(max_examples=20)
+@given(ops=ops_strategy)
+def test_designs_agree_functionally(ops):
+    """Paging and logging must be observationally identical — only the
+    timing/amplification differ (the paper's whole point)."""
+    fss = {e: NVCacheFS(e, nvmm_bytes=256 << 10, dram_cache_bytes=64 << 10)
+           for e in ("nvpages", "nvlog")}
+    fds = {e: fs.open("/f") for e, fs in fss.items()}
+    for kind, off, n, val in ops:
+        if kind == "w":
+            for e in fss:
+                fss[e].pwrite(fds[e], bytes([val]) * n, off)
+        elif kind == "r":
+            reads = {e: fss[e].pread(fds[e], n, off) for e in fss}
+            assert reads["nvpages"] == reads["nvlog"]
+
+
+@settings(max_examples=20)
+@given(ops=ops_strategy, seed=st.integers(0, 2 ** 16))
+def test_recovery_idempotent(ops, seed):
+    """Recovering twice (crash during recovery restart) must be safe."""
+    fs = NVCacheFS("nvlog", nvmm_bytes=256 << 10, dram_cache_bytes=32 << 10)
+    fd = fs.open("/f")
+    oracle = _apply(fs, fd, ops)
+    fs.crash()
+    fs.recover()
+    fs.crash()          # crash again immediately after recovery
+    fs.recover()
+    fd = fs.open("/f")
+    _check_oracle(fs, fd, oracle)
+
+
+@settings(max_examples=15)
+@given(st.integers(2, 64))
+def test_monotone_capacity_no_data_loss(cache_pages):
+    """Shrinking NVPages capacity changes timing, never correctness."""
+    fs = NVCacheFS("nvpages", nvmm_bytes=cache_pages * PAGE_SIZE + (64 << 10))
+    fd = fs.open("/f")
+    rng = random.Random(5)
+    oracle = {}
+    for _ in range(200):
+        off = rng.randrange(0, FILE_BYTES - 64)
+        data = bytes([rng.randrange(256)]) * 32
+        fs.pwrite(fd, data, off)
+        for j in range(32):
+            oracle[off + j] = data[0]
+    _check_oracle(fs, fd, oracle)

@@ -1,0 +1,64 @@
+"""Radix tree + LRU list unit tests."""
+from hypothesis import given, strategies as st
+
+from repro.core.lru import LRUList
+from repro.core.radix import RadixTree
+
+
+def test_radix_basic():
+    t = RadixTree()
+    t.insert(0, "a")
+    t.insert(12345678, "b")
+    t.insert(2 ** 32 - 1, "c")
+    assert t.lookup(12345678) == "b"
+    assert t.lookup(99) is None
+    assert len(t) == 3
+    t.delete(12345678)
+    assert t.lookup(12345678) is None
+    assert len(t) == 2
+    assert dict(t.items()) == {0: "a", 2 ** 32 - 1: "c"}
+
+
+@given(st.lists(st.integers(0, 2 ** 20), max_size=200))
+def test_radix_matches_dict(keys):
+    t, d = RadixTree(), {}
+    for i, k in enumerate(keys):
+        t.insert(k, i)
+        d[k] = i
+    assert len(t) == len(d)
+    for k in keys:
+        assert t.lookup(k) == d[k]
+    assert dict(t.items()) == d
+
+
+def test_lru_order():
+    l = LRUList()
+    for k in "abc":
+        l.touch(k)
+    l.touch("a")                       # a becomes MRU
+    assert l.pop_lru() == "b"
+    assert l.pop_lru() == "c"
+    assert l.pop_lru() == "a"
+    assert l.pop_lru() is None
+
+
+@given(st.lists(st.tuples(st.sampled_from("tpr"), st.integers(0, 20)),
+                max_size=300))
+def test_lru_matches_ordered_dict_model(ops):
+    from collections import OrderedDict
+    l, model = LRUList(), OrderedDict()
+    for op, k in ops:
+        if op == "t":
+            l.touch(k)
+            model.pop(k, None)
+            model[k] = True
+        elif op == "r":
+            l.remove(k)
+            model.pop(k, None)
+        else:
+            got = l.pop_lru()
+            want = next(iter(model)) if model else None
+            if want is not None:
+                model.pop(want)
+            assert got == want
+    assert list(l.lru_order()) == list(model.keys())

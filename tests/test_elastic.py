@@ -1,0 +1,44 @@
+"""Elastic re-meshing + straggler policy (fault-tolerance substrate)."""
+from repro.training.elastic import MeshPlan, StragglerPolicy, replan_mesh
+
+
+def test_replan_keeps_tp_whole():
+    plan = MeshPlan(data=16, model=16)
+    new = replan_mesh(plan, healthy_devices=240, global_batch=256)
+    assert new.model == 16
+    assert new.data * new.model <= 240
+    assert 256 % new.data == 0
+
+
+def test_replan_after_losing_half_a_pod():
+    plan = MeshPlan(data=16, model=16)
+    new = replan_mesh(plan, healthy_devices=128, global_batch=256)
+    assert new.model == 16 and new.data == 8
+
+
+def test_replan_multi_pod():
+    plan = MeshPlan(data=16, model=16, pod=2)
+    new = replan_mesh(plan, healthy_devices=384, global_batch=256)
+    assert new.model == 16 and new.pod == 2
+    assert new.devices <= 384
+
+
+def test_straggler_detection_and_reassignment():
+    pol = StragglerPolicy(threshold=2.0)
+    hosts = [f"h{i}" for i in range(4)]
+    for step in range(10):
+        for h in hosts:
+            pol.observe(h, 1.0 if h != "h2" else 5.0)
+    assert pol.stragglers() == ["h2"]
+    assign = pol.reassign_shards(8, hosts)
+    assert "h2" not in assign.values()
+    assert sorted(assign) == list(range(8))
+
+
+def test_no_straggler_no_change():
+    pol = StragglerPolicy()
+    for h in ("a", "b"):
+        pol.observe(h, 1.0)
+    assert pol.stragglers() == []
+    assign = pol.reassign_shards(4, ["a", "b"])
+    assert set(assign.values()) == {"a", "b"}

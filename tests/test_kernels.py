@@ -1,0 +1,135 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (deliverable c).
+
+All kernels run in interpret mode on CPU (the TPU path is the same kernel
+body with real BlockSpecs — see kernels/*/kernel.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import flash_attention, log_patch, paged_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.log_patch.ref import log_patch_ref
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+_RTOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _tol(dtype):
+    return _RTOL[dtype]
+
+
+# ---------------------------------------------------------------- flash attn
+FLASH_CASES = [
+    # (B, Sq, Skv, H, K, D, causal, bq, bk)
+    (2, 128, 128, 8, 2, 64, True, 64, 64),
+    (1, 100, 260, 4, 4, 32, True, 32, 64),       # ragged + GQA=1
+    (2, 64, 192, 6, 2, 128, False, 64, 64),      # cross-attn shape
+    (1, 256, 256, 4, 1, 128, True, 128, 128),    # MQA
+    (1, 37, 129, 2, 2, 256, True, 16, 32),       # gemma head_dim, unaligned
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_oracle(case, dtype):
+    B, Sq, Skv, H, K, D, causal, bq, bk = case
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((B, Sq, H, D)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, Skv, K, D)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, Skv, K, D)), dtype)
+    out = flash_attention(q, k, v, causal=causal, force_pallas=True,
+                          block_q=bq, block_k=bk)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=5 * _tol(dtype), rtol=_tol(dtype))
+
+
+# ---------------------------------------------------------------- paged attn
+PAGED_CASES = [
+    # (B, H, K, D, page_tokens, pool_pages, max_pages)
+    (3, 8, 4, 64, 16, 24, 6),
+    (1, 4, 4, 128, 8, 8, 4),       # MHA-per-kv
+    (2, 16, 2, 64, 32, 10, 4),     # large GQA group
+    (4, 8, 8, 256, 16, 40, 8),     # gemma-like head_dim
+]
+
+
+@pytest.mark.parametrize("case", PAGED_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_matches_oracle(case, dtype):
+    B, H, K, D, T, P, MP = case
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((B, H, D)), dtype)
+    pk = jnp.asarray(rng.standard_normal((P, T, K, D)), dtype)
+    pv = jnp.asarray(rng.standard_normal((P, T, K, D)), dtype)
+    tbl = jnp.asarray(
+        rng.permutation(P)[:B * MP].reshape(B, MP)
+        if P >= B * MP else rng.integers(0, P, (B, MP)), jnp.int32)
+    lens = jnp.asarray(rng.integers(1, T * MP, B), jnp.int32)
+    out = paged_attention(q, pk, pv, tbl, lens, force_pallas=True)
+    ref = paged_attention_ref(q, pk, pv, tbl, lens)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=5 * _tol(dtype), rtol=2 * _tol(dtype))
+
+
+@given(lens=st.lists(st.integers(1, 63), min_size=2, max_size=2))
+@settings(max_examples=10)
+def test_paged_attention_ignores_dead_pages(lens):
+    """Poisoning pool pages past each sequence's length must not change the
+    output (the kernel's length masking / pl.when skip is exact)."""
+    B, H, K, D, T, MP = 2, 4, 2, 64, 16, 4
+    P = B * MP                                     # disjoint tables
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    pk = np.asarray(rng.standard_normal((P, T, K, D)), np.float32)
+    pv = np.asarray(rng.standard_normal((P, T, K, D)), np.float32)
+    tbl = np.arange(P, dtype=np.int32).reshape(B, MP)
+    lens_arr = jnp.asarray(lens, jnp.int32)
+    out1 = paged_attention(q, jnp.asarray(pk), jnp.asarray(pv),
+                           jnp.asarray(tbl), lens_arr, force_pallas=True)
+    pk2, pv2 = pk.copy(), pv.copy()
+    for b in range(B):
+        for lp in range(MP):
+            phys = tbl[b, lp]
+            start = lp * T
+            if start >= lens[b]:                   # fully dead page
+                pk2[phys] = 1e6
+                pv2[phys] = -1e6
+            elif start + T > lens[b]:              # partially dead slots
+                pk2[phys, lens[b] - start:] = 1e6
+                pv2[phys, lens[b] - start:] = -1e6
+    out2 = paged_attention(q, jnp.asarray(pk2), jnp.asarray(pv2),
+                           jnp.asarray(tbl), lens_arr, force_pallas=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-5)
+
+
+# ------------------------------------------------------------------ log patch
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("P,T,C,N", [(5, 8, 16, 20), (3, 16, 128, 64),
+                                     (2, 4, 8, 1)])
+def test_log_patch_matches_oracle(P, T, C, N, dtype):
+    rng = np.random.default_rng(3)
+    pool = jnp.asarray(rng.standard_normal((P, T, C)), dtype)
+    pays = jnp.asarray(rng.standard_normal((N, C)), dtype)
+    pg = jnp.asarray(rng.integers(0, P, N), jnp.int32)
+    sl = jnp.asarray(rng.integers(0, T, N), jnp.int32)
+    valid = jnp.asarray(rng.integers(0, 2, N), jnp.int32)
+    out = log_patch(pool, pays, pg, sl, valid, force_pallas=True)
+    ref = log_patch_ref(pool, pays, pg, sl, valid.astype(bool))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=1e-6)
+
+
+def test_log_patch_replay_order():
+    """Later log records must win on slot collisions (replay semantics)."""
+    pool = jnp.zeros((1, 4, 8), jnp.float32)
+    pays = jnp.stack([jnp.full((8,), 1.0), jnp.full((8,), 2.0)])
+    pg = jnp.zeros((2,), jnp.int32)
+    sl = jnp.zeros((2,), jnp.int32)
+    out = log_patch(pool, pays, pg, sl, force_pallas=True)
+    assert float(out[0, 0, 0]) == 2.0

@@ -1,0 +1,85 @@
+"""Tiered KV-cache designs: functional equality + the paper's asymmetries
+transferred to the serving call-site (DESIGN.md §2a)."""
+import numpy as np
+import pytest
+
+from repro.core import SimClock
+from repro.core.kvcache import KVSpec, LogKVCache, PagedKVCache
+
+SPEC = KVSpec(num_layers=3, kv_heads=2, head_dim=8, page_tokens=4)
+
+
+def _fill(kv, n_tokens, seq=0, seed=0):
+    rng = np.random.default_rng(seed)
+    oracle = []
+    for _ in range(n_tokens):
+        tok = rng.standard_normal(
+            (SPEC.num_layers, 2, SPEC.kv_heads, SPEC.head_dim)).astype(
+            np.float16)
+        kv.append(seq, tok)
+        oracle.append(tok)
+    return oracle
+
+
+@pytest.mark.parametrize("design", ["paged", "log"])
+def test_gather_matches_appends(design):
+    clock = SimClock()
+    kv = (PagedKVCache(SPEC, clock, hbm_budget_bytes=1 << 13)
+          if design == "paged" else
+          LogKVCache(SPEC, clock, hot_window_tokens=6))
+    oracle = _fill(kv, 29)
+    for layer in range(SPEC.num_layers):
+        got = kv.gather(0, layer)
+        want = np.stack([o[layer] for o in oracle], axis=1)
+        assert np.array_equal(got, want), (design, layer)
+
+
+def test_designs_functionally_identical_multi_seq():
+    clock_p, clock_l = SimClock(), SimClock()
+    paged = PagedKVCache(SPEC, clock_p, hbm_budget_bytes=1 << 13)
+    log = LogKVCache(SPEC, clock_l, hot_window_tokens=4)
+    rng = np.random.default_rng(1)
+    for t in range(40):
+        seq = t % 3
+        tok = rng.standard_normal((3, 2, 2, 8)).astype(np.float16)
+        paged.append(seq, tok)
+        log.append(seq, tok)
+    for seq in range(3):
+        for layer in range(3):
+            assert np.array_equal(paged.gather(seq, layer),
+                                  log.gather(seq, layer))
+
+
+def test_paged_write_amplification_vs_log():
+    """The paging design writes every KV token to the host tier twice
+    (redo + page); the log design once."""
+    clock_p, clock_l = SimClock(), SimClock()
+    paged = PagedKVCache(SPEC, clock_p, hbm_budget_bytes=1 << 13)
+    log = LogKVCache(SPEC, clock_l)
+    _fill(paged, 32)
+    _fill(log, 32)
+    paged_bytes = clock_p.bytes_moved("host", "write")
+    log_bytes = clock_l.bytes_moved("host", "write")
+    assert paged_bytes >= 1.95 * log_bytes
+
+
+def test_log_hot_window_serves_recent_tokens_from_hbm():
+    clock = SimClock()
+    kv = LogKVCache(SPEC, clock, hot_window_tokens=8)
+    _fill(kv, 32)
+    before = clock.bytes_moved("host", "read")
+    kv.gather(0, 0)
+    host_read = clock.bytes_moved("host", "read") - before
+    # only the cold 24 tokens come over the host link
+    assert host_read <= 25 * SPEC.token_bytes
+    assert kv.stats["hot_hits"] >= 8
+
+
+def test_paged_hbm_miss_dma_cost():
+    """Cache misses DMA whole pages — the paper's miss-copy cost."""
+    clock = SimClock()
+    kv = PagedKVCache(SPEC, clock, hbm_budget_bytes=2 * SPEC.page_bytes)
+    _fill(kv, 32)                      # 8 pages/layer, HBM holds 2
+    kv.gather(0, 0)
+    assert kv.stats["hbm_misses"] > 0
+    assert kv.stats["dma_up_bytes"] >= kv.stats["hbm_misses"] * SPEC.page_bytes

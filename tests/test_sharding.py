@@ -1,0 +1,83 @@
+"""Sharding rules: divisibility guarantees on the production mesh shapes
+(pure spec computation over AbstractMesh — no devices needed)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed.sharding import (_axes_of, batch_specs, param_specs,
+                                        zero1_specs)
+from repro.launch.specs import abstract_params, abstract_state
+from repro.models import build_model
+
+
+def _mesh(multi=False):
+    if multi:
+        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def _check_divisible(shape_tree, spec_tree, mesh):
+    def check(leaf, spec):
+        for i, entry in enumerate(list(spec)):
+            for name_group in [_axes_of(entry)]:
+                if not name_group:
+                    continue
+                size = int(np.prod([mesh.shape[a] for a in name_group]))
+                assert leaf.shape[i] % size == 0, (leaf.shape, spec)
+    jax.tree.map(check, shape_tree, spec_tree,
+                 is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("multi", [False, True])
+def test_param_specs_divisible_on_production_mesh(arch, multi):
+    cfg = get_config(arch)
+    model = build_model(cfg, param_dtype=jnp.bfloat16,
+                        compute_dtype=jnp.bfloat16)
+    mesh = _mesh(multi)
+    shapes = abstract_params(model)
+    specs = param_specs(shapes, cfg, mesh)
+    _check_divisible(shapes, specs, mesh)
+
+
+@pytest.mark.parametrize("arch", ["starcoder2-15b", "deepseek-v2-236b",
+                                  "arctic-480b"])
+def test_zero1_specs_divisible(arch):
+    cfg = get_config(arch)
+    model = build_model(cfg, param_dtype=jnp.bfloat16,
+                        compute_dtype=jnp.bfloat16)
+    mesh = _mesh(True)
+    state = abstract_state(model)
+    specs = zero1_specs(state.opt_state["master"], cfg, mesh)
+    _check_divisible(state.opt_state["master"], specs, mesh)
+
+
+def test_expert_weights_are_fsdp_sharded():
+    cfg = get_config("arctic-480b")
+    model = build_model(cfg, param_dtype=jnp.bfloat16,
+                        compute_dtype=jnp.bfloat16)
+    mesh = _mesh(False)
+    shapes = abstract_params(model)
+    specs = param_specs(shapes, cfg, mesh)
+    gate_spec = specs["moe_blocks"]["ffn"]["experts"]["w_gate"]
+    assert "model" in [a for e in gate_spec for a in _axes_of(e)]
+    assert "data" in [a for e in gate_spec for a in _axes_of(e)]
+
+
+def test_nondivisible_vocab_replicated_but_padded_is_sharded():
+    cfg = get_config("minicpm-2b")     # vocab 122753 → padded 122880
+    model = build_model(cfg, param_dtype=jnp.bfloat16,
+                        compute_dtype=jnp.bfloat16)
+    shapes = abstract_params(model)
+    specs = param_specs(shapes, cfg, _mesh(False))
+    assert specs["embed"]["table"] == P("model", None)   # padded divides
+
+
+def test_batch_specs_small_batch_replicates():
+    mesh = _mesh(False)
+    batch = {"tokens": jax.ShapeDtypeStruct((1, 524288), jnp.int32)}
+    specs = batch_specs(batch, mesh)
+    assert specs["tokens"] == P(None, None)   # batch 1 can't shard over 16
