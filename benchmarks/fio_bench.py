@@ -21,6 +21,7 @@ import numpy as np
 
 from benchmarks.common import all_workloads, run_workload
 from repro.core import NVCacheFS
+from repro.core.engines import EngineSpec, list_engines
 
 
 def parse_size(s: str) -> int:
@@ -33,7 +34,17 @@ def parse_size(s: str) -> int:
 
 
 def engine_fs(engine: str, nvmm: int, dram_cache: int) -> NVCacheFS:
-    return NVCacheFS(engine, nvmm_bytes=nvmm, dram_cache_bytes=dram_cache)
+    return NVCacheFS(EngineSpec(engine=engine, nvmm_bytes=nvmm,
+                                dram_cache_bytes=dram_cache))
+
+
+def resolve_engines(arg: str) -> list[str]:
+    """``all`` enumerates the registry (minus the fsync-per-write baseline,
+    which gets its own reduced-size job) — newly registered engines are
+    benchmarked for free."""
+    if arg == "all":
+        return [e for e in list_engines() if e != "psync_fsync"]
+    return arg.split(",")
 
 
 def run_grid(file_bytes: int, runs: int, engines, include_fsync: bool):
@@ -125,13 +136,14 @@ def main(argv=None):
     ap.add_argument("--scale", default="32MiB",
                     help="file size (paper: 20GiB; ratios preserved)")
     ap.add_argument("--runs", type=int, default=5)
-    ap.add_argument("--engines", default="nvpages,nvlog,psync")
+    ap.add_argument("--engines", default="all",
+                    help="comma list, or 'all' for every registered engine")
     ap.add_argument("--no-fsync-job", action="store_true")
     ap.add_argument("--out", default="artifacts/fio_bench.json")
     args = ap.parse_args(argv)
 
     file_bytes = parse_size(args.scale)
-    results = run_grid(file_bytes, args.runs, args.engines.split(","),
+    results = run_grid(file_bytes, args.runs, resolve_engines(args.engines),
                        include_fsync=not args.no_fsync_job)
     print(f"# fio grid: file={file_bytes >> 20}MiB runs={args.runs} "
           f"(paper fig3/fig4 ratios)")

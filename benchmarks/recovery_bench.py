@@ -13,11 +13,19 @@ from pathlib import Path
 import numpy as np
 
 from repro.core import NVCacheFS, PAGE_SIZE
+from repro.core.engines import EngineSpec, get_engine, list_engines
+
+
+def persistent_engines() -> list[str]:
+    """Every registered engine with NVMM state to recover (registry-driven:
+    new persistent designs are benchmarked for free)."""
+    return [e for e in list_engines() if get_engine(e).uses_nvmm]
 
 
 def bench_engine(engine: str, dirty_mib: int, seed=0) -> dict:
-    fs = NVCacheFS(engine, nvmm_bytes=max(4 * dirty_mib, 8) << 20,
-                   dram_cache_bytes=8 << 20)
+    fs = NVCacheFS(EngineSpec(engine=engine,
+                              nvmm_bytes=max(4 * dirty_mib, 8) << 20,
+                              dram_cache_bytes=8 << 20))
     fd = fs.open("/f")
     rng = np.random.default_rng(seed)
     payload = b"\x5A" * PAGE_SIZE
@@ -41,7 +49,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
     rows = []
     print("engine,dirty_mib,recovery_s,lost")
-    for engine in ("nvpages", "nvlog"):
+    for engine in persistent_engines():
         for mib in [int(x) for x in args.sizes.split(",")]:
             r = bench_engine(engine, mib)
             rows.append(r)

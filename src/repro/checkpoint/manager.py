@@ -1,7 +1,9 @@
 """Checkpoint manager: JAX pytree ↔ byte blobs over the core backends.
 
-The design switch (``design="paged" | "log"``) selects the paper's paging or
-logging cache as the persistence tier (DESIGN.md §2b). Restore after a crash
+The design switch (``design="paged" | "log"``, or any registered engine
+name such as ``"nvhybrid"``) selects the persistence tier (DESIGN.md §2b);
+the tier is built from one :class:`~repro.core.engines.EngineSpec` through
+the engine registry. Restore after a crash
 runs the paper's recovery procedure first (flag-checked replay/flush), then
 reads the manifest — giving bit-exact resume (tested in
 tests/test_checkpoint.py).
@@ -20,8 +22,13 @@ import numpy as np
 
 from repro.core.api import NVCacheFS
 from repro.core.ckpt_backend import LogCheckpointBackend, PagedCheckpointBackend
+from repro.core.engines import EngineSpec, get_engine
 
 PyTree = Any
+
+# the paper's two design names map onto engines; any registered engine name
+# (e.g. "nvhybrid") is also accepted directly
+_DESIGN_ENGINES = {"paged": "nvpages", "log": "nvlog"}
 
 
 def _flatten(tree: PyTree) -> tuple[dict[str, np.ndarray], Any]:
@@ -36,17 +43,46 @@ def _tree_meta(blobs: dict[str, np.ndarray]) -> dict:
 
 
 class CheckpointManager:
-    def __init__(self, design: str = "log", *, nvmm_bytes: int = 1 << 30,
-                 snapshot_every: int = 8, fs: Optional[NVCacheFS] = None):
-        assert design in ("paged", "log")
-        self.design = design
-        self.fs = fs or NVCacheFS("nvpages" if design == "paged" else "nvlog",
-                                  nvmm_bytes=nvmm_bytes)
-        if design == "paged":
-            self.backend = PagedCheckpointBackend(self.fs)
+    _UNSET = object()
+
+    def __init__(self, design=_UNSET, *,
+                 nvmm_bytes: Optional[int] = None,
+                 snapshot_every: int = 8, fs: Optional[NVCacheFS] = None,
+                 spec: Optional[EngineSpec] = None):
+        # the backend follows ``design`` (or the engine name passed as
+        # design) OR an explicit ``spec`` — mixing the two is ambiguous;
+        # an explicit ``fs`` only supplies the filesystem, never the
+        # backend choice
+        if fs is not None and (spec is not None or nvmm_bytes is not None):
+            raise TypeError("an explicit fs already fixes the engine and "
+                            "its sizing; pass only design/snapshot_every "
+                            "alongside it")
+        if spec is not None:
+            if design is not self._UNSET:
+                raise TypeError("pass either design or spec, not both")
+            if nvmm_bytes is not None:
+                raise TypeError("pass nvmm_bytes inside the EngineSpec, "
+                                "not alongside it")
+            engine = spec.engine
         else:
+            design = "log" if design is self._UNSET else design
+            engine = _DESIGN_ENGINES.get(design, design)
+        get_engine(engine)      # typo'd design/engine fails loudly here
+        if fs is None:
+            if spec is None:
+                spec = EngineSpec(engine=engine,
+                                  nvmm_bytes=(1 << 30 if nvmm_bytes is None
+                                              else nvmm_bytes))
+            fs = NVCacheFS(spec)
+        self.fs = fs
+        # incremental (delta) saves ride on the logging engine; every other
+        # engine persists full snapshots
+        self.design = "log" if engine == "nvlog" else "paged"
+        if self.design == "log":
             self.backend = LogCheckpointBackend(
                 self.fs, snapshot_every=snapshot_every)
+        else:
+            self.backend = PagedCheckpointBackend(self.fs)
         self._meta_fd = self.fs.open("/ckpt/meta")
 
     # ------------------------------------------------------------------ save

@@ -1,11 +1,15 @@
-"""The paper's primary contribution: two NVMM cache designs (paging vs
-logging) as one library, plus their framework adapters (KV-cache tiering and
-checkpoint backends). See DESIGN.md §1-2."""
+"""The paper's primary contribution: NVMM cache designs (paging, logging,
+and their hybrid) as one library behind a pluggable engine registry, plus
+their framework adapters (KV-cache tiering and checkpoint backends). See
+DESIGN.md §1-2 and repro/core/engines/README.md."""
 from repro.core.api import NVCacheFS, ENGINES
 from repro.core.clock import SimClock
 from repro.core.disk import Disk, PAGE_SIZE
+from repro.core.engines import (CacheEngine, EngineSpec, create_engine,
+                                register_engine)
 from repro.core.nvlog import NVLog
 from repro.core.nvpages import NVPages
 
 __all__ = ["NVCacheFS", "ENGINES", "SimClock", "Disk", "PAGE_SIZE", "NVLog",
-           "NVPages"]
+           "NVPages", "CacheEngine", "EngineSpec", "create_engine",
+           "register_engine"]

@@ -60,11 +60,13 @@ class PagedCheckpointBackend(_Base):
 
     def save(self, step: int, state: dict[str, bytes]) -> float:
         t0 = self.fs.clock.now
+        iov = []
         for name, blob in state.items():
             off = self._alloc(name, len(blob))
-            self.fs.pwrite(self.fd, blob, off)
+            iov.append((off, blob))
             self.manifest["entries"][name] = {
                 "off": off, "size": len(blob), "step": step}
+        self.fs.pwritev(self.fd, iov)
         self.manifest["step"] = step
         self._write_manifest()
         self.fs.fsync(self.fd)
@@ -72,10 +74,11 @@ class PagedCheckpointBackend(_Base):
 
     def restore(self) -> tuple[int, dict[str, bytes]]:
         self.manifest = self._read_manifest()
-        out = {}
-        for name, ent in self.manifest["entries"].items():
-            out[name] = self.fs.pread(self.fd, ent["size"], ent["off"])
-        return self.manifest["step"], out
+        names = list(self.manifest["entries"])
+        blobs = self.fs.preadv(self.fd, [
+            (self.manifest["entries"][n]["off"],
+             self.manifest["entries"][n]["size"]) for n in names])
+        return self.manifest["step"], dict(zip(names, blobs))
 
 
 class LogCheckpointBackend(_Base):
@@ -95,21 +98,25 @@ class LogCheckpointBackend(_Base):
         self._saves += 1
         if self._saves % self.snapshot_every == 1 or "deltas" not in self.manifest:
             # cut a full snapshot; log restarts from here
+            iov = []
             for name, blob in state.items():
                 off = self._alloc(name, len(blob))
-                self.fs.pwrite(self.fd, blob, off)
+                iov.append((off, blob))
                 self.manifest["entries"][name] = {
                     "off": off, "size": len(blob), "step": step}
+            self.fs.pwritev(self.fd, iov)
             self.manifest["deltas"] = []
         else:
             names = changed if changed is not None else set(state)
+            iov = []
             delta = {}
             for name in sorted(names):
                 blob = state[name]
                 off = self.manifest["next_off"]
                 self.manifest["next_off"] = off + _align(len(blob))
-                self.fs.pwrite(self.fd, blob, off)
+                iov.append((off, blob))
                 delta[name] = [off, len(blob)]
+            self.fs.pwritev(self.fd, iov)
             self.manifest["deltas"].append([step, delta])
         self.manifest["step"] = step
         self._write_manifest()
@@ -118,10 +125,15 @@ class LogCheckpointBackend(_Base):
 
     def restore(self) -> tuple[int, dict[str, bytes]]:
         self.manifest = self._read_manifest()
-        out = {}
-        for name, ent in self.manifest["entries"].items():
-            out[name] = self.fs.pread(self.fd, ent["size"], ent["off"])
+        names = list(self.manifest["entries"])
+        blobs = self.fs.preadv(self.fd, [
+            (self.manifest["entries"][n]["off"],
+             self.manifest["entries"][n]["size"]) for n in names])
+        out = dict(zip(names, blobs))
         for step, delta in self.manifest.get("deltas", []):
-            for name, (off, size) in delta.items():
-                out[name] = self.fs.pread(self.fd, size, off)
+            items = list(delta.items())
+            blobs = self.fs.preadv(self.fd, [(off, size)
+                                             for _, (off, size) in items])
+            out.update({name: blob
+                        for (name, _), blob in zip(items, blobs)})
         return self.manifest["step"], out

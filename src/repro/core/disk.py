@@ -17,6 +17,20 @@ PAGE_SIZE = 4096
 _ZERO_PAGE = bytes(PAGE_SIZE)
 
 
+def iter_page_chunks(offset: int, length: int):
+    """Yield ``(pos, pno, in_page, n)`` page-granular chunks covering the
+    byte range ``[offset, offset+length)`` — the splitting every engine and
+    the LPC helpers share: ``pos`` is the chunk start relative to the range,
+    ``pno`` the page number, ``in_page`` the offset within it, ``n`` the
+    chunk length (a full page iff ``in_page == 0 and n == PAGE_SIZE``)."""
+    pos = 0
+    while pos < length:
+        pno, in_page = divmod(offset + pos, PAGE_SIZE)
+        n = min(PAGE_SIZE - in_page, length - pos)
+        yield pos, pno, in_page, n
+        pos += n
+
+
 class Disk:
     def __init__(self, clock: SimClock, lpc_capacity_pages: Optional[int] = None):
         self.clock = clock
@@ -99,13 +113,49 @@ class Disk:
         self.lpc_dirty.discard(pno)
         self.lpc_lru.remove(pno)
 
-    def fsync(self) -> None:
-        """Flush all dirty LPC pages to SSD + barrier latency."""
-        for pno in sorted(self.lpc_dirty):
+    def write_bytes(self, offset: int, data: bytes) -> int:
+        """Byte-granular buffered write through the LPC.
+
+        The page-granular read-modify-write loop shared by every
+        LPC-backed write path (the paper's psync reference): full-page
+        aligned chunks go straight in; partial chunks patch the page.
+        """
+        for pos, pno, in_page, n in iter_page_chunks(offset, len(data)):
+            if in_page == 0 and n == PAGE_SIZE:
+                self.write_page_lpc(pno, data[pos:pos + n])
+            else:
+                page = bytearray(self.read_page(pno))
+                page[in_page:in_page + n] = data[pos:pos + n]
+                self.write_page_lpc(pno, bytes(page))
+        return len(data)
+
+    def read_bytes(self, offset: int, n: int) -> bytes:
+        """Byte-granular read through the LPC (page-chunked)."""
+        out = bytearray()
+        for _, pno, in_page, take in iter_page_chunks(offset, n):
+            out += self.read_page(pno)[in_page:in_page + take]
+        return bytes(out)
+
+    def _flush_dirty(self, pnos: list[int]) -> None:
+        """Write back the given dirty pages + one fsync barrier."""
+        for pno in pnos:
             self.clock.charge(SSD, "write", PAGE_SIZE, random_access=True)
             self.ssd[pno] = bytes(self.lpc[pno])
-        self.lpc_dirty.clear()
+            self.lpc_dirty.discard(pno)
         self.clock.advance(SSD_FSYNC_LATENCY)
+
+    def fsync(self) -> None:
+        """Flush all dirty LPC pages to SSD + barrier latency."""
+        self._flush_dirty(sorted(self.lpc_dirty))
+
+    def fsync_range(self, lo_pno: int, hi_pno: int) -> None:
+        """Flush only dirty LPC pages with ``lo_pno <= pno < hi_pno``
+        (per-file sync: other files' un-synced pages stay volatile). A
+        clean range is free — closing a read-only file must not charge a
+        barrier (full ``fsync()`` keeps the seed's always-barrier model)."""
+        pnos = sorted(p for p in self.lpc_dirty if lo_pno <= p < hi_pno)
+        if pnos:
+            self._flush_dirty(pnos)
 
     # -- crash semantics ---------------------------------------------------------
     def crash(self) -> None:

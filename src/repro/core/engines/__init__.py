@@ -1,0 +1,30 @@
+"""Pluggable cache-engine package: protocol, registry, and the five designs.
+
+Importing this package registers every built-in engine; ``ENGINES`` is the
+registry-derived name tuple the facade, benchmarks, and examples enumerate.
+
+    from repro.core.engines import EngineSpec, create_engine, ENGINES
+
+See README.md in this directory for the protocol and how to add an engine.
+"""
+from repro.core.engines.base import (CacheEngine, EngineSpec, create_engine,
+                                     get_engine, list_engines,
+                                     register_engine)
+# importing the modules registers the engines (order = listing order)
+from repro.core.engines import paging      # noqa: F401  (nvpages)
+from repro.core.engines import logging     # noqa: F401  (nvlog)
+from repro.core.engines import psync       # noqa: F401  (psync, psync_fsync)
+from repro.core.engines import hybrid      # noqa: F401  (nvhybrid)
+from repro.core.engines.hybrid import HybridEngine
+from repro.core.engines.logging import LogEngine
+from repro.core.engines.paging import PagedEngine
+from repro.core.engines.psync import PsyncEngine, PsyncFsyncEngine
+
+#: built-in engine names, in registration order. This is an import-time
+#: snapshot for convenient parametrization; enumerators that must see
+#: engines registered later (plugins) call ``list_engines()`` at use time.
+ENGINES: tuple[str, ...] = list_engines()
+
+__all__ = ["CacheEngine", "EngineSpec", "ENGINES", "create_engine",
+           "get_engine", "list_engines", "register_engine", "HybridEngine",
+           "LogEngine", "PagedEngine", "PsyncEngine", "PsyncFsyncEngine"]

@@ -1,0 +1,30 @@
+"""Engine registry CLI.
+
+    PYTHONPATH=src python -m repro.core.engines --list
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.engines import get_engine, list_engines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.core.engines",
+        description="inspect the cache-engine registry")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered engines (the default and only "
+                         "action)")
+    ap.parse_args(argv)      # listing is the only mode; this rejects typos
+    for name in list_engines():
+        cls = get_engine(name)
+        # a docstring-less plugin class has __doc__ = None (not inherited)
+        doc = next(iter((cls.__doc__ or "").strip().splitlines()), "")
+        nvmm = "nvmm" if cls.uses_nvmm else "lpc "
+        print(f"{name:12s} [{nvmm}] {doc}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -22,7 +22,7 @@ from dataclasses import dataclass
 from typing import Optional
 
 from repro.core.clock import DrainQueue, SimClock
-from repro.core.disk import Disk, PAGE_SIZE
+from repro.core.disk import Disk, PAGE_SIZE, iter_page_chunks
 from repro.core.lru import LRUList
 from repro.core.wal import CircularWAL, LogRecord
 from repro.roofline.hw import DRAM, NVMM, SSD, SSD_FSYNC_LATENCY
@@ -66,6 +66,15 @@ class NVLog:
                       "patches_applied": 0, "stall_time": 0.0}
 
     # --------------------------------------------------------------- drainer
+    def _stall_until(self, t: float) -> None:
+        """Foreground blocks on the drainer: account the stall, jump the
+        clock, apply everything that finished by then."""
+        stall = max(0.0, t - self.clock.now)
+        if stall:
+            self.stats["stall_time"] += stall
+        self.clock.wait_until(t)
+        self._advance_drainer(self.clock.now)
+
     def _drain_service_time(self, sh: "_LogShard", pno: int) -> float:
         """Per-entry drain cost: submit to LPC + amortized batched fsync.
 
@@ -118,22 +127,14 @@ class NVLog:
 
     # -------------------------------------------------------------------- IO
     def pwrite(self, offset: int, data: bytes) -> int:
-        pos = 0
-        while pos < len(data):
-            pno = (offset + pos) // PAGE_SIZE
-            in_page = (offset + pos) % PAGE_SIZE
-            n = min(PAGE_SIZE - in_page, len(data) - pos)
+        for pos, pno, in_page, n in iter_page_chunks(offset, len(data)):
             chunk = data[pos:pos + n]
             sh = self.shards[pno % self.num_shards]
             rec_size = sh.wal.record_size(n)
             # stall if the log is full until the drainer frees space
             while sh.wal.free < rec_size:
                 assert sh.pending, "log full but nothing to drain"
-                t = sh.pending[0].finish_time
-                stall = max(0.0, t - self.clock.now)
-                self.stats["stall_time"] += stall
-                self.clock.wait_until(t)
-                self._advance_drainer(self.clock.now)
+                self._stall_until(sh.pending[0].finish_time)
             logical = sh.wal.head
             rec = sh.wal.append(offset + pos, chunk)
             self.clock.charge(NVMM, "write", rec_size, random_access=False)
@@ -154,7 +155,6 @@ class NVLog:
             elif in_page == 0 and n == PAGE_SIZE:
                 self.clock.charge(DRAM, "write", n)
                 self._dram_put(pno, bytearray(chunk))
-            pos += n
         self._advance_drainer(self.clock.now)
         return len(data)
 
@@ -174,11 +174,7 @@ class NVLog:
     def pread(self, offset: int, n: int) -> bytes:
         self._advance_drainer(self.clock.now)
         out = bytearray()
-        pos = 0
-        while pos < n:
-            pno = (offset + pos) // PAGE_SIZE
-            in_page = (offset + pos) % PAGE_SIZE
-            take = min(PAGE_SIZE - in_page, n - pos)
+        for _, pno, in_page, take in iter_page_chunks(offset, n):
             page = self.dram.get(pno)
             if page is not None:
                 # the paper's headline advantage: reads at DRAM bandwidth
@@ -191,11 +187,42 @@ class NVLog:
                 self.clock.charge(DRAM, "write", PAGE_SIZE)
                 self._dram_put(pno, page)
             out += page[in_page:in_page + take]
-            pos += take
         return bytes(out)
 
     def fsync(self) -> None:
         """No-op: pwrite is already durable at return (data is in the log)."""
+
+    def nvmm_capacity_bytes(self) -> int:
+        """NVMM actually provisioned: the shard WALs."""
+        return sum(sh.wal.capacity for sh in self.shards)
+
+    def nvmm_used_bytes(self) -> int:
+        """Live NVMM footprint: un-reclaimed WAL bytes across shards."""
+        return sum(sh.wal.used for sh in self.shards)
+
+    # ------------------------------------------------- hybrid-engine hooks
+    def has_pending(self, pno: int) -> bool:
+        """True if the drainer still owes disk some entries for ``pno``."""
+        return pno in self.needs_patch
+
+    def force_drain_page(self, pno: int) -> None:
+        """Stall until every pending entry for ``pno`` is applied to disk.
+
+        FIFO drain order means waiting for the page's newest entry drains
+        everything appended before it too — the ordering handover the
+        hybrid engine relies on (log drains before the page side takes
+        ownership of a page).
+        """
+        entries = self.needs_patch.get(pno)
+        if not entries:
+            return
+        self._stall_until(entries[-1].finish_time)
+
+    def invalidate(self, pno: int) -> None:
+        """Drop the DRAM-cached copy of ``pno`` (another engine component
+        took ownership of the page and will serve newer data)."""
+        if self.dram.pop(pno, None) is not None:
+            self.dram_lru.remove(pno)
 
     # -------------------------------------------------------- crash / recovery
     def drain_all(self) -> None:
@@ -217,9 +244,13 @@ class NVLog:
             sh.queue = DrainQueue()
         self.disk.crash()
 
-    def recover(self) -> None:
+    def recover(self, *, barrier: bool = True) -> None:
         """Replay every record still in the NVMM log to disk (paper §II:
-        'flushing to disk every modification still pending in cache')."""
+        'flushing to disk every modification still pending in cache').
+
+        ``barrier=False`` skips the terminal fsync — for composition (the
+        hybrid engine runs one shared barrier after its page flush instead
+        of paying SSD_FSYNC_LATENCY once per component)."""
         for sh in self.shards:
             records = sh.wal.recover_scan()
             for rec in records:
@@ -228,7 +259,8 @@ class NVLog:
                 self.disk.write_page_lpc(pno, bytes(
                     self._patched_base_for_recovery(pno, rec)))
             sh.wal.reclaim_to(sh.wal.head, sh.wal.next_seqno)
-        self.disk.fsync()
+        if barrier:
+            self.disk.fsync()
 
     def _patched_base_for_recovery(self, pno: int, rec: LogRecord) -> bytearray:
         base = bytearray(self.disk.read_page(pno))

@@ -17,7 +17,7 @@ from dataclasses import dataclass
 from typing import Optional
 
 from repro.core.clock import SimClock
-from repro.core.disk import Disk, PAGE_SIZE, _ZERO_PAGE
+from repro.core.disk import Disk, PAGE_SIZE, _ZERO_PAGE, iter_page_chunks
 from repro.core.lru import LRUList
 from repro.core.radix import RadixTree
 from repro.core.wal import CircularWAL
@@ -67,6 +67,21 @@ class NVPages:
     def _shard(self, pno: int) -> _Shard:
         return self.shards[pno % self.num_shards]
 
+    def is_resident(self, pno: int) -> bool:
+        """True if ``pno`` currently occupies an NVMM frame."""
+        return self._shard(pno).index.lookup(pno) is not None
+
+    def nvmm_capacity_bytes(self) -> int:
+        """NVMM actually provisioned: frame pools + redo logs (may round
+        below the requested budget)."""
+        return sum(sh.max_frames * PAGE_SIZE + sh.redo.capacity
+                   for sh in self.shards)
+
+    def nvmm_used_bytes(self) -> int:
+        """Live NVMM footprint: occupied frames + un-reclaimed redo bytes."""
+        return sum(len(sh.pool) * PAGE_SIZE + sh.redo.used
+                   for sh in self.shards)
+
     def _evict_one(self, sh: _Shard) -> None:
         victim = sh.lru.pop_lru()
         assert victim is not None, "evicting from empty LRU"
@@ -82,6 +97,7 @@ class NVPages:
                 self.disk.write_page_through(victim, data)
         sh.index.delete(victim)
         sh.headers.pop(frame.frame_id, None)
+        sh.pool.pop(frame.frame_id, None)
         sh.free_frames.append(frame.frame_id)
         self.stats["evictions"] += 1
 
@@ -114,11 +130,7 @@ class NVPages:
     # ------------------------------------------------------------------- IO
     def pwrite(self, offset: int, data: bytes) -> int:
         """Durable as soon as this returns (redo record persisted)."""
-        pos = 0
-        while pos < len(data):
-            pno = (offset + pos) // PAGE_SIZE
-            in_page = (offset + pos) % PAGE_SIZE
-            n = min(PAGE_SIZE - in_page, len(data) - pos)
+        for pos, pno, in_page, n in iter_page_chunks(offset, len(data)):
             chunk = data[pos:pos + n]
             sh = self._shard(pno)
             # 1. redo log append (sequential NVMM write)
@@ -142,16 +154,11 @@ class NVPages:
                 sh.headers[frame.frame_id] = (pno, True)
             # 3. applied → reclaim the redo record
             sh.redo.reclaim_to(sh.redo.head, sh.redo.next_seqno)
-            pos += n
         return len(data)
 
     def pread(self, offset: int, n: int) -> bytes:
         out = bytearray()
-        pos = 0
-        while pos < n:
-            pno = (offset + pos) // PAGE_SIZE
-            in_page = (offset + pos) % PAGE_SIZE
-            take = min(PAGE_SIZE - in_page, n - pos)
+        for _, pno, in_page, take in iter_page_chunks(offset, n):
             sh = self._shard(pno)
             frame: Optional[Frame] = sh.index.lookup(pno)
             if frame is None:
@@ -163,7 +170,6 @@ class NVPages:
             # bandwidth ≪ DRAM read bandwidth
             self.clock.charge(NVMM, "read", take)
             out += sh.pool[frame.frame_id][in_page:in_page + take]
-            pos += take
         return bytes(out)
 
     def fsync(self) -> None:
@@ -189,9 +195,10 @@ class NVPages:
             sh.lru = LRUList()
         self.disk.crash()
 
-    def recover(self) -> None:
-        """Rebuild the index from NVMM frame headers, replay redo-log
-        remnants, then flush every pending modification to disk (paper §II)."""
+    def remount(self) -> None:
+        """Rebuild the volatile index/LRU/free-list from the persistent
+        NVMM frame headers (the cheap half of recovery: no replay, no
+        flush — what a clean image still needs after power loss)."""
         for sh in self.shards:
             sh.free_frames = list(
                 set(range(sh.max_frames)) - set(sh.headers.keys()))
@@ -199,6 +206,12 @@ class NVPages:
                 self.clock.charge(NVMM, "read", 16)     # header scan
                 sh.index.insert(pno, Frame(fid, pno, dirty))
                 sh.lru.touch(pno)
+
+    def recover(self) -> None:
+        """Rebuild the index from NVMM frame headers, replay redo-log
+        remnants, then flush every pending modification to disk (paper §II)."""
+        self.remount()
+        for sh in self.shards:
             for _, rec in sh.redo.iter_from(sh.redo.tail):
                 pno = rec.offset // PAGE_SIZE
                 in_page = rec.offset % PAGE_SIZE

@@ -6,12 +6,17 @@ os.environ.pop("XLA_FLAGS", None)
 
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, settings
 
-settings.register_profile(
-    "repro", deadline=None,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
-settings.load_profile("repro")
+try:        # hypothesis is optional: property tests skip when it is absent
+    from hypothesis import HealthCheck, settings
+except ModuleNotFoundError:
+    pass
+else:
+    settings.register_profile(
+        "repro", deadline=None,
+        suppress_health_check=[HealthCheck.too_slow,
+                               HealthCheck.data_too_large])
+    settings.load_profile("repro")
 
 
 @pytest.fixture(scope="session")

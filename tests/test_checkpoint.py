@@ -53,6 +53,30 @@ def test_bit_exact_resume(design):
         float(metrics2["loss"]), abs=0)
 
 
+def test_design_arg_picks_backend_even_with_explicit_fs():
+    """An explicit fs supplies the filesystem; ``design`` still chooses
+    the backend (regression: design was silently ignored)."""
+    from repro.core import NVCacheFS
+    from repro.core.ckpt_backend import (LogCheckpointBackend,
+                                         PagedCheckpointBackend)
+    fs = NVCacheFS("nvpages", nvmm_bytes=16 << 20)
+    mgr = CheckpointManager("log", fs=fs)
+    assert isinstance(mgr.backend, LogCheckpointBackend)
+    assert mgr.design == "log" and mgr.fs is fs
+    mgr = CheckpointManager("nvhybrid", fs=fs)     # engine name as design
+    assert isinstance(mgr.backend, PagedCheckpointBackend)
+    with pytest.raises(ValueError, match="unknown cache engine"):
+        CheckpointManager("lgo", fs=fs)            # typo fails loudly
+    from repro.core import EngineSpec
+    with pytest.raises(TypeError, match="inside the EngineSpec"):
+        CheckpointManager(nvmm_bytes=1 << 28,
+                          spec=EngineSpec(engine="nvlog"))
+    with pytest.raises(TypeError, match="either design or spec"):
+        CheckpointManager("paged", spec=EngineSpec(engine="nvlog"))
+    with pytest.raises(TypeError, match="explicit fs"):
+        CheckpointManager("log", nvmm_bytes=16 << 20, fs=fs)
+
+
 def test_log_design_delta_saves_are_cheaper():
     state, step_fn, ds = _setup()
     state, _ = _run(state, step_fn, ds, 0, 1)

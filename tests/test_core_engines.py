@@ -27,14 +27,14 @@ def _rand_ops(fs, fd, n_ops, file_bytes, seed=7, write_frac=0.5):
 
 
 @pytest.mark.parametrize("engine", ["nvpages", "nvlog", "psync",
-                                    "psync_fsync"])
+                                    "psync_fsync", "nvhybrid"])
 def test_read_after_write(engine):
     fs = NVCacheFS(engine, nvmm_bytes=1 << 20, dram_cache_bytes=1 << 18)
     fd = fs.open("/f")
     _rand_ops(fs, fd, 1500, 1 << 18)
 
 
-@pytest.mark.parametrize("engine", ["nvpages", "nvlog"])
+@pytest.mark.parametrize("engine", ["nvpages", "nvlog", "nvhybrid"])
 def test_crash_recovery_no_data_loss(engine):
     fs = NVCacheFS(engine, nvmm_bytes=1 << 20, dram_cache_bytes=1 << 17)
     fd = fs.open("/f")

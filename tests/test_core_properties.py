@@ -6,6 +6,9 @@ equals the oracle built from acked writes.
 """
 import random
 
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import NVCacheFS, PAGE_SIZE

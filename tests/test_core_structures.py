@@ -1,4 +1,7 @@
 """Radix tree + LRU list unit tests."""
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.core.lru import LRUList

@@ -1,0 +1,385 @@
+"""Engine registry, EngineSpec, protocol conformance, and the hybrid
+engine's crash→recover equivalence against its two parents."""
+import random
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.core import ENGINES, NVCacheFS, PAGE_SIZE
+from repro.core.engines import (CacheEngine, EngineSpec, create_engine,
+                                get_engine, list_engines, register_engine)
+
+ALL_ENGINES = ("nvpages", "nvlog", "psync", "psync_fsync", "nvhybrid")
+
+
+# ----------------------------------------------------------------- registry
+def test_engines_derived_from_registry():
+    assert ENGINES == list_engines()
+    assert set(ALL_ENGINES) == set(ENGINES)
+    for name in ENGINES:
+        assert issubclass(get_engine(name), CacheEngine)
+        assert get_engine(name).engine_name == name
+
+
+def test_unknown_engine_raises_value_error():
+    with pytest.raises(ValueError, match="unknown cache engine"):
+        NVCacheFS("nvtapes")
+    with pytest.raises(ValueError, match="nvtapes"):
+        get_engine("nvtapes")
+
+
+def test_register_engine_round_trip():
+    @register_engine("_test_engine")
+    class _TestEngine(get_engine("psync")):
+        pass
+    try:
+        assert "_test_engine" in list_engines()
+        fs = NVCacheFS("_test_engine")
+        fd = fs.open("/f")
+        fs.pwrite(fd, b"x" * 100, 5)
+        assert fs.pread(fd, 100, 5) == b"x" * 100
+        # the --list CLI must survive a docstring-less plugin class
+        from repro.core.engines.__main__ import main as engines_main
+        assert engines_main(["--list"]) == 0
+        # silently replacing a registered engine is refused
+        with pytest.raises(ValueError, match="already registered"):
+            register_engine("_test_engine")(_TestEngine)
+        register_engine("_test_engine", override=True)(_TestEngine)
+    finally:
+        from repro.core.engines.base import _REGISTRY
+        _REGISTRY.pop("_test_engine", None)
+
+
+def test_engine_spec_defaults():
+    spec = EngineSpec()
+    assert spec.engine == "nvlog"
+    assert spec.nvmm_bytes == 2 << 30
+    assert spec.dram_cache_bytes == 2 << 30
+    assert spec.shards == 1
+    assert spec.drain_batch == 64
+    assert spec.o_direct is False
+    assert spec.lpc_capacity_pages is None
+    assert 0 < spec.hybrid_threshold <= PAGE_SIZE
+    assert 0.0 < spec.hybrid_log_fraction < 1.0
+
+
+def test_facade_constructs_from_spec():
+    spec = EngineSpec(engine="nvpages", nvmm_bytes=1 << 20, shards=2)
+    fs = NVCacheFS(spec)
+    assert fs.engine == "nvpages" and fs.spec is spec
+    assert fs.cache.num_shards == 2
+    assert fs.cache.nvmm_capacity_bytes() == 1 << 20
+    # mixing a spec with engine kwargs is ambiguous → loud failure, even
+    # when the kwarg happens to equal its default value
+    with pytest.raises(TypeError, match="inside the EngineSpec"):
+        NVCacheFS(spec, nvmm_bytes=2 << 20)
+    with pytest.raises(TypeError, match="shards"):
+        NVCacheFS(spec, shards=1)
+
+
+# -------------------------------------------------------------- conformance
+@pytest.mark.parametrize("engine", ALL_ENGINES)
+def test_engine_conformance_round_trip(engine):
+    """The shared contract: write/read, fsync, crash, recover — fsync'd
+    data survives on every engine; un-synced data survives iff the engine
+    persists at pwrite-return."""
+    fs = NVCacheFS(EngineSpec(engine=engine, nvmm_bytes=1 << 20,
+                              dram_cache_bytes=1 << 18))
+    fd = fs.open("/f")
+    fs.pwrite(fd, b"\xAA" * PAGE_SIZE, 0)
+    fs.pwrite(fd, b"tiny", PAGE_SIZE + 17)            # sub-page write
+    assert fs.pread(fd, PAGE_SIZE, 0) == b"\xAA" * PAGE_SIZE
+    assert fs.pread(fd, 4, PAGE_SIZE + 17) == b"tiny"
+    fs.fsync(fd)
+    fs.pwrite(fd, b"\xBB" * 64, 2 * PAGE_SIZE)        # never fsync'd
+    fs.crash()
+    fs.recover()
+    fd = fs.open("/f")
+    assert fs.pread(fd, PAGE_SIZE, 0) == b"\xAA" * PAGE_SIZE
+    assert fs.pread(fd, 4, PAGE_SIZE + 17) == b"tiny"
+    durable_at_return = fs.cache.uses_nvmm or engine == "psync_fsync"
+    want = b"\xBB" * 64 if durable_at_return else b"\x00" * 64
+    assert fs.pread(fd, 64, 2 * PAGE_SIZE) == want
+
+
+@pytest.mark.parametrize("engine", ALL_ENGINES)
+def test_vectorized_iov_round_trip(engine):
+    fs = NVCacheFS(EngineSpec(engine=engine, nvmm_bytes=1 << 20,
+                              dram_cache_bytes=1 << 18))
+    fd = fs.open("/f")
+    iov = [(1000 * i, bytes([i]) * (i + 1)) for i in range(20)]
+    assert fs.pwritev(fd, iov) == sum(len(d) for _, d in iov)
+    got = fs.preadv(fd, [(off, len(d)) for off, d in iov])
+    assert got == [d for _, d in iov]
+
+
+def test_capacity_accounting():
+    for engine in ("nvpages", "nvlog", "nvhybrid"):
+        fs = NVCacheFS(EngineSpec(engine=engine, nvmm_bytes=1 << 20,
+                                  dram_cache_bytes=1 << 18))
+        fd = fs.open("/f")
+        cap = fs.cache.nvmm_capacity_bytes()
+        assert 0 < cap <= 1 << 20
+        fs.pwrite(fd, b"\x77" * PAGE_SIZE, 0)
+        s = fs.stats()
+        assert 0 <= s["nvmm_used_bytes"] <= cap == s["nvmm_capacity_bytes"]
+
+
+def test_io_range_must_fit_file_span():
+    """Regression: a multi-byte IO ending past the 2^36 span must be
+    rejected, not silently spill into the next file's address space."""
+    fs = NVCacheFS("psync")
+    fa = fs.open("/a")
+    fs.open("/b")
+    with pytest.raises(AssertionError, match="file span"):
+        fs.pwrite(fa, b"x" * 100, (1 << 36) - 4)
+    with pytest.raises(AssertionError, match="file span"):
+        fs.pread(fa, 100, (1 << 36) - 4)
+    with pytest.raises(AssertionError, match="file span"):
+        fs.pwritev(fa, [((1 << 36) - 4, b"x" * 100)])
+
+
+def test_hybrid_never_overcommits_small_budgets():
+    """The journal/pool split must partition the budget, not exceed it,
+    even where the 64 KiB journal floor kicks in."""
+    for nvmm in (128 << 10, 256 << 10, 1 << 20):
+        fs = NVCacheFS(EngineSpec(engine="nvhybrid", nvmm_bytes=nvmm,
+                                  dram_cache_bytes=1 << 17))
+        assert fs.cache.nvmm_capacity_bytes() == nvmm
+
+
+# ----------------------------------------------------- hybrid vs its parents
+def _mixed_ops(fs, fd, n_ops, file_bytes, seed):
+    """Mixed write sizes: tiny records, mid-size, and full aligned pages."""
+    rng = random.Random(seed)
+    oracle = {}
+    for _ in range(n_ops):
+        kind = rng.random()
+        if kind < 0.4:                                    # small record
+            off = rng.randrange(0, file_bytes - 64)
+            data = bytes([rng.randrange(256)]) * rng.randrange(1, 64)
+        elif kind < 0.6:                                  # mid-size write
+            off = rng.randrange(0, file_bytes - 3000)
+            data = bytes([rng.randrange(256)]) * rng.randrange(1024, 3000)
+        else:                                             # full aligned page
+            off = rng.randrange(0, file_bytes // PAGE_SIZE) * PAGE_SIZE
+            data = bytes([rng.randrange(256)]) * PAGE_SIZE
+        fs.pwrite(fd, data, off)
+        for j, b in enumerate(data):
+            oracle[off + j] = b
+        if rng.random() < 0.3:
+            off = rng.randrange(0, file_bytes - 256)
+            got = fs.pread(fd, 256, off)
+            want = bytes(oracle.get(off + j, 0) for j in range(256))
+            assert got == want
+    return oracle
+
+
+@pytest.mark.parametrize("seed", [1, 2, 3])
+def test_hybrid_crash_recover_matches_nvlog_and_nvpages(seed):
+    """On the same mixed-size op stream, nvhybrid must recover to exactly
+    the state nvlog and nvpages recover to (all equal the oracle)."""
+    file_bytes = 1 << 18
+    images = {}
+    for engine in ("nvhybrid", "nvlog", "nvpages"):
+        fs = NVCacheFS(EngineSpec(engine=engine, nvmm_bytes=1 << 20,
+                                  dram_cache_bytes=1 << 17))
+        fd = fs.open("/f")
+        oracle = _mixed_ops(fs, fd, 400, file_bytes, seed)
+        fs.crash()
+        fs.recover()
+        fd = fs.open("/f")
+        img = b"".join(fs.pread(fd, PAGE_SIZE, off)
+                       for off in range(0, file_bytes, PAGE_SIZE))
+        want = bytes(oracle.get(j, 0) for j in range(file_bytes))
+        assert img == want, f"{engine} diverged from the acked-write oracle"
+        images[engine] = img
+    assert images["nvhybrid"] == images["nvlog"] == images["nvpages"]
+
+
+def test_hybrid_routes_by_size():
+    fs = NVCacheFS(EngineSpec(engine="nvhybrid", nvmm_bytes=2 << 20,
+                              dram_cache_bytes=1 << 18))
+    fd = fs.open("/f")
+    for i in range(32):
+        fs.pwrite(fd, b"s" * 32, 3 * PAGE_SIZE * i + 7)   # small → journal
+    for i in range(32):
+        fs.pwrite(fd, b"L" * PAGE_SIZE, (100 + i) * PAGE_SIZE)  # → pages
+    s = fs.stats()
+    assert s["routed_log"] == 32
+    assert s["routed_pages"] == 32
+    assert s["log_log_appends"] == 32
+    assert s["pages_nvmm_page_writes"] >= 32
+
+
+def test_hybrid_page_takeover_preserves_journal_data():
+    """A large write to a journal-owned page must drain the journal first
+    (log before pages — the unified recovery ordering)."""
+    fs = NVCacheFS(EngineSpec(engine="nvhybrid", nvmm_bytes=1 << 20,
+                              dram_cache_bytes=1 << 17))
+    fd = fs.open("/f")
+    fs.pwrite(fd, b"abc", 10)                  # journal owns page 0
+    fs.pwrite(fd, b"Z" * PAGE_SIZE, 0)         # pages takes over page 0
+    assert fs.stats()["page_takeovers"] == 1
+    # the full-page write supersedes the record; both must be crash-safe
+    fs.pwrite(fd, b"tail", PAGE_SIZE + 5)      # journal owns page 1
+    fs.crash()
+    fs.recover()
+    fd = fs.open("/f")
+    assert fs.pread(fd, PAGE_SIZE, 0) == b"Z" * PAGE_SIZE
+    assert fs.pread(fd, 4, PAGE_SIZE + 5) == b"tail"
+
+
+# ------------------------------------------------- facade lifecycle fixes
+def test_open_after_unload_rearms_nvmm_flag():
+    """Regression: unload() left nvmm_flag 0 forever, so a crash after
+    re-open skipped recovery and lost acked writes."""
+    fs = NVCacheFS(EngineSpec(engine="nvlog", nvmm_bytes=1 << 20,
+                              dram_cache_bytes=1 << 17))
+    fd = fs.open("/f")
+    fs.pwrite(fd, b"one", 0)
+    fs.unload()
+    assert fs.nvmm_flag == 0
+    fd = fs.open("/f")
+    assert fs.nvmm_flag == 1                   # re-armed
+    fs.pwrite(fd, b"two", PAGE_SIZE)
+    fs.crash()
+    fs.recover()
+    fd = fs.open("/f")
+    assert fs.pread(fd, 3, 0) == b"one"
+    assert fs.pread(fd, 3, PAGE_SIZE) == b"two"
+
+
+@pytest.mark.parametrize("engine", ["nvpages", "nvlog", "nvhybrid"])
+def test_recover_clean_image_remounts_usable_cache(engine):
+    """Regression: crash after a clean unload (flag==0) must still rebuild
+    the engine's volatile indices — a full NVPages cache previously died
+    with 'evicting from empty LRU' on the next write."""
+    fs = NVCacheFS(EngineSpec(engine=engine, nvmm_bytes=160 << 10,
+                              dram_cache_bytes=1 << 16))
+    fd = fs.open("/f")
+    for off in range(0, 256 << 10, PAGE_SIZE):     # overfill: force evicts
+        fs.pwrite(fd, bytes([off // PAGE_SIZE % 256]) * PAGE_SIZE, off)
+    fs.unload()
+    fs.crash()
+    fs.recover()
+    fd = fs.open("/f")
+    for off in range(0, 256 << 10, PAGE_SIZE):     # full write-over again
+        fs.pwrite(fd, b"\x9A" * PAGE_SIZE, off)
+    assert fs.pread(fd, 4, 0) == b"\x9A" * 4
+
+
+def test_nvpages_used_bytes_tracks_occupancy_not_high_water():
+    fs = NVCacheFS(EngineSpec(engine="nvpages", nvmm_bytes=160 << 10))
+    fd = fs.open("/f")
+    for off in range(0, 1 << 20, PAGE_SIZE):       # churn ≫ capacity
+        fs.pwrite(fd, b"\x3C" * PAGE_SIZE, off)
+    cache = fs.cache
+    assert cache.stats["evictions"] > 0
+    occupied = sum(sh.max_frames - len(sh.free_frames)
+                   for sh in cache.shards)
+    assert cache.nvmm_used_bytes() >= occupied * PAGE_SIZE
+    assert cache.nvmm_used_bytes() <= cache.nvmm_capacity_bytes()
+    pooled = sum(len(sh.pool) for sh in cache.shards)
+    assert pooled == occupied                      # evicted frames freed
+
+
+def test_write_on_stale_fd_after_unload_rearms_flag():
+    """Regression: fds stay valid across unload(); a write through one must
+    re-mark the image dirty or the next crash skips recovery."""
+    fs = NVCacheFS(EngineSpec(engine="nvlog", nvmm_bytes=1 << 20,
+                              dram_cache_bytes=1 << 17))
+    fd = fs.open("/f")
+    fs.unload()
+    assert fs.nvmm_flag == 0
+    fs.pwrite(fd, b"two", PAGE_SIZE)           # stale fd, no re-open
+    assert fs.nvmm_flag == 1
+    fs.crash()
+    fs.recover()
+    fd = fs.open("/f")
+    assert fs.pread(fd, 3, PAGE_SIZE) == b"two"
+
+
+def test_runtime_registered_engine_visible_to_enumerators():
+    """list_engines() is live: benches enumerate plugins registered after
+    import (ENGINES is only an import-time snapshot)."""
+    from benchmarks.fio_bench import resolve_engines
+    from benchmarks.recovery_bench import persistent_engines
+
+    @register_engine("_plug")
+    class _Plug(get_engine("nvlog")):
+        pass
+    try:
+        assert "_plug" in resolve_engines("all")
+        assert "_plug" in persistent_engines()
+        assert "_plug" not in ENGINES          # the snapshot stays built-in
+    finally:
+        from repro.core.engines.base import _REGISTRY
+        _REGISTRY.pop("_plug", None)
+
+
+def test_close_flushes_path_state():
+    """Last close of a path flushes it (close-to-open consistency): data
+    written then closed survives a crash even on the psync baseline."""
+    fs = NVCacheFS("psync")
+    fd = fs.open("/f")
+    fs.pwrite(fd, b"\xAA" * PAGE_SIZE, 0)
+    fs.close(fd)
+    fs.crash()
+    fs.recover()
+    fd = fs.open("/f")
+    assert fs.pread(fd, 4, 0) == b"\xAA" * 4
+
+
+def test_close_flush_is_scoped_to_the_closed_path():
+    """Closing /a must not durably flush /b's un-synced data as a side
+    effect — the psync baseline's 'no persistence until fsync' contract
+    holds per file."""
+    fs = NVCacheFS("psync")
+    fa = fs.open("/a")
+    fb = fs.open("/b")
+    fs.pwrite(fa, b"\xAA" * PAGE_SIZE, 0)
+    fs.pwrite(fb, b"\xBB" * PAGE_SIZE, 0)      # never fsync'd, stays open
+    fs.close(fa)                               # flushes /a only
+    fs.crash()
+    fs.recover()
+    fa, fb = fs.open("/a"), fs.open("/b")
+    assert fs.pread(fa, 4, 0) == b"\xAA" * 4   # closed file survived
+    assert fs.pread(fb, 4, 0) == b"\x00" * 4   # open un-synced file lost
+
+
+def test_fsync_is_per_file():
+    """POSIX fsync syncs one file: syncing /a must not persist /b."""
+    fs = NVCacheFS("psync")
+    fa, fb = fs.open("/a"), fs.open("/b")
+    fs.pwrite(fa, b"\xAA" * PAGE_SIZE, 0)
+    fs.pwrite(fb, b"\xBB" * PAGE_SIZE, 0)
+    fs.fsync(fa)
+    fs.crash()
+    fs.recover()
+    fa, fb = fs.open("/a"), fs.open("/b")
+    assert fs.pread(fa, 4, 0) == b"\xAA" * 4
+    assert fs.pread(fb, 4, 0) == b"\x00" * 4
+
+
+def test_close_keeps_other_fds_open():
+    fs = NVCacheFS("psync")
+    fd1 = fs.open("/f")
+    fd2 = fs.open("/f")
+    fs.close(fd1)                              # fd2 still references /f
+    fs.pwrite(fd2, b"live", 0)
+    assert fs.pread(fd2, 4, 0) == b"live"
+
+
+# ------------------------------------------------------------ CLI entry point
+def test_engines_list_entry_point():
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.core.engines", "--list"],
+        capture_output=True, text=True, env={"PYTHONPATH": src},
+        timeout=120)
+    assert proc.returncode == 0, proc.stderr
+    for name in ALL_ENGINES:
+        assert name in proc.stdout
