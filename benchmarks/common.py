@@ -1,5 +1,7 @@
-"""Shared benchmark utilities: workload generator matching the paper's FIO
-setup (random 4 KiB IOs over a file, four R/W mixes, uniform + Zipf 95/5)."""
+"""Shared benchmark utilities: the paper's FIO workloads (random 4 KiB IOs
+over a file, four R/W mixes, uniform + Zipf 95/5) and the serving-side KV
+append workloads (decode singles vs prefill bursts) used by kvcache_bench
+and the KV-engine tests."""
 from __future__ import annotations
 
 import time
@@ -86,3 +88,54 @@ def run_workload(fs, wl: Workload, payload: bytes = b"\xA5" * PAGE,
         else:
             fs.pwrite(fd, payload, off)
     return fs.simulated_time - t_sim0, time.perf_counter() - t_wall0
+
+
+# --------------------------------------------------------------------------
+# KV-cache tier workloads (DESIGN.md §2a): what the serving engine actually
+# generates — per-sequence prefill bursts (one large batched append) followed
+# by single-token decode appends with periodic full-history gathers.
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class KVWorkload:
+    name: str
+    seqs: int = 4
+    prefill_tokens: int = 0   # batched append per sequence before decoding
+    decode_tokens: int = 512  # single-token appends per sequence
+    gather_every: int = 64    # full-history gather cadence (0 = never)
+    seed: int = 0
+
+
+def kv_workloads(decode_tokens: int = 512) -> list[KVWorkload]:
+    """The three append mixes the adaptive router must cover: pure decode
+    (small appends), prefill-heavy (large appends), and the serving mix."""
+    return [
+        KVWorkload("decode", prefill_tokens=0, decode_tokens=decode_tokens),
+        KVWorkload("prefill", prefill_tokens=max(decode_tokens, 64),
+                   decode_tokens=max(decode_tokens // 8, 16)),
+        KVWorkload("mixed", prefill_tokens=max(decode_tokens // 4, 32),
+                   decode_tokens=decode_tokens),
+    ]
+
+
+def run_kv_workload(kv, kvspec, wl: KVWorkload) -> int:
+    """Drive one KV workload against a KVCacheEngine; returns the number of
+    tokens appended (for amplification math)."""
+    rng = np.random.default_rng(wl.seed)
+    shape = (kvspec.num_layers, 2, kvspec.kv_heads, kvspec.head_dim)
+    total = 0
+    if wl.prefill_tokens:
+        for s in range(wl.seqs):
+            burst = rng.standard_normal(
+                (kvspec.num_layers, 2, wl.prefill_tokens,
+                 kvspec.kv_heads, kvspec.head_dim)).astype(kvspec.dtype)
+            kv.append(s, burst)
+            total += wl.prefill_tokens
+    for t in range(wl.decode_tokens):
+        for s in range(wl.seqs):
+            kv.append(s, rng.standard_normal(shape).astype(kvspec.dtype))
+            total += 1
+        if wl.gather_every and (t + 1) % wl.gather_every == 0:
+            for s in range(wl.seqs):
+                kv.read(s, layer=t % kvspec.num_layers)
+    return total

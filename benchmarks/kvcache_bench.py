@@ -1,54 +1,68 @@
 """KV-cache tiering benchmark (DESIGN.md §2a): the paper's comparison at the
-serving call-site. Decode-append + periodic full-history gathers, paged vs
-log design; reports simulated tier time, write amplification, DMA traffic.
+serving call-site, enumerated over the KV engine registry. Prefill bursts +
+decode appends + periodic full-history gathers per engine × workload;
+reports simulated tier time, write amplification, DMA traffic, and (for
+``kvhybrid``) the learned routing split.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 from pathlib import Path
 
-import numpy as np
-
+from benchmarks.common import kv_workloads, run_kv_workload
 from repro.core import SimClock
-from repro.core.kvcache import KVSpec, LogKVCache, PagedKVCache
+from repro.core.engines import EngineSpec, create_kv_engine, list_kv_engines
+from repro.core.kvcache import KVSpec
 
 
-def bench(design: str, *, layers=8, kv_heads=8, head_dim=128, tokens=512,
-          gather_every=64, seqs=4, seed=0) -> dict:
-    spec = KVSpec(num_layers=layers, kv_heads=kv_heads, head_dim=head_dim,
-                  page_tokens=16)
+def bench(engine: str, *, layers=8, kv_heads=8, head_dim=128, tokens=512,
+          workload="decode", drain_shards=1, seed=0) -> dict:
+    kvspec = KVSpec(num_layers=layers, kv_heads=kv_heads, head_dim=head_dim,
+                    page_tokens=16)
     clock = SimClock()
-    kv = (PagedKVCache(spec, clock, hbm_budget_bytes=2 << 20)
-          if design == "paged" else
-          LogKVCache(spec, clock, hot_window_tokens=128))
-    rng = np.random.default_rng(seed)
-    for t in range(tokens):
-        for s in range(seqs):
-            tok = rng.standard_normal(
-                (layers, 2, kv_heads, head_dim)).astype(np.float16)
-            kv.append(s, tok)
-        if (t + 1) % gather_every == 0:
-            for s in range(seqs):
-                kv.gather(s, layer=t % layers)
+    spec = EngineSpec(engine=engine, kv_hbm_bytes=2 << 20, kv_hot_window=128,
+                      drain_shards=drain_shards)
+    kv = create_kv_engine(spec, kvspec, clock)
+    by_name = {w.name: w for w in kv_workloads(tokens)}
+    if workload not in by_name:
+        raise ValueError(f"unknown workload {workload!r}; choose from "
+                         f"{', '.join(by_name)}")
+    wl = dataclasses.replace(by_name[workload], seed=seed)
+    appended = run_kv_workload(kv, kvspec, wl)
     host_w = clock.bytes_moved("host", "write")
     host_r = clock.bytes_moved("host", "read")
-    return {"design": design, "sim_time_s": clock.now,
+    return {"design": engine, "workload": wl.name,
+            "drain_shards": drain_shards, "sim_time_s": clock.now,
             "host_write_bytes": host_w, "host_read_bytes": host_r,
             "write_amplification": host_w / (
-                tokens * seqs * spec.token_bytes * layers),
-            **{k: v for k, v in kv.stats.items()}}
+                appended * kvspec.token_bytes * layers),
+            **kv.stats}
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--tokens", type=int, default=512)
+    ap.add_argument("--engines", default="all",
+                    help="comma-separated KV engine names, or 'all' to "
+                         "enumerate the registry")
+    ap.add_argument("--workloads", default="decode",
+                    help="comma-separated workload names "
+                         "(decode/prefill/mixed), or 'all'")
+    ap.add_argument("--drain-shards", type=int, default=1)
     ap.add_argument("--out", default="artifacts/kvcache_bench.json")
     args = ap.parse_args(argv)
-    rows = [bench(d, tokens=args.tokens) for d in ("paged", "log")]
-    print("design,sim_time_s,write_amp,host_read_MB")
+    engines = (list_kv_engines() if args.engines == "all"
+               else tuple(args.engines.split(",")))
+    wl_names = ([w.name for w in kv_workloads()] if args.workloads == "all"
+                else args.workloads.split(","))
+    rows = [bench(e, tokens=args.tokens, workload=w,
+                  drain_shards=args.drain_shards)
+            for w in wl_names for e in engines]
+    print("design,workload,sim_time_s,write_amp,host_read_MB")
     for r in rows:
-        print(f"{r['design']},{r['sim_time_s']:.4f},"
+        print(f"{r['design']},{r['workload']},{r['sim_time_s']:.4f},"
               f"{r['write_amplification']:.2f},"
               f"{r['host_read_bytes']/1e6:.1f}")
     out = Path(args.out)

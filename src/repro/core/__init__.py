@@ -5,11 +5,14 @@ DESIGN.md §1-2 and repro/core/engines/README.md."""
 from repro.core.api import NVCacheFS, ENGINES
 from repro.core.clock import SimClock
 from repro.core.disk import Disk, PAGE_SIZE
-from repro.core.engines import (CacheEngine, EngineSpec, create_engine,
-                                register_engine)
+from repro.core.engines import (CacheEngine, EngineSpec, KVCacheEngine,
+                                create_engine, create_kv_engine,
+                                list_kv_engines, register_engine,
+                                register_kv_engine)
 from repro.core.nvlog import NVLog
 from repro.core.nvpages import NVPages
 
 __all__ = ["NVCacheFS", "ENGINES", "SimClock", "Disk", "PAGE_SIZE", "NVLog",
            "NVPages", "CacheEngine", "EngineSpec", "create_engine",
-           "register_engine"]
+           "register_engine", "KVCacheEngine", "create_kv_engine",
+           "list_kv_engines", "register_kv_engine"]

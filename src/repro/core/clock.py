@@ -65,3 +65,43 @@ class DrainQueue:
         start = max(arrival, self.last_finish)
         self.last_finish = start + service
         return self.last_finish
+
+
+class ShardedDrainer:
+    """N independent :class:`DrainQueue` servers sharing one SimClock.
+
+    The per-shard drainer both cache tiers use (``NVLog`` shards its WAL by
+    page number, the hybrid KV cache shards its token log by sequence):
+    ``shard_of(key)`` hashes a key onto a shard, and each shard drains as an
+    independent FIFO server — backlog on one shard never delays another.
+    Within a shard, FIFO finish order is what the force-drain coherence rule
+    relies on: waiting for a page's (or sequence's) newest entry implies
+    every earlier entry of that shard has drained too.
+    """
+
+    def __init__(self, shards: int = 1):
+        assert shards >= 1, shards
+        self.queues = [DrainQueue() for _ in range(shards)]
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.queues)
+
+    def shard_of(self, key) -> int:
+        return hash(key) % len(self.queues)
+
+    def push(self, shard: int, arrival: float, service: float) -> float:
+        """Enqueue one unit of drain work on ``shard``; returns finish time."""
+        return self.queues[shard].push(arrival, service)
+
+    def last_finish(self, shard: int) -> float:
+        return self.queues[shard].last_finish
+
+    def idle_time(self) -> float:
+        """Time by which every shard's backlog has fully drained."""
+        return max(q.last_finish for q in self.queues)
+
+    def reset(self) -> None:
+        """Drop all queue state (crash: the drainer's backlog is volatile)."""
+        for q in self.queues:
+            q.last_finish = 0.0

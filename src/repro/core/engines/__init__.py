@@ -1,15 +1,24 @@
-"""Pluggable cache-engine package: protocol, registry, and the five designs.
+"""Pluggable cache-engine package: protocols, registries, and the designs.
 
-Importing this package registers every built-in engine; ``ENGINES`` is the
-registry-derived name tuple the facade, benchmarks, and examples enumerate.
+Two registries share one :class:`EngineSpec` config object:
+
+* the FS tier (``CacheEngine``: nvpages/nvlog/psync/psync_fsync/nvhybrid)
+  behind the ``NVCacheFS`` facade — importing this package registers them;
+* the KV-cache serving tier (``KVCacheEngine``: paged/log/kvhybrid) behind
+  the serving engine — built-ins register on first ``create_kv_engine`` /
+  ``list_kv_engines`` call (they live in :mod:`repro.core.kvcache`).
 
     from repro.core.engines import EngineSpec, create_engine, ENGINES
+    from repro.core.engines import create_kv_engine, list_kv_engines
 
-See README.md in this directory for the protocol and how to add an engine.
+See README.md in this directory for the protocols and how to add an engine.
 """
 from repro.core.engines.base import (CacheEngine, EngineSpec, create_engine,
                                      get_engine, list_engines,
                                      register_engine)
+from repro.core.engines.kv import (KVCacheEngine, create_kv_engine,
+                                   get_kv_engine, list_kv_engines,
+                                   register_kv_engine)
 # importing the modules registers the engines (order = listing order)
 from repro.core.engines import paging      # noqa: F401  (nvpages)
 from repro.core.engines import logging     # noqa: F401  (nvlog)
@@ -27,4 +36,6 @@ ENGINES: tuple[str, ...] = list_engines()
 
 __all__ = ["CacheEngine", "EngineSpec", "ENGINES", "create_engine",
            "get_engine", "list_engines", "register_engine", "HybridEngine",
-           "LogEngine", "PagedEngine", "PsyncEngine", "PsyncFsyncEngine"]
+           "LogEngine", "PagedEngine", "PsyncEngine", "PsyncFsyncEngine",
+           "KVCacheEngine", "create_kv_engine", "get_kv_engine",
+           "list_kv_engines", "register_kv_engine"]

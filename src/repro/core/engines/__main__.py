@@ -6,13 +6,14 @@ from __future__ import annotations
 
 import argparse
 
-from repro.core.engines import get_engine, list_engines
+from repro.core.engines import (get_engine, get_kv_engine, list_engines,
+                                list_kv_engines)
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="repro.core.engines",
-        description="inspect the cache-engine registry")
+        description="inspect the cache-engine registries (FS + KV tiers)")
     ap.add_argument("--list", action="store_true",
                     help="list registered engines (the default and only "
                          "action)")
@@ -23,6 +24,10 @@ def main(argv=None) -> int:
         doc = next(iter((cls.__doc__ or "").strip().splitlines()), "")
         nvmm = "nvmm" if cls.uses_nvmm else "lpc "
         print(f"{name:12s} [{nvmm}] {doc}")
+    for name in list_kv_engines():
+        cls = get_kv_engine(name)
+        doc = next(iter((cls.__doc__ or "").strip().splitlines()), "")
+        print(f"{name:12s} [kv  ] {doc}")
     return 0
 
 

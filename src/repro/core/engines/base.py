@@ -36,9 +36,17 @@ class EngineSpec:
     o_direct: bool = False
     lpc_capacity_pages: Optional[int] = None
     # nvhybrid routing: writes smaller than the threshold go to the journal
+    # (for kvhybrid this is the *initial* threshold the online policy adapts)
     hybrid_threshold: int = 2048
     # nvhybrid NVMM split: fraction given to the journal, rest to pages
     hybrid_log_fraction: float = 0.25
+    # per-shard drainer parallelism: independent FIFO drain servers for the
+    # log side of nvhybrid and for the log/kvhybrid KV engines
+    drain_shards: int = 1
+    # KV-cache tier budgets (only the KV engine registry reads these; they
+    # live here so serving configs and FS configs share one object)
+    kv_hbm_bytes: int = 64 << 20
+    kv_hot_window: int = 128
 
 
 class CacheEngine(abc.ABC):

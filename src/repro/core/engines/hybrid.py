@@ -40,18 +40,24 @@ class HybridEngine(CacheEngine):
     # so the single source of default values stays EngineSpec
     def __init__(self, disk: Disk, clock: SimClock, *, nvmm_bytes: int,
                  dram_cache_bytes: int, threshold: int, log_fraction: float,
-                 shards: int, drain_batch: int, o_direct: bool):
+                 shards: int, drain_batch: int, o_direct: bool,
+                 drain_shards: int = 1):
         assert 0.0 < log_fraction < 1.0, log_fraction
         assert nvmm_bytes >= 128 << 10, "nvhybrid needs >=128 KiB of NVMM"
+        assert drain_shards >= 1, drain_shards
         # split the budget, never exceed it: a 64 KiB journal floor, but
         # the page pool always keeps at least half
         log_bytes = min(max(int(nvmm_bytes * log_fraction), 64 << 10),
                         nvmm_bytes // 2)
         page_bytes = nvmm_bytes - log_bytes
         self.threshold = threshold
+        # journal drainer parallelism is its own knob: WAL shards are the
+        # drain shards (one independent FIFO server each, ShardedDrainer),
+        # while ``shards`` keeps governing the page pool's structure
         self.log = NVLog(log_bytes, disk, clock,
                          dram_cache_bytes=dram_cache_bytes,
-                         drain_batch=drain_batch, log_shards=shards)
+                         drain_batch=drain_batch,
+                         log_shards=max(shards, drain_shards))
         self.pages = NVPages(page_bytes, disk, clock, o_direct=o_direct,
                              shards=shards)
         self._stats = {"routed_log": 0, "routed_pages": 0,
@@ -65,7 +71,7 @@ class HybridEngine(CacheEngine):
                    threshold=spec.hybrid_threshold,
                    log_fraction=spec.hybrid_log_fraction,
                    shards=spec.shards, drain_batch=spec.drain_batch,
-                   o_direct=spec.o_direct)
+                   o_direct=spec.o_direct, drain_shards=spec.drain_shards)
 
     @property
     def stats(self) -> dict:

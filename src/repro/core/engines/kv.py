@@ -1,0 +1,139 @@
+"""KV-cache engine protocol and registry (serving tier of the paper).
+
+Mirror of the FS-level registry in :mod:`repro.core.engines.base`, one level
+up the stack: where ``CacheEngine`` abstracts NVMM cache designs behind a
+POSIX-like facade, ``KVCacheEngine`` abstracts the *serving* translation of
+the same question — how decoded KV tokens move between HBM, host memory,
+and disk. Both registries construct from the same :class:`EngineSpec`, so a
+serving config and an FS config are one object.
+
+``KVCacheEngine`` is the formal contract every tiered KV design implements:
+
+* ``append(seq, kv_tokens)`` — one decoded token ``(L, 2, K, D)`` or a
+  prefill batch ``(L, 2, T, K, D)``; durable in the host tier at return.
+* ``read(seq, layer)`` — materialize ``(2, T, K, D)`` for attention
+  (``gather`` is the historical alias and remains supported).
+* ``preempt(seq)`` / ``restore(seq)`` — offload a sequence's KV to disk and
+  bring it back (continuous batching under memory pressure).
+* ``stats`` — monotone counters merged into serving-engine stats.
+
+New designs register with ``@register_kv_engine("name")`` and are
+constructed via ``create_kv_engine(spec, kvspec, clock)``; unknown names
+raise ``ValueError``. The built-ins (``paged``, ``log``, ``kvhybrid``) live
+in :mod:`repro.core.kvcache` and are registered on first use.
+"""
+from __future__ import annotations
+
+import abc
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from repro.core.clock import SimClock
+from repro.core.engines.base import EngineSpec
+
+if TYPE_CHECKING:                      # avoid a cycle: kvcache imports us
+    from repro.core.kvcache import KVSpec
+
+
+class KVCacheEngine(abc.ABC):
+    """Abstract base for tiered KV-cache designs behind the serving engine."""
+
+    #: registry key, filled in by ``@register_kv_engine``
+    engine_name: str = "?"
+    #: per-engine counters (monotone); serving merges this into its stats
+    stats: dict
+    #: seq → appended-token count (the serving engine reads this)
+    seq_len: dict
+
+    @classmethod
+    @abc.abstractmethod
+    def from_spec(cls, spec: EngineSpec, kvspec: "KVSpec",
+                  clock: SimClock) -> "KVCacheEngine":
+        """Construct the engine from the shared config object.
+
+        ``spec`` carries budgets and routing knobs (``kv_hbm_bytes``,
+        ``kv_hot_window``, ``drain_batch``, ``drain_shards``,
+        ``hybrid_threshold``); ``kvspec`` carries the model geometry.
+        """
+
+    # ------------------------------------------------------------------- ops
+    @abc.abstractmethod
+    def append(self, seq: int, kv_tokens: np.ndarray) -> None:
+        """Append KV for ``seq``: ``(L, 2, K, D)`` one token, or
+        ``(L, 2, T, K, D)`` a batch of ``T`` consecutive tokens (prefill)."""
+
+    @abc.abstractmethod
+    def read(self, seq: int, layer: int) -> np.ndarray:
+        """Materialize ``(2, T, K, D)`` for attention over ``seq``."""
+
+    def gather(self, seq: int, layer: int) -> np.ndarray:
+        """Historical alias for :meth:`read`."""
+        return self.read(seq, layer)
+
+    @abc.abstractmethod
+    def preempt(self, seq: int) -> None:
+        """Offload ``seq``'s KV to disk and free its host/HBM state.
+        Reading or appending a preempted sequence raises ``RuntimeError``
+        until :meth:`restore`."""
+
+    @abc.abstractmethod
+    def restore(self, seq: int) -> None:
+        """Bring a preempted sequence back into the host tier."""
+
+
+_KV_REGISTRY: dict[str, type[KVCacheEngine]] = {}
+
+
+def register_kv_engine(name: str, *, override: bool = False):
+    """Class decorator: make a KV engine constructible by name.
+
+    Same duplicate-name guard as the FS registry: silently replacing a
+    built-in would corrupt every registry-driven construction site.
+    """
+    def deco(cls: type[KVCacheEngine]) -> type[KVCacheEngine]:
+        if not override and name in _KV_REGISTRY:
+            raise ValueError(
+                f"KV engine {name!r} is already registered "
+                f"({_KV_REGISTRY[name].__name__}); pass override=True to "
+                f"replace it")
+        cls.engine_name = name
+        _KV_REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+_builtins_loaded = False
+
+
+def _ensure_builtins() -> None:
+    # the built-in engines live in repro.core.kvcache, which imports this
+    # module for the protocol — register them lazily to avoid the cycle.
+    # Guarded by a flag, not registry emptiness: a plugin registering before
+    # first use must not suppress the built-ins.
+    global _builtins_loaded
+    if not _builtins_loaded:
+        import repro.core.kvcache  # noqa: F401  (registers paged/log/kvhybrid)
+        _builtins_loaded = True    # only after a successful import: a failed
+        # first attempt must retry, not hide the builtins forever
+
+
+def get_kv_engine(name: str) -> type[KVCacheEngine]:
+    _ensure_builtins()
+    try:
+        return _KV_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown KV engine {name!r}; registered KV engines: "
+            f"{', '.join(sorted(_KV_REGISTRY))}") from None
+
+
+def create_kv_engine(spec: EngineSpec, kvspec: "KVSpec",
+                     clock: SimClock) -> KVCacheEngine:
+    """Build the KV engine named by ``spec.engine``."""
+    return get_kv_engine(spec.engine).from_spec(spec, kvspec, clock)
+
+
+def list_kv_engines() -> tuple[str, ...]:
+    _ensure_builtins()
+    return tuple(_KV_REGISTRY)

@@ -16,7 +16,8 @@ class LogEngine(NVLog, CacheEngine):
                   clock: SimClock) -> "LogEngine":
         return cls(spec.nvmm_bytes, disk, clock,
                    dram_cache_bytes=spec.dram_cache_bytes,
-                   drain_batch=spec.drain_batch, log_shards=spec.shards)
+                   drain_batch=spec.drain_batch,
+                   log_shards=max(spec.shards, spec.drain_shards))
 
     def flush_all(self) -> None:
         self.drain_all()

@@ -1,31 +1,48 @@
-"""Tiered KV-cache for long-context serving: paged vs log (DESIGN.md §2a).
+"""Tiered KV-cache for long-context serving: paged vs log vs hybrid
+(DESIGN.md §2a).
 
 The TPU translation of the paper's question. Tiers: HBM (fast, small) ↔ host
 DRAM over PCIe (big, bandwidth-asymmetric) ↔ disk (preempted sequences).
+Every design is a :class:`repro.core.engines.kv.KVCacheEngine` plugin,
+constructed from the same :class:`~repro.core.engines.EngineSpec` the FS
+registry uses (``create_kv_engine(spec, kvspec, clock)``):
 
-* ``PagedKVCache``  (NVPages): fixed-size token pages live in a host pool; a
-  block table maps (seq, logical page) → physical page; an HBM LRU holds the
-  working set; appends go through a redo buffer then into the page (2×
-  write); misses DMA whole pages up. Attention over resident pages uses the
-  ``paged_attention`` Pallas kernel's block-table layout.
-* ``LogKVCache``  (NVLog): appends go to one sequential host log (1× write);
-  a per-sequence HBM hot-window holds the most recent tokens (the paper's
-  small DRAM cache); a background drainer compacts log segments into host
-  pages; cold reads patch pages from the log (``log_patch`` kernel layout).
+* ``paged``  (:class:`PagedKVCache`, NVPages): fixed-size token pages live
+  in a host pool; a block table maps (seq, logical page) → physical page; an
+  HBM LRU holds the working set; appends go through a redo buffer then into
+  the page (2× write); misses DMA whole pages up. Attention over resident
+  pages uses the ``paged_attention`` Pallas kernel's block-table layout.
+* ``log``  (:class:`LogKVCache`, NVLog): appends go to one sequential host
+  log (1× write); a per-sequence HBM hot-window holds the most recent tokens
+  (the paper's small DRAM cache); a background drainer compacts log segments
+  into host pages; cold reads patch pages from the log (``log_patch`` kernel
+  layout).
+* ``kvhybrid``  (:class:`HybridKVCache`): the serving twin of the FS
+  ``nvhybrid`` engine. Appends route adaptively — small appends (decode
+  tokens of hot sequences) take the log hot-window path, large appends
+  (prefill bursts, restores of long cold sequences) go straight to pages —
+  with the threshold learned online from the observed append-size/reuse
+  histogram (:class:`AdaptiveRouter`). The log drains through per-shard
+  parallel drainers (hash(seq) → shard, each shard an independent FIFO
+  server on the shared ``SimClock``), and a shard force-drains before the
+  page side takes ownership of a page — the same log-before-pages ordering
+  as ``nvhybrid``.
 
-Data movement is real (numpy); PCIe/HBM timing is modeled via SimClock.
+Data movement is real (numpy); PCIe/HBM/disk timing is modeled via SimClock.
 """
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np
 
-from repro.core.clock import DrainQueue, SimClock
+from repro.core.clock import ShardedDrainer, SimClock
+from repro.core.engines.base import EngineSpec
+from repro.core.engines.kv import KVCacheEngine, register_kv_engine
 from repro.core.lru import LRUList
-from repro.roofline.hw import TierSpec
+from repro.roofline.hw import SSD, TierSpec
 
 # PCIe gen4 x16-ish host link as seen from the device, and HBM for reference
 HOST_LINK = TierSpec("host", read_bw=16e9, write_bw=16e9,
@@ -57,21 +74,105 @@ class KVSpec:
                         self.dtype)
 
 
-class PagedKVCache:
+class _TieredKV(KVCacheEngine):
+    """Shared engine plumbing: batched appends, preempt/restore via the disk
+    tier, and the preempted-sequence guard. Engines implement
+    ``_append_tokens`` / ``_read`` / ``_drop_seq``."""
+
+    def __init__(self, spec: KVSpec, clock: SimClock):
+        self.spec = spec
+        self.clock = clock
+        self.seq_len: dict[int, int] = {}
+        self._preempted: dict[int, np.ndarray] = {}   # seq → (L, 2, T, K, D)
+        self.stats: dict = {"preempts": 0, "restores": 0,
+                            "preempt_out_bytes": 0, "restore_in_bytes": 0}
+
+    # hooks -----------------------------------------------------------------
+    def _append_tokens(self, seq: int, toks: list[np.ndarray]) -> None:
+        raise NotImplementedError
+
+    def _read(self, seq: int, layer: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def _drop_seq(self, seq: int) -> None:
+        raise NotImplementedError
+
+    def _spill(self, seq: int) -> np.ndarray:
+        """Materialize ``(L, 2, T, K, D)`` for preemption WITHOUT the read
+        path's side effects (no HBM LRU touches, DMA faults, or router
+        reuse feedback) — preempting must not pollute what stays resident."""
+        raise NotImplementedError
+
+    # protocol --------------------------------------------------------------
+    def _check_active(self, seq: int) -> None:
+        if seq in self._preempted:
+            raise RuntimeError(
+                f"sequence {seq} is preempted to disk; restore() it first")
+
+    def append(self, seq: int, kv_tokens: np.ndarray) -> None:
+        self._check_active(seq)
+        kv_tokens = np.asarray(kv_tokens)
+        if kv_tokens.ndim == 4:            # (L, 2, K, D): one decoded token
+            toks = [kv_tokens]
+        elif kv_tokens.ndim == 5:          # (L, 2, T, K, D): prefill burst
+            toks = [kv_tokens[:, :, t] for t in range(kv_tokens.shape[2])]
+        else:
+            raise ValueError(
+                f"kv_tokens must be (L, 2, K, D) or (L, 2, T, K, D); got "
+                f"shape {kv_tokens.shape}")
+        if toks:
+            self._append_tokens(seq, toks)
+
+    def read(self, seq: int, layer: int) -> np.ndarray:
+        self._check_active(seq)
+        return self._read(seq, layer)
+
+    def preempt(self, seq: int) -> None:
+        self._check_active(seq)
+        blob = self._spill(seq)
+        # sequential drain of the whole sequence out of the host tier and
+        # onto the disk tier (one streamed copy, no random faults)
+        self.clock.charge(HOST_LINK, "read", blob.nbytes, random_access=False)
+        self.clock.charge(SSD, "write", blob.nbytes, random_access=False)
+        self._drop_seq(seq)
+        self.seq_len.pop(seq, None)
+        self._preempted[seq] = blob
+        self.stats["preempts"] += 1
+        self.stats["preempt_out_bytes"] += blob.nbytes
+
+    def restore(self, seq: int) -> None:
+        blob = self._preempted.pop(seq, None)
+        if blob is None:
+            raise RuntimeError(f"sequence {seq} is not preempted")
+        self.clock.charge(SSD, "read", blob.nbytes, random_access=False)
+        self.stats["restores"] += 1
+        self.stats["restore_in_bytes"] += blob.nbytes
+        toks = [blob[:, :, t] for t in range(blob.shape[2])]
+        if toks:
+            # restore re-enters through the append path: one large batch —
+            # under kvhybrid a long cold sequence lands on the page side
+            self._append_tokens(seq, toks)
+
+
+@register_kv_engine("paged")
+class PagedKVCache(_TieredKV):
     """NVPages design over (layer, seq) KV pages."""
 
     def __init__(self, spec: KVSpec, clock: SimClock, *,
                  hbm_budget_bytes: int):
-        self.spec = spec
-        self.clock = clock
+        super().__init__(spec, clock)
         self.pool: dict[tuple, np.ndarray] = {}      # (layer, phys) → page
         self.block_table: dict[int, list[int]] = {}  # seq → [phys per logical]
-        self.seq_len: dict[int, int] = {}
         self.hbm_lru = LRUList()                     # (layer, phys) resident
         self.hbm_capacity = max(hbm_budget_bytes // spec.page_bytes, 1)
         self.next_phys = 0
-        self.stats = {"hbm_hits": 0, "hbm_misses": 0, "dma_up_bytes": 0,
-                      "host_writes": 0, "redo_bytes": 0}
+        self.stats.update({"hbm_hits": 0, "hbm_misses": 0, "dma_up_bytes": 0,
+                           "host_writes": 0, "redo_bytes": 0})
+
+    @classmethod
+    def from_spec(cls, spec: EngineSpec, kvspec: KVSpec,
+                  clock: SimClock) -> "PagedKVCache":
+        return cls(kvspec, clock, hbm_budget_bytes=spec.kv_hbm_bytes)
 
     def _ensure_resident(self, layer: int, phys: int) -> None:
         key = (layer, phys)
@@ -88,31 +189,31 @@ class PagedKVCache:
         self.stats["dma_up_bytes"] += self.spec.page_bytes
         self.hbm_lru.touch(key)
 
-    def append(self, seq: int, kv_token: np.ndarray) -> None:
-        """kv_token: (layers, 2, kv_heads, head_dim) — one decoded token."""
+    def _append_tokens(self, seq: int, toks: list[np.ndarray]) -> None:
         spec = self.spec
-        pos = self.seq_len.get(seq, 0)
-        logical = pos // spec.page_tokens
-        slot = pos % spec.page_tokens
-        table = self.block_table.setdefault(seq, [])
-        if logical >= len(table):
-            table.append(self.next_phys)
-            self.next_phys += 1
+        for kv_token in toks:
+            pos = self.seq_len.get(seq, 0)
+            logical = pos // spec.page_tokens
+            slot = pos % spec.page_tokens
+            table = self.block_table.setdefault(seq, [])
+            if logical >= len(table):
+                table.append(self.next_phys)
+                self.next_phys += 1
+                for layer in range(spec.num_layers):
+                    self.pool[(layer, table[logical])] = spec.empty_page()
+            phys = table[logical]
             for layer in range(spec.num_layers):
-                self.pool[(layer, table[logical])] = spec.empty_page()
-        phys = table[logical]
-        for layer in range(spec.num_layers):
-            # redo-buffer write then page write: the paging design's 2× write
-            self.clock.charge(HOST_LINK, "write", spec.token_bytes,
-                              random_access=False)           # redo append
-            self.stats["redo_bytes"] += spec.token_bytes
-            self.clock.charge(HOST_LINK, "write", spec.token_bytes,
-                              random_access=True)            # into the page
-            self.stats["host_writes"] += 1
-            self.pool[(layer, phys)][:, slot] = kv_token[layer]
-        self.seq_len[seq] = pos + 1
+                # redo-buffer write then page write: the paging design's 2×
+                self.clock.charge(HOST_LINK, "write", spec.token_bytes,
+                                  random_access=False)       # redo append
+                self.stats["redo_bytes"] += spec.token_bytes
+                self.clock.charge(HOST_LINK, "write", spec.token_bytes,
+                                  random_access=True)        # into the page
+                self.stats["host_writes"] += 1
+                self.pool[(layer, phys)][:, slot] = kv_token[layer]
+            self.seq_len[seq] = pos + 1
 
-    def gather(self, seq: int, layer: int) -> np.ndarray:
+    def _read(self, seq: int, layer: int) -> np.ndarray:
         """Materialize (2, T, kv_heads, head_dim) for attention; pages are
         DMA'd to HBM on miss (block-table indirection)."""
         spec = self.spec
@@ -129,63 +230,163 @@ class PagedKVCache:
             self.clock.charge(HBM, "read", (hi - lo) * spec.token_bytes)
         return out
 
+    def _spill(self, seq: int) -> np.ndarray:
+        spec = self.spec
+        T = self.seq_len.get(seq, 0)
+        blob = np.zeros((spec.num_layers, 2, T, spec.kv_heads,
+                         spec.head_dim), spec.dtype)
+        for logical, phys in enumerate(self.block_table.get(seq, [])):
+            lo = logical * spec.page_tokens
+            hi = min(lo + spec.page_tokens, T)
+            if lo >= T:
+                break
+            for layer in range(spec.num_layers):
+                blob[layer, :, lo:hi] = self.pool[(layer, phys)][:, :hi - lo]
+        return blob
 
-class LogKVCache:
-    """NVLog design: sequential host log + HBM hot window + drain/compact."""
+    def _drop_seq(self, seq: int) -> None:
+        for phys in self.block_table.pop(seq, []):
+            for layer in range(self.spec.num_layers):
+                self.pool.pop((layer, phys), None)
+                self.hbm_lru.remove((layer, phys))
+
+
+class _DrainingKV(_TieredKV):
+    """Shared log/drain machinery for the log-structured designs.
+
+    Appends go to a sequential host log (1× write) whose entries drain into
+    compacted host pages through :class:`ShardedDrainer` — per-shard pending
+    queues (``hash(seq) → shard``), each an independent FIFO server, so
+    backlog on one shard never delays another. A per-sequence HBM hot
+    window serves recent tokens; cold reads come from the compacted pages,
+    patched from undrained log entries (the ``log_patch`` kernel's layout).
+    """
 
     def __init__(self, spec: KVSpec, clock: SimClock, *,
-                 hot_window_tokens: int = 256, drain_batch: int = 32):
-        self.spec = spec
-        self.clock = clock
+                 hot_window_tokens: int, drain_batch: int, drain_shards: int,
+                 hbm_budget_bytes: Optional[int] = None):
+        super().__init__(spec, clock)
         self.hot_window = hot_window_tokens
+        # the hot windows are the engine's HBM use: bound their TOTAL across
+        # sequences to the budget (None = unbounded, the legacy behavior of
+        # the direct constructors)
+        per_token = spec.token_bytes * spec.num_layers
+        self._hot_budget_tokens = (None if hbm_budget_bytes is None
+                                   else max(hbm_budget_bytes // per_token, 1))
+        self._hot_total = 0
         self.drain_batch = drain_batch
-        self.queue = DrainQueue()
-        # the sequential log: list of (seq, pos, kv_token) + drain finish time
-        self.log: deque = deque()
-        # compacted host pages: (seq, layer, logical) → page
-        self.pages: dict[tuple, np.ndarray] = {}
+        self.drainer = ShardedDrainer(drain_shards)
+        # per-shard pending log entries: (seq, pos, kv_token, finish)
+        self.shard_log: list[deque] = [deque() for _ in range(drain_shards)]
+        self._seq_pending: dict[int, int] = {}   # seq → undrained entries
+        # compacted host pages, indexed per sequence so preempting one
+        # sequence never scans the others: seq → (layer, logical) → page
+        self.pages: dict[int, dict[tuple, np.ndarray]] = {}
         # per-sequence HBM hot window (most recent tokens, all layers)
         self.hot: dict[int, deque] = {}
-        self.seq_len: dict[int, int] = {}
-        self.stats = {"log_appends": 0, "patches": 0, "hot_hits": 0,
-                      "host_reads": 0, "drained": 0}
+        self.stats.update({"log_appends": 0, "patches": 0, "hot_hits": 0,
+                           "host_reads": 0, "host_writes": 0, "drained": 0,
+                           "stall_time": 0.0})
 
+    def pending_for(self, seq: int) -> int:
+        """Undrained log entries for ``seq`` (0 after a force-drain)."""
+        return self._seq_pending.get(seq, 0)
+
+    # ---------------------------------------------------------------- drain
     def _drain_service(self) -> float:
         b = self.spec.token_bytes * self.spec.num_layers
         return HOST_LINK.write_latency / self.drain_batch + b / HOST_LINK.write_bw
 
-    def _advance(self, now: float) -> None:
+    def _apply(self, seq: int, pos: int, kv_token: np.ndarray) -> None:
         spec = self.spec
-        while self.log and self.log[0][3] <= now:
-            seq, pos, kv_token, _ = self.log.popleft()
-            logical, slot = divmod(pos, spec.page_tokens)
-            for layer in range(spec.num_layers):
-                key = (seq, layer, logical)
-                page = self.pages.get(key)
-                if page is None:
-                    page = spec.empty_page()
-                    self.pages[key] = page
-                page[:, slot] = kv_token[layer]
-            self.stats["drained"] += 1
+        logical, slot = divmod(pos, spec.page_tokens)
+        seq_pages = self.pages.setdefault(seq, {})
+        for layer in range(spec.num_layers):
+            page = seq_pages.get((layer, logical))
+            if page is None:
+                page = spec.empty_page()
+                seq_pages[(layer, logical)] = page
+            page[:, slot] = kv_token[layer]
 
-    def append(self, seq: int, kv_token: np.ndarray) -> None:
-        spec = self.spec
-        pos = self.seq_len.get(seq, 0)
-        nbytes = spec.token_bytes * spec.num_layers
-        # one sequential log write — the logging design's 1× write
-        self.clock.charge(HOST_LINK, "write", nbytes, random_access=False)
-        finish = self.queue.push(self.clock.now, self._drain_service())
-        self.log.append((seq, pos, kv_token.copy(), finish))
-        self.stats["log_appends"] += 1
-        hot = self.hot.setdefault(seq, deque(maxlen=self.hot_window))
-        hot.append((pos, kv_token.copy()))
-        self.seq_len[seq] = pos + 1
+    def _advance(self, now: float) -> None:
+        """Functionally apply every entry whose drain finished by ``now``."""
+        for pending in self.shard_log:
+            while pending and pending[0][3] <= now:
+                seq, pos, kv_token, _ = pending.popleft()
+                self._apply(seq, pos, kv_token)
+                self._seq_pending[seq] -= 1
+                if not self._seq_pending[seq]:
+                    del self._seq_pending[seq]
+                self.stats["drained"] += 1
+
+    def _force_drain_seq(self, seq: int) -> None:
+        """Stall until every pending entry of ``seq`` has drained. FIFO
+        shard order means waiting for the sequence's newest entry drains
+        everything it appended earlier too; other shards keep their own
+        schedule."""
+        if not self._seq_pending.get(seq, 0):
+            return
+        pending = self.shard_log[self.drainer.shard_of(seq)]
+        finish = max(e[3] for e in pending if e[0] == seq)
+        stall = max(0.0, finish - self.clock.now)
+        if stall:
+            self.stats["stall_time"] += stall
+        self.clock.wait_until(finish)
         self._advance(self.clock.now)
 
-    def gather(self, seq: int, layer: int) -> np.ndarray:
+    # --------------------------------------------------------------- append
+    def _hot_push(self, seq: int, pos: int, kv_token: np.ndarray) -> None:
+        hot = self.hot.setdefault(seq, deque())
+        hot.append((pos, kv_token.copy()))
+        self._hot_total += 1
+        if len(hot) > self.hot_window:       # per-sequence recency window
+            hot.popleft()
+            self._hot_total -= 1
+        while (self._hot_budget_tokens is not None
+               and self._hot_total > self._hot_budget_tokens):
+            # global HBM budget: shrink the largest window first (evicted
+            # tokens stay readable through the cold pages/patch path)
+            victim = max(self.hot.values(), key=len)
+            victim.popleft()
+            self._hot_total -= 1
+
+    def _log_takes_page(self, seq: int, logical: int) -> None:
+        """Hook: the log (re)gains responsibility for a page (kvhybrid's
+        ownership bookkeeping)."""
+
+    def _log_owns(self, seq: int, logical: int) -> bool:
+        """Hook: may the log patch this page on read? Always true for the
+        pure log design; kvhybrid answers false for page-side-owned pages
+        (reads trust the page side once ownership transferred)."""
+        return True
+
+    def _append_log(self, seq: int, toks: list[np.ndarray]) -> None:
+        spec = self.spec
+        shard = self.drainer.shard_of(seq)
+        pending = self.shard_log[shard]
+        for kv_token in toks:
+            pos = self.seq_len.get(seq, 0)
+            nbytes = spec.token_bytes * spec.num_layers
+            # one sequential log write — the logging design's 1× write
+            self.clock.charge(HOST_LINK, "write", nbytes, random_access=False)
+            self.stats["host_writes"] += 1
+            finish = self.drainer.push(shard, self.clock.now,
+                                       self._drain_service())
+            pending.append((seq, pos, kv_token.copy(), finish))
+            self._seq_pending[seq] = self._seq_pending.get(seq, 0) + 1
+            self.stats["log_appends"] += 1
+            self._log_takes_page(seq, pos // spec.page_tokens)
+            self._hot_push(seq, pos, kv_token)
+            self.seq_len[seq] = pos + 1
+
+    # ----------------------------------------------------------------- read
+    def _observe_read(self, hot_tokens: int, cold_tokens: int) -> None:
+        """Hook: reuse feedback for the adaptive router (kvhybrid)."""
+
+    def _read(self, seq: int, layer: int) -> np.ndarray:
         """(2, T, kv_heads, head_dim): hot window from HBM; cold history from
         compacted pages, patched from the log where the drainer hasn't
-        caught up (the log_patch kernel's layout)."""
+        caught up."""
         spec = self.spec
         self._advance(self.clock.now)
         T = self.seq_len.get(seq, 0)
@@ -201,21 +402,263 @@ class LogKVCache:
                 HBM, "read", len(hot_positions) * spec.token_bytes)
         cold_T = min(T, min(hot_positions) if hot_positions else T)
         npages = -(-cold_T // spec.page_tokens) if cold_T else 0
+        seq_pages = self.pages.get(seq, {})
         for logical in range(npages):
             lo = logical * spec.page_tokens
             hi = min(lo + spec.page_tokens, cold_T)
-            page = self.pages.get((seq, layer, logical))
+            page = seq_pages.get((layer, logical))
             if page is not None:
+                # only existing compacted pages cost host traffic; a still-
+                # undrained page's tokens are charged by the patch loop below
                 out[:, lo:hi] = page[:, :hi - lo]
-            self.clock.charge(HOST_LINK, "read",
-                              (hi - lo) * spec.token_bytes,
-                              random_access=False)
-            self.stats["host_reads"] += 1
-        # patch undrained entries overlapping the cold range
-        for seq_i, pos, kv_token, _ in self.log:
-            if seq_i == seq and pos < cold_T and pos not in hot_positions:
+                self.clock.charge(HOST_LINK, "read",
+                                  (hi - lo) * spec.token_bytes,
+                                  random_access=False)
+                self.stats["host_reads"] += 1
+        # patch undrained log entries overlapping the cold range — the
+        # sequence's entries live only in its own shard (hash(seq) → shard),
+        # so other shards' backlogs are never scanned
+        pending = self.shard_log[self.drainer.shard_of(seq)]
+        for seq_i, pos, kv_token, _ in pending:
+            if (seq_i == seq and pos < cold_T and pos not in hot_positions
+                    and self._log_owns(seq, pos // spec.page_tokens)):
                 out[:, pos] = kv_token[layer]
                 self.clock.charge(HOST_LINK, "read", spec.token_bytes,
                                   random_access=True)
                 self.stats["patches"] += 1
+        self._observe_read(len(hot_positions), max(cold_T, 0))
         return out
+
+    def _spill(self, seq: int) -> np.ndarray:
+        spec = self.spec
+        T = self.seq_len.get(seq, 0)
+        blob = np.zeros((spec.num_layers, 2, T, spec.kv_heads,
+                         spec.head_dim), spec.dtype)
+        # compacted pages first, then undrained log entries on top (FIFO) —
+        # together they hold every appended token; the hot window is only a
+        # cache of the same data
+        for (layer, logical), page in self.pages.get(seq, {}).items():
+            lo = logical * spec.page_tokens
+            hi = min(lo + spec.page_tokens, T)
+            if lo < T:
+                blob[layer, :, lo:hi] = page[:, :hi - lo]
+        for seq_i, pos, kv_token, _ in self.shard_log[
+                self.drainer.shard_of(seq)]:
+            if seq_i == seq:
+                blob[:, :, pos] = kv_token
+        return blob
+
+    def _drop_seq(self, seq: int) -> None:
+        self._hot_total -= len(self.hot.pop(seq, ()))
+        self.pages.pop(seq, None)
+        if self._seq_pending.pop(seq, None):
+            shard = self.drainer.shard_of(seq)
+            self.shard_log[shard] = deque(
+                e for e in self.shard_log[shard] if e[0] != seq)
+
+
+@register_kv_engine("log")
+class LogKVCache(_DrainingKV):
+    """NVLog design: sequential host log + HBM hot window + drain/compact."""
+
+    def __init__(self, spec: KVSpec, clock: SimClock, *,
+                 hot_window_tokens: int = 256, drain_batch: int = 32,
+                 drain_shards: int = 1,
+                 hbm_budget_bytes: Optional[int] = None):
+        super().__init__(spec, clock, hot_window_tokens=hot_window_tokens,
+                         drain_batch=drain_batch, drain_shards=drain_shards,
+                         hbm_budget_bytes=hbm_budget_bytes)
+
+    @classmethod
+    def from_spec(cls, spec: EngineSpec, kvspec: KVSpec,
+                  clock: SimClock) -> "LogKVCache":
+        return cls(kvspec, clock, hot_window_tokens=spec.kv_hot_window,
+                   drain_batch=spec.drain_batch,
+                   drain_shards=spec.drain_shards,
+                   hbm_budget_bytes=spec.kv_hbm_bytes)
+
+    def _append_tokens(self, seq: int, toks: list[np.ndarray]) -> None:
+        self._append_log(seq, toks)
+        self._advance(self.clock.now)
+
+
+class AdaptiveRouter:
+    """Online log-vs-pages routing policy for :class:`HybridKVCache`.
+
+    Keeps a log2 histogram of observed append sizes plus hot/cold read
+    counters, and re-learns the byte threshold every ``update_every``
+    appends (appends below the threshold route to the log hot-window path,
+    the rest to pages):
+
+    * **bimodal** sizes (decode tokens vs prefill bursts): the threshold
+      sits in the widest histogram valley, nudged toward the log side when
+      reads are cold-heavy (pages gather long histories cheaper) and toward
+      the page side when the hot window serves most reads;
+    * **unimodal small** (< page granularity): everything logs — the
+      threshold parks at 4× the mode, capped at one page (the paper's
+      conclusion: logging wins writes below page granularity);
+    * **unimodal large** (≥ one page): everything pages — full-page appends
+      pay no redo write and gathers skip patching.
+    """
+
+    def __init__(self, threshold_bytes: int, page_bytes: int, *,
+                 update_every: int = 16):
+        self.threshold = max(int(threshold_bytes), 1)
+        self.page_bytes = page_bytes
+        self.update_every = update_every
+        self.hist: dict[int, int] = {}    # log2 bucket → append count
+        self.hot_reads = 0
+        self.cold_reads = 0
+        self._n = 0
+
+    def observe_read(self, hot_tokens: int, cold_tokens: int) -> None:
+        self.hot_reads += hot_tokens
+        self.cold_reads += cold_tokens
+
+    def route(self, nbytes: int) -> str:
+        """Record one append of ``nbytes`` and return ``"log"``/``"pages"``."""
+        self.hist[nbytes.bit_length()] = \
+            self.hist.get(nbytes.bit_length(), 0) + 1
+        self._n += 1
+        if self._n % self.update_every == 0:
+            self._relearn()
+        return "log" if nbytes < self.threshold else "pages"
+
+    def _relearn(self) -> None:
+        buckets = sorted(self.hist)
+        total = sum(self.hist.values())
+        # drop noise buckets (<2% of mass) so a stray append can't masquerade
+        # as a mode
+        buckets = [b for b in buckets
+                   if self.hist[b] >= max(total * 0.02, 1)] or buckets
+        gap_mid, gap_w = None, 1
+        for lo, hi in zip(buckets, buckets[1:]):
+            if hi - lo > gap_w:
+                gap_w, gap_mid = hi - lo, (lo + hi) / 2
+        if gap_mid is not None:
+            # bimodal: split at the valley, biased by observed reuse
+            reads = self.hot_reads + self.cold_reads
+            bias = 0.0
+            if reads:
+                if self.cold_reads > 0.75 * reads:
+                    bias = -0.5        # cold-heavy reuse → favor pages
+                elif self.hot_reads > 0.75 * reads:
+                    bias = 0.5         # hot-window reuse → favor the log
+            self.threshold = int(2 ** (gap_mid + bias))
+            return
+        mode = max(buckets, key=lambda b: self.hist[b])
+        mode_size = 1 << max(mode - 1, 0)
+        if mode_size >= self.page_bytes:
+            self.threshold = self.page_bytes       # page-sized: route pages
+        else:
+            self.threshold = min(4 * mode_size, self.page_bytes)
+
+
+@register_kv_engine("kvhybrid")
+class HybridKVCache(_DrainingKV):
+    """The combined design: adaptive log/pages routing + sharded drainers.
+
+    Small appends take the log path (1× sequential host write, HBM hot
+    window, per-shard background drain into host pages); large appends write
+    host pages directly (no redo write for fully covered pages). Coherence
+    follows the FS ``nvhybrid`` ownership rule: before the page side takes
+    ownership of a sequence's pages, that sequence's drain shard is
+    force-drained — log entries always reach the pages before page-side
+    writes land on top (log-before-pages ordering).
+    """
+
+    def __init__(self, spec: KVSpec, clock: SimClock, *,
+                 hbm_budget_bytes: int, hot_window_tokens: int = 256,
+                 drain_batch: int = 32, drain_shards: int = 1,
+                 threshold_bytes: int = 2048):
+        super().__init__(spec, clock, hot_window_tokens=hot_window_tokens,
+                         drain_batch=drain_batch, drain_shards=drain_shards,
+                         hbm_budget_bytes=hbm_budget_bytes)
+        # pages whose pending state the page side owns: seq → {logical}
+        self.page_owned: dict[int, set[int]] = {}
+        self.router = AdaptiveRouter(threshold_bytes, spec.page_bytes)
+        self.stats.update({"routed_log": 0, "routed_pages": 0,
+                           "page_appends": 0, "force_drains": 0,
+                           "redo_bytes": 0})
+
+    @classmethod
+    def from_spec(cls, spec: EngineSpec, kvspec: KVSpec,
+                  clock: SimClock) -> "HybridKVCache":
+        return cls(kvspec, clock, hbm_budget_bytes=spec.kv_hbm_bytes,
+                   hot_window_tokens=spec.kv_hot_window,
+                   drain_batch=spec.drain_batch,
+                   drain_shards=spec.drain_shards,
+                   threshold_bytes=spec.hybrid_threshold)
+
+    @property
+    def threshold(self) -> int:
+        """Current learned routing threshold in bytes (a gauge, not a
+        counter — deliberately not part of ``stats``)."""
+        return self.router.threshold
+
+    def _log_takes_page(self, seq: int, logical: int) -> None:
+        # the log side owns this page again (reads patch from the log)
+        owned = self.page_owned.get(seq)
+        if owned:
+            owned.discard(logical)
+
+    def _log_owns(self, seq: int, logical: int) -> bool:
+        # ownership is what reads trust: once the page side took a page
+        # (after the force-drain), the log never patches it again
+        return logical not in self.page_owned.get(seq, ())
+
+    def _observe_read(self, hot_tokens: int, cold_tokens: int) -> None:
+        self.router.observe_read(hot_tokens, cold_tokens)
+
+    def _append_pages(self, seq: int, toks: list[np.ndarray]) -> None:
+        spec = self.spec
+        start = self.seq_len.get(seq, 0)
+        end = start + len(toks)
+        # ownership handover: this sequence's log entries must reach the
+        # pages before the page side writes on top of them
+        self._force_drain_seq(seq)
+        for i, kv_token in enumerate(toks):
+            pos = start + i
+            logical = pos // spec.page_tokens
+            page_lo = logical * spec.page_tokens
+            page_hi = page_lo + spec.page_tokens
+            full_page = start <= page_lo and page_hi <= end
+            nbytes = spec.token_bytes * spec.num_layers
+            if full_page:
+                # fully covered page: one sequential write, no redo
+                self.clock.charge(HOST_LINK, "write", nbytes,
+                                  random_access=False)
+            else:
+                # partial page: redo append + in-place page write (the
+                # paging design's 2× for sub-page writes)
+                self.clock.charge(HOST_LINK, "write", nbytes,
+                                  random_access=False)
+                self.clock.charge(HOST_LINK, "write", nbytes,
+                                  random_access=True)
+                self.stats["redo_bytes"] += nbytes
+            self.stats["host_writes"] += 1
+            self._apply(seq, pos, kv_token)
+            self.page_owned.setdefault(seq, set()).add(logical)
+            self.stats["page_appends"] += 1
+            self._hot_push(seq, pos, kv_token)
+            self.seq_len[seq] = pos + 1
+
+    def _force_drain_seq(self, seq: int) -> None:
+        if self.pending_for(seq):
+            super()._force_drain_seq(seq)
+            self.stats["force_drains"] += 1
+
+    def _append_tokens(self, seq: int, toks: list[np.ndarray]) -> None:
+        nbytes = len(toks) * self.spec.token_bytes * self.spec.num_layers
+        route = self.router.route(nbytes)
+        if route == "log":
+            self.stats["routed_log"] += 1
+            self._append_log(seq, toks)
+        else:
+            self.stats["routed_pages"] += 1
+            self._append_pages(seq, toks)
+        self._advance(self.clock.now)
+
+    def _drop_seq(self, seq: int) -> None:
+        super()._drop_seq(seq)
+        self.page_owned.pop(seq, None)

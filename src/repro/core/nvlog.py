@@ -21,10 +21,10 @@ from collections import deque
 from dataclasses import dataclass
 from typing import Optional
 
-from repro.core.clock import DrainQueue, SimClock
+from repro.core.clock import ShardedDrainer, SimClock
 from repro.core.disk import Disk, PAGE_SIZE, iter_page_chunks
 from repro.core.lru import LRUList
-from repro.core.wal import CircularWAL, LogRecord
+from repro.core.wal import CircularWAL, HEADER_SIZE, LogRecord
 from repro.roofline.hw import DRAM, NVMM, SSD, SSD_FSYNC_LATENCY
 
 
@@ -38,7 +38,6 @@ class _PendingEntry:
 class _LogShard:
     def __init__(self, capacity: int, merge_window: int = 256):
         self.wal = CircularWAL(capacity)
-        self.queue = DrainQueue()
         self.pending: deque[_PendingEntry] = deque()
         # sliding window of recently logged page numbers: models the LPC
         # merging writes to the same page within the drain backlog
@@ -53,9 +52,20 @@ class NVLog:
         self.disk = disk
         self.clock = clock
         self.drain_batch = drain_batch
+        shard_bytes = nvmm_bytes // log_shards
+        # every shard must be able to hold at least two max-size records
+        # (one draining + one arriving), or pwrite's stall-until-drained
+        # loop can never make progress
+        min_shard = 2 * (HEADER_SIZE + PAGE_SIZE)
+        if shard_bytes < min_shard:
+            raise ValueError(
+                f"log_shards={log_shards} leaves {shard_bytes} bytes of WAL "
+                f"per shard; each shard needs >= {min_shard} bytes — lower "
+                f"drain_shards/shards or raise nvmm_bytes")
         self.num_shards = log_shards
-        self.shards = [_LogShard(nvmm_bytes // log_shards)
-                       for _ in range(log_shards)]
+        self.shards = [_LogShard(shard_bytes) for _ in range(log_shards)]
+        # per-shard drainers: each WAL shard is an independent FIFO server
+        self.drainer = ShardedDrainer(log_shards)
         # small DRAM page cache with up-to-date pages (paper: 2 GiB)
         self.dram_capacity = max(dram_cache_bytes // PAGE_SIZE, 1)
         self.dram: dict[int, bytearray] = {}
@@ -129,7 +139,8 @@ class NVLog:
     def pwrite(self, offset: int, data: bytes) -> int:
         for pos, pno, in_page, n in iter_page_chunks(offset, len(data)):
             chunk = data[pos:pos + n]
-            sh = self.shards[pno % self.num_shards]
+            shard_idx = pno % self.num_shards
+            sh = self.shards[shard_idx]
             rec_size = sh.wal.record_size(n)
             # stall if the log is full until the drainer frees space
             while sh.wal.free < rec_size:
@@ -139,8 +150,8 @@ class NVLog:
             rec = sh.wal.append(offset + pos, chunk)
             self.clock.charge(NVMM, "write", rec_size, random_access=False)
             self.stats["log_appends"] += 1
-            finish = sh.queue.push(self.clock.now,
-                                   self._drain_service_time(sh, pno))
+            finish = self.drainer.push(shard_idx, self.clock.now,
+                                       self._drain_service_time(sh, pno))
             entry = _PendingEntry(logical, rec, finish)
             sh.pending.append(entry)
             self.needs_patch.setdefault(pno, []).append(entry)
@@ -241,7 +252,7 @@ class NVLog:
         self.needs_patch.clear()
         for sh in self.shards:
             sh.pending.clear()
-            sh.queue = DrainQueue()
+        self.drainer.reset()
         self.disk.crash()
 
     def recover(self, *, barrier: bool = True) -> None:

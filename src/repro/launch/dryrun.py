@@ -31,6 +31,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import (ARCH_IDS, SHAPES_BY_NAME, applicable_shapes,
                            get_config, skipped_shapes)
 from repro.distributed import batch_specs, cache_specs, data_axes, param_specs
+from repro.distributed.sharding import use_mesh
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import (abstract_cache, abstract_params,
                                 abstract_state, input_specs, state_specs,
@@ -110,7 +111,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                        else jnp.float32)
         step = make_train_step(model, AdamWConfig(), microbatches=mb,
                                accum_dtype=accum_dtype)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             lowered = jax.jit(
                 step,
                 out_shardings=(jax.tree.map(
@@ -132,14 +133,14 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         batch_shape = input_specs(cfg, shape)
         bspecs = batch_specs(batch_shape, mesh)
         batch_in = with_shardings(batch_shape, bspecs, mesh)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             lowered = jax.jit(
                 lambda p, b: model.prefill(p, b, shape.seq_len)
             ).lower(params_in, batch_in)
         return lowered, {"kind": kind}
 
     # decode: one token against an S-token cache
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         cache_shape = abstract_cache(model, cfg, shape)
     cspecs = cache_specs(cache_shape, cfg, mesh)
     cache_in = with_shardings(cache_shape, cspecs, mesh)
@@ -152,7 +153,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     pos_in = jax.ShapeDtypeStruct(
         (shape.global_batch,), jnp.int32,
         sharding=NamedSharding(mesh, pos_spec))
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         lowered = jax.jit(
             model.decode_step,
             out_shardings=(None, jax.tree.map(
@@ -189,6 +190,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):      # older jax: one dict per program
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     colls = collective_summary(hlo)
     n_dev = len(jax.devices())

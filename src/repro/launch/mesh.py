@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import os
 
-import jax
+from repro.distributed.sharding import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -20,14 +20,12 @@ def make_production_mesh(*, multi_pod: bool = False):
         dims = tuple(int(x) for x in override.split("x"))
         shape = dims
         axes = ("pod", "data", "model")[-len(dims):]
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CI-scale sharding tests (host devices)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def required_devices(multi_pod: bool) -> int:

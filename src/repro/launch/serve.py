@@ -12,6 +12,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.engines import EngineSpec, list_kv_engines
 from repro.models import build_model
 from repro.serving import ServeConfig, ServingEngine
 from repro.serving.engine import Request
@@ -20,7 +21,11 @@ from repro.serving.engine import Request
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b-smoke")
-    ap.add_argument("--design", choices=("log", "paged"), default="log")
+    ap.add_argument("--design", "--engine", dest="design",
+                    choices=list_kv_engines(), default="log",
+                    help="KV engine from the registry")
+    ap.add_argument("--drain-shards", type=int, default=1,
+                    help="per-shard drainer parallelism (log/kvhybrid)")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
@@ -31,7 +36,9 @@ def main(argv=None):
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.PRNGKey(args.seed))
     engine = ServingEngine(model, params, ServeConfig(
-        max_len=args.prompt_len + args.max_new + 1, design=args.design))
+        max_len=args.prompt_len + args.max_new + 1,
+        engine_spec=EngineSpec(engine=args.design,
+                               drain_shards=args.drain_shards)))
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(rid=i,

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.sharding import get_abstract_mesh, shard_map
 from repro.models.layers import _act, dense_init, init_ffn, apply_ffn
 
 
@@ -94,7 +95,7 @@ def apply_moe(params, cfg, x, ep_axes=()):
     m = cfg.moe
     B, S, d = x.shape
     x_flat = x.reshape(B * S, d)
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     use_ep = bool(ep_axes) and "model" in (mesh.axis_names or ())
     if use_ep and B * S <= 4096:
         # decode-scale token counts: move the (tiny) tokens, not the (huge)
@@ -132,7 +133,7 @@ def _moe_ep(params, cfg, x_flat, ep_axes):
     from jax.sharding import PartitionSpec as P
 
     m = cfg.moe
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     dp = tuple(a for a in ep_axes if a in mesh.axis_names)
     n_model = mesh.shape.get("model", 1)
     T, d = x_flat.shape
@@ -184,7 +185,7 @@ def _moe_ep(params, cfg, x_flat, ep_axes):
         "w_up": P("model", None, dp if dp else None),
         "w_down": P("model", dp if dp else None, None),
     }
-    y, aux_arr = jax.shard_map(
+    y, aux_arr = shard_map(
         local, mesh=mesh,
         in_specs=(P(dp if dp else None, None), P(None, None),
                   e_specs["w_gate"], e_specs["w_up"], e_specs["w_down"]),
@@ -209,7 +210,7 @@ def _moe_ep_tokengather(params, cfg, x_flat, ep_axes):
     from jax.sharding import PartitionSpec as P
 
     m = cfg.moe
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     dp = tuple(a for a in ep_axes if a in mesh.axis_names)
     n_model = mesh.shape.get("model", 1)
     T, d = x_flat.shape
@@ -266,7 +267,7 @@ def _moe_ep_tokengather(params, cfg, x_flat, ep_axes):
         return y_loc, aux[None]
 
     tok_spec = P(dp if tokens_sharded else None, None)
-    y, aux_arr = jax.shard_map(
+    y, aux_arr = shard_map(
         local, mesh=mesh,
         in_specs=(tok_spec, P(None, None),
                   P("model", None, dp if dp else None),

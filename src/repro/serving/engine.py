@@ -2,11 +2,15 @@
 cache (DESIGN.md §2a).
 
 The engine keeps the model's working KV cache in "HBM" (device arrays) and
-mirrors every appended token into the tiered cache (paged or log design) so
-sequences can be preempted/offloaded and restored — the serving translation
-of the paper's cache. The tiered mirror's simulated tier-times and
-amplification stats are what kvcache_bench reports against the paper's
-expectations.
+mirrors every appended token into the tiered cache so sequences can be
+preempted/offloaded and restored — the serving translation of the paper's
+cache. The tiered mirror is a :class:`repro.core.engines.kv.KVCacheEngine`
+constructed through the KV registry from the same :class:`EngineSpec` the
+FS tier uses, so a serving config and an FS config are one object. Prefill
+mirrors as ONE batched append (a large write — under ``kvhybrid`` it routes
+to the page side), decode steps as single-token appends (small writes — the
+log side). The mirror's simulated tier-times and amplification stats are
+what kvcache_bench reports against the paper's expectations.
 """
 from __future__ import annotations
 
@@ -18,17 +22,53 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.clock import SimClock
-from repro.core.kvcache import KVSpec, LogKVCache, PagedKVCache
+from repro.core.engines import EngineSpec, create_kv_engine
+from repro.core.kvcache import KVSpec
 
 
 @dataclass
 class ServeConfig:
+    # field order keeps legacy positional construction working: the new
+    # engine_spec field comes last
     max_len: int = 512
-    design: str = "log"            # "log" | "paged" — the paper's switch
-    page_tokens: int = 16
-    hbm_budget_bytes: int = 64 << 20
-    hot_window_tokens: int = 128
+    design: Optional[str] = None   # legacy switch: "log" | "paged" | name
+    page_tokens: int = 16          # geometry (KVSpec): composes with either
+    hbm_budget_bytes: Optional[int] = None   # legacy → EngineSpec.kv_hbm_bytes
+    hot_window_tokens: Optional[int] = None  # legacy → EngineSpec.kv_hot_window
     greedy: bool = True
+    # the shared config object; None → built from the legacy fields above
+    engine_spec: Optional[EngineSpec] = None
+
+    def resolved_spec(self) -> EngineSpec:
+        """One EngineSpec no matter which knobs the caller used.
+
+        Mixing a full ``engine_spec`` with the legacy tier knobs raises:
+        silently preferring one of the two would run a wrong config (same
+        loud-conflict rule as ``CheckpointManager``/``NVCacheFS``).
+        """
+        legacy = {k: v for k, v in
+                  (("design", self.design),
+                   ("hbm_budget_bytes", self.hbm_budget_bytes),
+                   ("hot_window_tokens", self.hot_window_tokens))
+                  if v is not None}
+        if self.engine_spec is not None:
+            if not isinstance(self.engine_spec, EngineSpec):
+                raise TypeError(
+                    f"engine_spec must be an EngineSpec, got "
+                    f"{type(self.engine_spec).__name__!s}: "
+                    f"{self.engine_spec!r}")
+            if legacy:
+                raise TypeError(
+                    f"pass KV-tier parameters inside engine_spec, not as "
+                    f"ServeConfig fields (got both a spec and "
+                    f"{sorted(legacy)})")
+            return self.engine_spec
+        return EngineSpec(
+            engine=self.design or "log",
+            kv_hbm_bytes=(64 << 20 if self.hbm_budget_bytes is None
+                          else self.hbm_budget_bytes),
+            kv_hot_window=(128 if self.hot_window_tokens is None
+                           else self.hot_window_tokens))
 
 
 @dataclass
@@ -51,12 +91,7 @@ class ServingEngine:
         head_dim = max(mcfg.head_dim, 1)
         spec = KVSpec(num_layers=mcfg.num_layers, kv_heads=kv_heads,
                       head_dim=head_dim, page_tokens=cfg.page_tokens)
-        if cfg.design == "paged":
-            self.tiered = PagedKVCache(spec, self.clock,
-                                       hbm_budget_bytes=cfg.hbm_budget_bytes)
-        else:
-            self.tiered = LogKVCache(spec, self.clock,
-                                     hot_window_tokens=cfg.hot_window_tokens)
+        self.tiered = create_kv_engine(cfg.resolved_spec(), spec, self.clock)
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cfg.max_len))
         self._decode = jax.jit(model.decode_step)
@@ -70,13 +105,21 @@ class ServingEngine:
         tok = np.stack([k, v], axis=1)           # (L, 2, K, D)
         self.tiered.append(rid, tok.astype(np.float16))
 
+    def _mirror_prefill(self, rid: int, cache, n: int):
+        """Mirror the whole prompt's KV as one batched append."""
+        if "k" not in cache or n == 0:
+            return
+        k = np.asarray(cache["k"][:, 0, :n])     # (L, T, K, D) (batch idx 0)
+        v = np.asarray(cache["v"][:, 0, :n])
+        toks = np.stack([k, v], axis=1)          # (L, 2, T, K, D)
+        self.tiered.append(rid, toks.astype(np.float16))
+
     def generate(self, requests: list[Request]) -> list[Request]:
         """Sequential continuous decode (batch=1 per request on CPU tests)."""
         for req in requests:
             batch = {"tokens": jnp.asarray(req.prompt[None, :])}
             logits, cache = self._prefill(self.params, batch)
-            for p in range(req.prompt.shape[0]):
-                self._mirror_kv(req.rid, cache, p)
+            self._mirror_prefill(req.rid, cache, req.prompt.shape[0])
             for _ in range(req.max_new):
                 nxt = int(jnp.argmax(logits[:, -1], -1)[0])
                 req.generated.append(nxt)

@@ -2,16 +2,24 @@
 
 Core invariant (both persistent designs): after ANY op sequence, an optional
 crash, and recovery, every acked write is readable — the recovered file
-equals the oracle built from acked writes.
+equals the oracle built from acked writes. The same functional-equality
+invariant covers the KV-cache tier: every registered KV engine must return
+identical reads for any append/read/preempt/restore sequence.
+
+``hypothesis`` is a declared test dependency (requirements-test.txt, run in
+CI); the importorskip guard only covers stripped-down local images.
 """
 import random
 
+import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import NVCacheFS, PAGE_SIZE
+from repro.core import NVCacheFS, PAGE_SIZE, SimClock, create_kv_engine
+from repro.core.engines import EngineSpec, list_kv_engines
+from repro.core.kvcache import KVSpec
 
 FILE_BYTES = 1 << 16
 
@@ -95,6 +103,61 @@ def test_recovery_idempotent(ops, seed):
     fs.recover()
     fd = fs.open("/f")
     _check_oracle(fs, fd, oracle)
+
+
+KV_SPEC = KVSpec(num_layers=2, kv_heads=2, head_dim=4, page_tokens=4)
+
+# (op, seq, arg): append `arg` tokens / read layer `arg % L` / preempt-or-
+# restore (interpreted from current state, so every sequence is valid)
+kv_ops_strategy = st.lists(
+    st.tuples(st.sampled_from(["append", "read", "flip"]),
+              st.integers(0, 2), st.integers(1, 6)),
+    min_size=1, max_size=60,
+)
+
+
+@settings(max_examples=25)
+@given(ops=kv_ops_strategy)
+def test_kv_engines_agree_on_any_op_sequence(ops):
+    """Registry-wide functional equality: random op sequences give identical
+    reads across every registered KV engine (designs may only differ in
+    timing/amplification, never bytes)."""
+    engines = {
+        name: create_kv_engine(
+            EngineSpec(engine=name, kv_hbm_bytes=1 << 12, kv_hot_window=5,
+                       drain_shards=2, hybrid_threshold=256),
+            KV_SPEC, SimClock())
+        for name in list_kv_engines()}
+    rng = np.random.default_rng(0)
+    preempted: set[int] = set()
+    for op, seq, arg in ops:
+        if op == "append" and seq not in preempted:
+            toks = rng.standard_normal(
+                (KV_SPEC.num_layers, 2, arg, KV_SPEC.kv_heads,
+                 KV_SPEC.head_dim)).astype(np.float16)
+            for kv in engines.values():
+                kv.append(seq, toks if arg > 1 else toks[:, :, 0])
+        elif op == "read" and seq not in preempted:
+            layer = arg % KV_SPEC.num_layers
+            reads = {n: kv.read(seq, layer) for n, kv in engines.items()}
+            first = next(iter(reads.values()))
+            for name, got in reads.items():
+                assert np.array_equal(got, first), (name, seq, layer)
+        elif op == "flip":
+            if seq in preempted:
+                preempted.discard(seq)
+                for kv in engines.values():
+                    kv.restore(seq)
+            else:
+                preempted.add(seq)
+                for kv in engines.values():
+                    kv.preempt(seq)
+    for seq in {0, 1, 2} - preempted:
+        for layer in range(KV_SPEC.num_layers):
+            reads = {n: kv.read(seq, layer) for n, kv in engines.items()}
+            first = next(iter(reads.values()))
+            for name, got in reads.items():
+                assert np.array_equal(got, first), (name, seq, layer)
 
 
 @settings(max_examples=15)

@@ -1,0 +1,340 @@
+"""KV engine registry conformance (DESIGN.md §2a).
+
+Three suites lock the new surface down:
+
+* registry + 3-engine conformance — paged/log/kvhybrid constructed from one
+  ``EngineSpec``, append→read round-trips (single-token and batched),
+  preempt/restore, stats monotonicity;
+* per-shard drainers — shard independence and the force-drain-before-
+  page-ownership coherence rule (log-before-pages ordering);
+* adaptive routing — the learned threshold converges on deterministic
+  small-/large-append-heavy workloads, and FS ``nvhybrid`` crash recovery
+  is equivalent with ``drain_shards > 1`` vs ``== 1``.
+"""
+import numpy as np
+import pytest
+
+from repro.core import NVCacheFS, SimClock
+from repro.core.clock import ShardedDrainer
+from repro.core.engines import (EngineSpec, create_kv_engine, get_kv_engine,
+                                list_kv_engines, register_kv_engine)
+from repro.core.kvcache import HybridKVCache, KVSpec, LogKVCache, PagedKVCache
+
+SPEC = KVSpec(num_layers=3, kv_heads=2, head_dim=8, page_tokens=4)
+KV_ENGINES = ("paged", "log", "kvhybrid")
+
+
+def _mk(engine, **spec_kw):
+    spec_kw.setdefault("kv_hbm_bytes", 1 << 13)
+    spec_kw.setdefault("kv_hot_window", 6)
+    clock = SimClock()
+    return create_kv_engine(EngineSpec(engine=engine, **spec_kw), SPEC,
+                            clock), clock
+
+
+def _tok(rng):
+    return rng.standard_normal(
+        (SPEC.num_layers, 2, SPEC.kv_heads, SPEC.head_dim)).astype(np.float16)
+
+
+def _burst(rng, n):
+    return rng.standard_normal(
+        (SPEC.num_layers, 2, n, SPEC.kv_heads,
+         SPEC.head_dim)).astype(np.float16)
+
+
+# ---------------------------------------------------------------- registry
+def test_registry_serves_all_engines_from_enginespec():
+    assert set(KV_ENGINES) <= set(list_kv_engines())
+    for name, cls in (("paged", PagedKVCache), ("log", LogKVCache),
+                      ("kvhybrid", HybridKVCache)):
+        kv, _ = _mk(name)
+        assert isinstance(kv, cls)
+        assert kv.engine_name == name
+        assert get_kv_engine(name) is cls
+
+
+def test_unknown_kv_engine_raises_with_listing():
+    with pytest.raises(ValueError, match="kvhybrid"):
+        _mk("no_such_design")
+
+
+def test_duplicate_kv_registration_guard():
+    with pytest.raises(ValueError, match="already registered"):
+        register_kv_engine("paged")(PagedKVCache)
+
+
+# ------------------------------------------------------------- conformance
+@pytest.mark.parametrize("engine", KV_ENGINES)
+def test_append_read_round_trip(engine):
+    kv, _ = _mk(engine)
+    rng = np.random.default_rng(0)
+    oracle = {s: [] for s in range(3)}
+    # interleaved singles and bursts over three sequences
+    for step in range(30):
+        s = step % 3
+        if step % 7 == 3:
+            burst = _burst(rng, 5)
+            kv.append(s, burst)
+            oracle[s].extend(burst[:, :, t] for t in range(5))
+        else:
+            tok = _tok(rng)
+            kv.append(s, tok)
+            oracle[s].append(tok)
+    for s in range(3):
+        assert kv.seq_len[s] == len(oracle[s])
+        for layer in range(SPEC.num_layers):
+            want = np.stack([o[layer] for o in oracle[s]], axis=1)
+            assert np.array_equal(kv.read(s, layer), want), (engine, s, layer)
+            # gather stays as the historical alias
+            assert np.array_equal(kv.gather(s, layer), want)
+
+
+def test_engines_functionally_identical():
+    """All three designs must be observationally identical — only timing and
+    amplification may differ (the paper's whole point)."""
+    kvs = {e: _mk(e)[0] for e in KV_ENGINES}
+    rng = np.random.default_rng(1)
+    for t in range(40):
+        seq = t % 3
+        if t % 11 == 5:
+            burst = _burst(rng, 6)
+            for kv in kvs.values():
+                kv.append(seq, burst)
+        else:
+            tok = _tok(rng)
+            for kv in kvs.values():
+                kv.append(seq, tok)
+    for seq in range(3):
+        for layer in range(SPEC.num_layers):
+            reads = {e: kv.read(seq, layer) for e, kv in kvs.items()}
+            for e in KV_ENGINES[1:]:
+                assert np.array_equal(reads[e], reads["paged"]), (e, seq,
+                                                                  layer)
+
+
+@pytest.mark.parametrize("engine", KV_ENGINES)
+def test_preempt_restore_round_trip(engine):
+    kv, clock = _mk(engine)
+    rng = np.random.default_rng(2)
+    for _ in range(13):
+        kv.append(0, _tok(rng))
+        kv.append(1, _tok(rng))
+    before = {layer: kv.read(0, layer).copy()
+              for layer in range(SPEC.num_layers)}
+    other = kv.read(1, 0).copy()
+    kv.preempt(0)
+    assert clock.bytes_moved("ssd", "write") > 0       # spilled to disk
+    with pytest.raises(RuntimeError, match="preempted"):
+        kv.read(0, 0)
+    with pytest.raises(RuntimeError, match="preempted"):
+        kv.append(0, _tok(rng))
+    # untouched sequences keep serving while 0 is offloaded
+    assert np.array_equal(kv.read(1, 0), other)
+    kv.restore(0)
+    assert clock.bytes_moved("ssd", "read") > 0
+    for layer in range(SPEC.num_layers):
+        assert np.array_equal(kv.read(0, layer), before[layer]), (engine,
+                                                                  layer)
+    with pytest.raises(RuntimeError, match="not preempted"):
+        kv.restore(0)
+
+
+@pytest.mark.parametrize("engine", KV_ENGINES)
+def test_stats_monotone(engine):
+    kv, _ = _mk(engine)
+    rng = np.random.default_rng(3)
+    prev = dict(kv.stats)
+
+    def check():
+        nonlocal prev
+        cur = dict(kv.stats)
+        assert set(cur) == set(prev), engine
+        for k, v in cur.items():
+            assert v >= prev[k], (engine, k)
+        prev = cur
+
+    for step in range(25):
+        kv.append(step % 2, _burst(rng, 5) if step % 9 == 4 else _tok(rng))
+        check()
+        if step % 5 == 2:
+            kv.read(step % 2, step % SPEC.num_layers)
+            check()
+    kv.preempt(0)
+    check()
+    kv.restore(0)
+    check()
+
+
+# ------------------------------------------------------- per-shard drainers
+def test_sharded_drainer_queues_are_independent():
+    d = ShardedDrainer(3)
+    # pile work on shard 0
+    for _ in range(10):
+        f0 = d.push(0, 0.0, 1.0)
+    assert f0 == pytest.approx(10.0)
+    # shard 1 is idle: work arriving now finishes after one service time
+    assert d.push(1, 0.5, 1.0) == pytest.approx(1.5)
+    assert d.last_finish(2) == 0.0
+    assert d.idle_time() == pytest.approx(10.0)
+    assert len({d.shard_of(k) for k in range(9)}) == 3
+
+
+@pytest.mark.parametrize("engine", ["log", "kvhybrid"])
+def test_kv_shard_independence(engine):
+    """A backlog on one sequence's shard must not delay another shard —
+    for both log-structured designs (they share the drain machinery)."""
+    finishes = {}
+    for shards in (1, 2):
+        kv, clock = _mk(engine, drain_shards=shards,
+                        hybrid_threshold=1 << 20)   # everything routes log
+        kv._drain_service = lambda: 1.0             # slow drainer → backlog
+        rng = np.random.default_rng(4)
+        for _ in range(8):                          # seq 0 → shard 0
+            kv.append(0, _tok(rng))
+        kv.append(1, _tok(rng))                     # seq 1 → shard 1 if 2
+        assert kv.pending_for(1) == 1
+        shard = kv.drainer.shard_of(1)
+        finishes[shards] = kv.shard_log[shard][-1][3] - clock.now
+    # with its own shard, seq 1 drains after ~one service time; behind
+    # seq 0's backlog it waits for all eight entries first
+    assert finishes[2] < 2.0 < finishes[1]
+
+
+def test_log_engine_drains_shards_without_head_of_line_blocking():
+    """An entry whose drain finished must be applied (not patched) even
+    while another shard's head is still pending."""
+    kv, clock = _mk("log", drain_shards=2)
+    kv._drain_service = lambda: 1.0
+    rng = np.random.default_rng(11)
+    for _ in range(8):
+        kv.append(0, _tok(rng))                     # shard 0: backlog to t≈8
+    kv.append(1, _tok(rng))                         # shard 1: finishes t≈1
+    clock.advance(3.0)                              # past seq 1's finish only
+    kv.read(1, 0)
+    assert kv.pending_for(1) == 0                   # drained on its schedule
+    assert kv.pending_for(0) > 0                    # other shard still busy
+
+
+def test_nvlog_rejects_undersized_drain_shards():
+    """drain_shards repartitions the journal WAL; a per-shard WAL too small
+    for a page record must fail loudly at construction, not crash pwrite."""
+    with pytest.raises(ValueError, match="drain_shards"):
+        NVCacheFS(EngineSpec(engine="nvhybrid", nvmm_bytes=128 << 10,
+                             drain_shards=64))
+
+
+def test_force_drain_before_page_ownership():
+    """The coherence rule: the page side only takes ownership of a page
+    after that sequence's shard has drained (log-before-pages)."""
+    kv, clock = _mk("kvhybrid", drain_shards=2, hybrid_threshold=1 << 20)
+    kv._drain_service = lambda: 1.0                 # keep entries pending
+    rng = np.random.default_rng(5)
+    oracle = []
+    for _ in range(3):                              # small appends → log
+        tok = _tok(rng)
+        kv.append(0, tok)
+        oracle.append(tok)
+    kv.append(1, _tok(rng))                         # entry on the other shard
+    assert kv.pending_for(0) == 3
+    assert kv.stats["routed_log"] == 4 and kv.stats["routed_pages"] == 0
+    other_shard = kv.drainer.shard_of(1)
+    other_finish = kv.drainer.last_finish(other_shard)
+    kv.router.threshold = 1                         # flip routing to pages
+    burst = _burst(rng, 6)                          # page side takes over
+    kv.append(0, burst)
+    oracle.extend(burst[:, :, t] for t in range(6))
+    # the sequence's shard force-drained before the page write...
+    assert kv.pending_for(0) == 0
+    assert kv.stats["force_drains"] == 1
+    assert kv.stats["stall_time"] > 0
+    assert 0 in kv.page_owned.get(0, set())
+    # ...while the other shard kept its own schedule (never delayed by the
+    # stall — its entry drains at the finish time it already had)
+    assert kv.drainer.last_finish(other_shard) == other_finish
+    # ...and no token was lost in the handover
+    for layer in range(SPEC.num_layers):
+        want = np.stack([o[layer] for o in oracle], axis=1)
+        assert np.array_equal(kv.read(0, layer), want), layer
+
+
+def test_page_route_without_pending_log_skips_force_drain():
+    kv, _ = _mk("kvhybrid", hybrid_threshold=1)     # everything → pages
+    rng = np.random.default_rng(6)
+    kv.append(0, _burst(rng, 8))
+    assert kv.stats["routed_pages"] == 1
+    assert kv.stats["force_drains"] == 0
+
+
+# --------------------------------------------------------- adaptive routing
+def test_adaptive_routing_converges_small_append_heavy():
+    """Decode-style workload (single-token appends) must converge to the
+    log path even from a pages-everything prior."""
+    kv, _ = _mk("kvhybrid", hybrid_threshold=1)     # wrong prior: all pages
+    rng = np.random.default_rng(7)
+    n = 400
+    for t in range(n):
+        kv.append(t % 4, _tok(rng))
+    assert kv.threshold > SPEC.token_bytes * SPEC.num_layers
+    assert kv.stats["routed_log"] >= 0.9 * n
+
+
+def test_adaptive_routing_converges_large_append_heavy():
+    """Prefill-style workload (page-sized bursts) must converge to the page
+    path even from a log-everything prior."""
+    kv, _ = _mk("kvhybrid", hybrid_threshold=1 << 20)   # wrong prior: log
+    rng = np.random.default_rng(8)
+    n = 200
+    burst_tokens = 8 * SPEC.page_tokens
+    for t in range(n):
+        kv.append(t % 4, _burst(rng, burst_tokens))
+    assert kv.threshold <= SPEC.page_bytes
+    assert kv.stats["routed_pages"] >= 0.9 * n
+
+
+def test_adaptive_routing_splits_mixed_workload():
+    """With both modes present the learned threshold separates them: decode
+    tokens keep logging while prefill bursts page."""
+    kv, _ = _mk("kvhybrid", kv_hot_window=64)
+    rng = np.random.default_rng(9)
+    for s in range(4):
+        kv.append(s, _burst(rng, 8 * SPEC.page_tokens))   # prefill
+    for t in range(200):
+        kv.append(t % 4, _tok(rng))                       # decode
+        if t % 50 == 25:
+            kv.read(t % 4, 0)
+    small = SPEC.token_bytes * SPEC.num_layers
+    assert small < kv.threshold <= 8 * SPEC.page_bytes
+    assert kv.stats["routed_pages"] >= 4
+    assert kv.stats["routed_log"] >= 0.9 * 200
+
+
+# ------------------------------------------- nvhybrid crash equivalence (FS)
+@pytest.mark.parametrize("crash", [False, True])
+def test_nvhybrid_recovery_equivalent_across_drain_shards(crash):
+    """Per-shard drainer parallelism changes timing, never the recovered
+    image: drain_shards=4 must recover byte-identically to drain_shards=1."""
+    images = {}
+    for ds in (1, 4):
+        fs = NVCacheFS(EngineSpec(engine="nvhybrid", nvmm_bytes=2 << 20,
+                                  dram_cache_bytes=256 << 10,
+                                  drain_shards=ds))
+        fd = fs.open("/f")
+        rng = np.random.default_rng(10)
+        oracle = bytearray(1 << 16)
+        for _ in range(120):
+            off = int(rng.integers(0, (1 << 16) - 6000))
+            size = int(rng.choice([64, 300, 4096, 6000]))
+            val = int(rng.integers(1, 255))
+            data = bytes([val]) * size
+            fs.pwrite(fd, data, off)
+            oracle[off:off + size] = data
+        if crash:
+            fs.crash()
+            fs.recover()
+            fd = fs.open("/f")
+        else:
+            fs.cache.flush_all()
+        images[ds] = fs.pread(fd, 1 << 16, 0)
+        assert images[ds] == bytes(oracle), f"drain_shards={ds} lost data"
+    assert images[1] == images[4]

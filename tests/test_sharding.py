@@ -4,10 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config
-from repro.distributed.sharding import (_axes_of, batch_specs, param_specs,
+from repro.distributed.sharding import (_axes_of, batch_specs,
+                                        make_abstract_mesh, param_specs,
                                         zero1_specs)
 from repro.launch.specs import abstract_params, abstract_state
 from repro.models import build_model
@@ -15,8 +16,8 @@ from repro.models import build_model
 
 def _mesh(multi=False):
     if multi:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        return make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return make_abstract_mesh((16, 16), ("data", "model"))
 
 
 def _check_divisible(shape_tree, spec_tree, mesh):
