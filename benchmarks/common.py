@@ -139,3 +139,129 @@ def run_kv_workload(kv, kvspec, wl: KVWorkload) -> int:
             for s in range(wl.seqs):
                 kv.read(s, layer=t % kvspec.num_layers)
     return total
+
+
+# --------------------------------------------------------------------------
+# Serving workload: an arrival process through a continuous-batching loop —
+# the model-free twin of repro.serving.scheduler.Scheduler. Requests arrive
+# on a Poisson process, prefill as one burst, decode one token per running
+# sequence per step (batched append_many), and get preempted/restored when
+# the engine's HBM accounting crosses its budget. This is the regime where
+# the paper's log-vs-page asymmetries actually bite: concurrent mixed
+# appends + pressure-driven spills.
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ServeWorkload:
+    name: str = "serve"
+    requests: int = 24
+    mean_interarrival_tokens: float = 8.0   # in units of one append's time
+    prompt_tokens: tuple = (16, 48, 96)     # sampled per request
+    decode_tokens: tuple = (32, 96)         # sampled per request
+    max_batch_seqs: int = 4
+    gather_every: int = 16                  # full-history read cadence
+    seed: int = 0
+
+    def smoke(self) -> "ServeWorkload":
+        """CI-sized variant: small enough to finish in seconds, tight
+        enough (relative to the bench's HBM budget) to still preempt."""
+        import dataclasses
+        return dataclasses.replace(self, requests=6, prompt_tokens=(8, 24),
+                                   decode_tokens=(12, 24), max_batch_seqs=3,
+                                   gather_every=8)
+
+
+def run_serve_workload(kv, kvspec, wl: ServeWorkload, clock) -> dict:
+    """Drive the arrival process; returns throughput / latency-percentile /
+    preemption metrics. ``kv`` is any KVCacheEngine; victim selection uses
+    ``victim_hint`` with an admission-order LRU fallback — the same policy
+    as the serving scheduler."""
+    from repro.core.kvcache import HOST_LINK
+    rng = np.random.default_rng(wl.seed)
+    per_token = kvspec.token_bytes * kvspec.num_layers
+    token_time = HOST_LINK.write_latency + per_token / HOST_LINK.write_bw
+    arrivals = np.cumsum(rng.exponential(
+        wl.mean_interarrival_tokens * token_time, wl.requests))
+    prompt = rng.choice(wl.prompt_tokens, wl.requests)
+    decode = rng.choice(wl.decode_tokens, wl.requests)
+
+    shape = (kvspec.num_layers, 2, kvspec.kv_heads, kvspec.head_dim)
+    next_req = 0
+    running: list[dict] = []     # {rid, decoded, admitted_at}
+    preempted: list[dict] = []
+    latencies: list[float] = []
+    total_tokens = 0
+    step = 0
+
+    def admit(entry, *, restore):
+        if restore:
+            kv.restore(entry["rid"])
+        else:
+            burst = rng.standard_normal(
+                (kvspec.num_layers, 2, int(prompt[entry["rid"]]),
+                 kvspec.kv_heads, kvspec.head_dim)).astype(kvspec.dtype)
+            kv.append(entry["rid"], burst)
+        entry["admitted_at"] = step
+        running.append(entry)
+
+    def has_room():
+        if len(running) >= wl.max_batch_seqs:
+            return False
+        return not running or kv.pressure() < 1.0
+
+    while next_req < wl.requests or running or preempted:
+        # admission: preempted first (FIFO), then due arrivals
+        while preempted and has_room():
+            admit(preempted.pop(0), restore=True)
+        while (next_req < wl.requests and arrivals[next_req] <= clock.now
+               and has_room()):
+            entry = {"rid": next_req, "decoded": 0}
+            total_tokens += int(prompt[next_req])
+            next_req += 1
+            admit(entry, restore=False)
+        if not running:
+            # an empty batch always force-admits, so queued preempted work
+            # was drained above; only a future arrival can leave us idle
+            if next_req < wl.requests:
+                clock.wait_until(arrivals[next_req])   # idle until arrival
+                continue
+            break
+        step += 1
+        # one batched decode step: a token for every running sequence
+        kv.append_many([
+            (e["rid"], rng.standard_normal(shape).astype(kvspec.dtype))
+            for e in running])
+        total_tokens += len(running)
+        for e in running:
+            e["decoded"] += 1
+        if wl.gather_every and step % wl.gather_every == 0:
+            for e in running:
+                kv.read(e["rid"], layer=step % kvspec.num_layers)
+        # retire finished requests
+        still = []
+        for e in running:
+            if e["decoded"] >= decode[e["rid"]]:
+                kv.release(e["rid"])
+                latencies.append(clock.now - arrivals[e["rid"]])
+            else:
+                still.append(e)
+        running[:] = still
+        # preempt under pressure (never below one running sequence)
+        while kv.pressure() >= 1.0 and len(running) > 1:
+            cands = [e["rid"] for e in running]
+            victim_rid = kv.victim_hint(cands)
+            victim = (min(running, key=lambda e: e["admitted_at"])
+                      if victim_rid is None else
+                      next(e for e in running if e["rid"] == victim_rid))
+            running.remove(victim)
+            kv.preempt(victim["rid"])
+            preempted.append(victim)
+
+    lat = np.sort(np.asarray(latencies)) if latencies else np.zeros(1)
+    return {
+        "requests": wl.requests,
+        "appended_tokens": total_tokens,
+        "throughput_tok_per_s": total_tokens / max(clock.now, 1e-12),
+        "p50_latency_s": float(np.percentile(lat, 50)),
+        "p99_latency_s": float(np.percentile(lat, 99)),
+    }

@@ -3,6 +3,12 @@ serving call-site, enumerated over the KV engine registry. Prefill bursts +
 decode appends + periodic full-history gathers per engine × workload;
 reports simulated tier time, write amplification, DMA traffic, and (for
 ``kvhybrid``) the learned routing split.
+
+The ``serve`` workload is the serving-scale regime: a Poisson arrival
+process through a continuous-batching loop (the model-free twin of the
+serving scheduler) with preemption when the engine's HBM accounting crosses
+its budget — it additionally reports throughput, p50/p99 request latency,
+and preempt/restore counts per engine. ``--smoke`` shrinks it to CI size.
 """
 from __future__ import annotations
 
@@ -11,26 +17,36 @@ import dataclasses
 import json
 from pathlib import Path
 
-from benchmarks.common import kv_workloads, run_kv_workload
+from benchmarks.common import (ServeWorkload, kv_workloads, run_kv_workload,
+                               run_serve_workload)
 from repro.core import SimClock
 from repro.core.engines import EngineSpec, create_kv_engine, list_kv_engines
 from repro.core.kvcache import KVSpec
 
 
 def bench(engine: str, *, layers=8, kv_heads=8, head_dim=128, tokens=512,
-          workload="decode", drain_shards=1, seed=0) -> dict:
+          workload="decode", drain_shards=1, seed=0, smoke=False) -> dict:
     kvspec = KVSpec(num_layers=layers, kv_heads=kv_heads, head_dim=head_dim,
                     page_tokens=16)
     clock = SimClock()
     spec = EngineSpec(engine=engine, kv_hbm_bytes=2 << 20, kv_hot_window=128,
                       drain_shards=drain_shards)
     kv = create_kv_engine(spec, kvspec, clock)
-    by_name = {w.name: w for w in kv_workloads(tokens)}
-    if workload not in by_name:
-        raise ValueError(f"unknown workload {workload!r}; choose from "
-                         f"{', '.join(by_name)}")
-    wl = dataclasses.replace(by_name[workload], seed=seed)
-    appended = run_kv_workload(kv, kvspec, wl)
+    if workload == "serve":
+        wl = ServeWorkload(seed=seed)
+        if smoke:
+            wl = wl.smoke()
+        serve = run_serve_workload(kv, kvspec, wl, clock)
+        appended = serve.pop("appended_tokens")
+    else:
+        by_name = {w.name: w for w in kv_workloads(tokens)}
+        if workload not in by_name:
+            raise ValueError(
+                f"unknown workload {workload!r}; choose from "
+                f"{', '.join([*by_name, 'serve'])}")
+        wl = dataclasses.replace(by_name[workload], seed=seed)
+        appended = run_kv_workload(kv, kvspec, wl)
+        serve = {}
     host_w = clock.bytes_moved("host", "write")
     host_r = clock.bytes_moved("host", "read")
     return {"design": engine, "workload": wl.name,
@@ -38,7 +54,7 @@ def bench(engine: str, *, layers=8, kv_heads=8, head_dim=128, tokens=512,
             "host_write_bytes": host_w, "host_read_bytes": host_r,
             "write_amplification": host_w / (
                 appended * kvspec.token_bytes * layers),
-            **kv.stats}
+            **serve, **kv.stats}
 
 
 def main(argv=None):
@@ -49,25 +65,38 @@ def main(argv=None):
                          "enumerate the registry")
     ap.add_argument("--workloads", default="decode",
                     help="comma-separated workload names "
-                         "(decode/prefill/mixed), or 'all'")
+                         "(decode/prefill/mixed/serve), or 'all'")
     ap.add_argument("--drain-shards", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized serve workload (seconds, still preempts)")
     ap.add_argument("--out", default="artifacts/kvcache_bench.json")
     args = ap.parse_args(argv)
     engines = (list_kv_engines() if args.engines == "all"
                else tuple(args.engines.split(",")))
-    wl_names = ([w.name for w in kv_workloads()] if args.workloads == "all"
-                else args.workloads.split(","))
+    wl_names = ([w.name for w in kv_workloads()] + ["serve"]
+                if args.workloads == "all" else args.workloads.split(","))
     rows = [bench(e, tokens=args.tokens, workload=w,
-                  drain_shards=args.drain_shards)
+                  drain_shards=args.drain_shards, smoke=args.smoke)
             for w in wl_names for e in engines]
-    print("design,workload,sim_time_s,write_amp,host_read_MB")
+    print("design,workload,sim_time_s,write_amp,host_read_MB,"
+          "tput_tok_s,p50_ms,p99_ms,preempts")
     for r in rows:
+        serve_cols = (f"{r['throughput_tok_per_s']:.0f},"
+                      f"{r['p50_latency_s']*1e3:.2f},"
+                      f"{r['p99_latency_s']*1e3:.2f},"
+                      f"{r['preempts']}" if r["workload"] == "serve"
+                      else ",,,")
         print(f"{r['design']},{r['workload']},{r['sim_time_s']:.4f},"
               f"{r['write_amplification']:.2f},"
-              f"{r['host_read_bytes']/1e6:.1f}")
+              f"{r['host_read_bytes']/1e6:.1f},{serve_cols}")
+    # write the artifact BEFORE the gate so a failing CI run still leaves
+    # the evidence of which engine stopped preempting
     out = Path(args.out)
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(rows, indent=1))
+    if any(r["workload"] == "serve" and not r["preempts"] for r in rows):
+        raise SystemExit("serve workload never crossed the HBM budget — "
+                         "preemption path not exercised")
     return rows
 
 

@@ -11,11 +11,21 @@ serving config and an FS config are one object.
 
 * ``append(seq, kv_tokens)`` — one decoded token ``(L, 2, K, D)`` or a
   prefill batch ``(L, 2, T, K, D)``; durable in the host tier at return.
+* ``append_many(items)`` — batched multi-sequence append: one decode step's
+  worth of tokens across a whole running batch in one call.
 * ``read(seq, layer)`` — materialize ``(2, T, K, D)`` for attention
   (``gather`` is the historical alias and remains supported).
 * ``preempt(seq)`` / ``restore(seq)`` — offload a sequence's KV to disk and
   bring it back (continuous batching under memory pressure).
+* ``release(seq)`` — drop a finished sequence's state from every tier.
 * ``stats`` — monotone counters merged into serving-engine stats.
+
+A scheduler driving preemption reads the *pressure surface* instead of
+engine internals: ``pressure()`` (HBM use over budget), ``resident_bytes``
+(one sequence's HBM footprint), and ``victim_hint`` (the engine's preferred
+preemption victim — ``kvhybrid`` answers from its router's per-sequence
+reuse histogram; engines with no opinion return ``None`` and the scheduler
+falls back to LRU).
 
 New designs register with ``@register_kv_engine("name")`` and are
 constructed via ``create_kv_engine(spec, kvspec, clock)``; unknown names
@@ -25,7 +35,7 @@ in :mod:`repro.core.kvcache` and are registered on first use.
 from __future__ import annotations
 
 import abc
-from typing import TYPE_CHECKING
+from typing import TYPE_CHECKING, Iterable, Optional, Sequence
 
 import numpy as np
 
@@ -63,6 +73,17 @@ class KVCacheEngine(abc.ABC):
         """Append KV for ``seq``: ``(L, 2, K, D)`` one token, or
         ``(L, 2, T, K, D)`` a batch of ``T`` consecutive tokens (prefill)."""
 
+    def append_many(self, items: Sequence[tuple[int, np.ndarray]]) -> None:
+        """Batched multi-sequence append: ``[(seq, kv_tokens), ...]``.
+
+        The continuous-batching decode path: one scheduler step appends one
+        token for every running sequence through a single call. The default
+        loops; engines override to amortize per-call work (drainer advance)
+        across the batch.
+        """
+        for seq, kv_tokens in items:
+            self.append(seq, kv_tokens)
+
     @abc.abstractmethod
     def read(self, seq: int, layer: int) -> np.ndarray:
         """Materialize ``(2, T, K, D)`` for attention over ``seq``."""
@@ -80,6 +101,46 @@ class KVCacheEngine(abc.ABC):
     @abc.abstractmethod
     def restore(self, seq: int) -> None:
         """Bring a preempted sequence back into the host tier."""
+
+    @abc.abstractmethod
+    def release(self, seq: int) -> None:
+        """Drop a finished sequence from every tier (the scheduler calls
+        this when a request completes; frees HBM/host/disk state)."""
+
+    # ------------------------------------------------------ pressure surface
+    def hbm_used_bytes(self) -> int:
+        """Bytes of HBM this engine currently holds resident."""
+        return 0
+
+    def hbm_limit_bytes(self) -> Optional[int]:
+        """The engine's HBM budget in bytes (``None`` = unbounded)."""
+        return None
+
+    def pressure(self) -> float:
+        """HBM occupancy as a fraction of the budget (0.0 when unbounded).
+
+        Reaches 1.0 exactly when the budget binds — the scheduler's
+        preemption trigger. Engines self-limit, so the value never exceeds
+        1.0; "over budget" is expressed as sitting *at* the ceiling.
+        """
+        limit = self.hbm_limit_bytes()
+        if not limit:
+            return 0.0
+        return self.hbm_used_bytes() / limit
+
+    def resident_bytes(self, seq: int) -> int:
+        """HBM bytes attributable to ``seq`` (what preempting it frees)."""
+        return 0
+
+    def victim_hint(self, candidates: Iterable[int]) -> Optional[int]:
+        """The engine's preferred preemption victim among ``candidates``.
+
+        ``None`` means no opinion — the scheduler falls back to LRU.
+        ``kvhybrid`` overrides this to consult its router's per-sequence
+        reuse histogram (cold-read-heavy sequences are the cheapest to
+        serve from the spilled tier, so they go first).
+        """
+        return None
 
 
 _KV_REGISTRY: dict[str, type[KVCacheEngine]] = {}

@@ -34,7 +34,7 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass
-from typing import Optional
+from typing import Iterable, Optional, Sequence
 
 import numpy as np
 
@@ -84,7 +84,7 @@ class _TieredKV(KVCacheEngine):
         self.clock = clock
         self.seq_len: dict[int, int] = {}
         self._preempted: dict[int, np.ndarray] = {}   # seq → (L, 2, T, K, D)
-        self.stats: dict = {"preempts": 0, "restores": 0,
+        self.stats: dict = {"preempts": 0, "restores": 0, "releases": 0,
                             "preempt_out_bytes": 0, "restore_in_bytes": 0}
 
     # hooks -----------------------------------------------------------------
@@ -153,6 +153,15 @@ class _TieredKV(KVCacheEngine):
             # under kvhybrid a long cold sequence lands on the page side
             self._append_tokens(seq, toks)
 
+    def release(self, seq: int) -> None:
+        """Finished request: drop the sequence from every tier. A preempted
+        sequence just drops its disk blob; an active one drops host/HBM
+        state through the engine's ``_drop_seq``."""
+        if self._preempted.pop(seq, None) is None:
+            self._drop_seq(seq)
+            self.seq_len.pop(seq, None)
+        self.stats["releases"] += 1
+
 
 @register_kv_engine("paged")
 class PagedKVCache(_TieredKV):
@@ -189,6 +198,16 @@ class PagedKVCache(_TieredKV):
         self.stats["dma_up_bytes"] += self.spec.page_bytes
         self.hbm_lru.touch(key)
 
+    def _touch_resident(self, layer: int, phys: int) -> None:
+        """Mark the page being appended to as HBM-resident. The token just
+        came out of the device, so the page is in the working set by
+        construction — no DMA and no hit/miss accounting (those are
+        read-path stats)."""
+        if len(self.hbm_lru) >= self.hbm_capacity and \
+                (layer, phys) not in self.hbm_lru:
+            self.hbm_lru.pop_lru()
+        self.hbm_lru.touch((layer, phys))
+
     def _append_tokens(self, seq: int, toks: list[np.ndarray]) -> None:
         spec = self.spec
         for kv_token in toks:
@@ -211,6 +230,7 @@ class PagedKVCache(_TieredKV):
                                   random_access=True)        # into the page
                 self.stats["host_writes"] += 1
                 self.pool[(layer, phys)][:, slot] = kv_token[layer]
+                self._touch_resident(layer, phys)
             self.seq_len[seq] = pos + 1
 
     def _read(self, seq: int, layer: int) -> np.ndarray:
@@ -250,6 +270,19 @@ class PagedKVCache(_TieredKV):
                 self.pool.pop((layer, phys), None)
                 self.hbm_lru.remove((layer, phys))
 
+    # -------------------------------------------------------------- pressure
+    def hbm_used_bytes(self) -> int:
+        return len(self.hbm_lru) * self.spec.page_bytes
+
+    def hbm_limit_bytes(self) -> Optional[int]:
+        return self.hbm_capacity * self.spec.page_bytes
+
+    def resident_bytes(self, seq: int) -> int:
+        n = sum(1 for phys in self.block_table.get(seq, ())
+                for layer in range(self.spec.num_layers)
+                if (layer, phys) in self.hbm_lru)
+        return n * self.spec.page_bytes
+
 
 class _DrainingKV(_TieredKV):
     """Shared log/drain machinery for the log-structured designs.
@@ -274,6 +307,7 @@ class _DrainingKV(_TieredKV):
         self._hot_budget_tokens = (None if hbm_budget_bytes is None
                                    else max(hbm_budget_bytes // per_token, 1))
         self._hot_total = 0
+        self._batch_depth = 0      # >0 inside append_many: advance once
         self.drain_batch = drain_batch
         self.drainer = ShardedDrainer(drain_shards)
         # per-shard pending log entries: (seq, pos, kv_token, finish)
@@ -379,15 +413,29 @@ class _DrainingKV(_TieredKV):
             self._hot_push(seq, pos, kv_token)
             self.seq_len[seq] = pos + 1
 
+    def append_many(self, items: Sequence[tuple[int, np.ndarray]]) -> None:
+        """Batched multi-sequence append with ONE drainer advance for the
+        whole batch (per-append advances are suppressed while inside)."""
+        self._batch_depth += 1
+        try:
+            for seq, kv_tokens in items:
+                self.append(seq, kv_tokens)
+        finally:
+            self._batch_depth -= 1
+        self._advance(self.clock.now)
+
     # ----------------------------------------------------------------- read
-    def _observe_read(self, hot_tokens: int, cold_tokens: int) -> None:
-        """Hook: reuse feedback for the adaptive router (kvhybrid)."""
+    def _observe_read(self, seq: int, hot_tokens: int, cold_tokens: int,
+                      latency_s: float) -> None:
+        """Hook: reuse + gather-latency feedback for the adaptive router
+        (kvhybrid)."""
 
     def _read(self, seq: int, layer: int) -> np.ndarray:
         """(2, T, kv_heads, head_dim): hot window from HBM; cold history from
         compacted pages, patched from the log where the drainer hasn't
         caught up."""
         spec = self.spec
+        t_read0 = self.clock.now
         self._advance(self.clock.now)
         T = self.seq_len.get(seq, 0)
         out = np.zeros((2, T, spec.kv_heads, spec.head_dim), spec.dtype)
@@ -426,7 +474,8 @@ class _DrainingKV(_TieredKV):
                 self.clock.charge(HOST_LINK, "read", spec.token_bytes,
                                   random_access=True)
                 self.stats["patches"] += 1
-        self._observe_read(len(hot_positions), max(cold_T, 0))
+        self._observe_read(seq, len(hot_positions), max(cold_T, 0),
+                           self.clock.now - t_read0)
         return out
 
     def _spill(self, seq: int) -> np.ndarray:
@@ -456,6 +505,20 @@ class _DrainingKV(_TieredKV):
             self.shard_log[shard] = deque(
                 e for e in self.shard_log[shard] if e[0] != seq)
 
+    # -------------------------------------------------------------- pressure
+    def hbm_used_bytes(self) -> int:
+        return self._hot_total * self.spec.token_bytes * self.spec.num_layers
+
+    def hbm_limit_bytes(self) -> Optional[int]:
+        if self._hot_budget_tokens is None:
+            return None
+        return (self._hot_budget_tokens * self.spec.token_bytes
+                * self.spec.num_layers)
+
+    def resident_bytes(self, seq: int) -> int:
+        return (len(self.hot.get(seq, ())) * self.spec.token_bytes
+                * self.spec.num_layers)
+
 
 @register_kv_engine("log")
 class LogKVCache(_DrainingKV):
@@ -479,16 +542,17 @@ class LogKVCache(_DrainingKV):
 
     def _append_tokens(self, seq: int, toks: list[np.ndarray]) -> None:
         self._append_log(seq, toks)
-        self._advance(self.clock.now)
+        if not self._batch_depth:
+            self._advance(self.clock.now)
 
 
 class AdaptiveRouter:
     """Online log-vs-pages routing policy for :class:`HybridKVCache`.
 
     Keeps a log2 histogram of observed append sizes plus hot/cold read
-    counters, and re-learns the byte threshold every ``update_every``
-    appends (appends below the threshold route to the log hot-window path,
-    the rest to pages):
+    counters and a gather-latency EMA, and re-learns the byte threshold
+    every ``update_every`` appends (appends below the threshold route to
+    the log hot-window path, the rest to pages):
 
     * **bimodal** sizes (decode tokens vs prefill bursts): the threshold
       sits in the widest histogram valley, nudged toward the log side when
@@ -499,21 +563,76 @@ class AdaptiveRouter:
       conclusion: logging wins writes below page granularity);
     * **unimodal large** (≥ one page): everything pages — full-page appends
       pay no redo write and gathers skip patching.
+
+    **Latency feedback:** counts say where reads land; ``latency_s`` says
+    what they cost. The router keeps an EMA of observed per-token gather
+    latency and compares it to ``page_per_token_s`` — the modeled cost of
+    serving the same token from a compacted page. When gathers run hot
+    (patch-dominated reads behind a backlogged drainer), the bias shifts
+    toward pages regardless of what the counts alone would say; when
+    gathers are cheap the log keeps its sub-page wins.
+
+    Per-sequence hot/cold counters (``seq_reuse``) feed
+    :meth:`HybridKVCache.victim_hint`: under HBM pressure the scheduler
+    preempts the sequence whose reads reuse the hot window least.
     """
 
+    #: observed-vs-modeled gather cost ratio above which gathers count as
+    #: slow (bias toward pages) / below which as cheap (keep the log)
+    SLOW_GATHER_RATIO = 2.0
+    FAST_GATHER_RATIO = 1.2
+
     def __init__(self, threshold_bytes: int, page_bytes: int, *,
-                 update_every: int = 16):
+                 update_every: int = 16,
+                 page_per_token_s: Optional[float] = None):
         self.threshold = max(int(threshold_bytes), 1)
         self.page_bytes = page_bytes
         self.update_every = update_every
+        self.page_per_token_s = page_per_token_s
         self.hist: dict[int, int] = {}    # log2 bucket → append count
         self.hot_reads = 0
         self.cold_reads = 0
+        self.gather_lat_s: Optional[float] = None   # per-token EMA
+        self.seq_reuse: dict[int, list[int]] = {}   # seq → [hot, cold]
         self._n = 0
 
-    def observe_read(self, hot_tokens: int, cold_tokens: int) -> None:
+    def observe_read(self, seq: int, hot_tokens: int, cold_tokens: int,
+                     latency_s: float = 0.0) -> None:
         self.hot_reads += hot_tokens
         self.cold_reads += cold_tokens
+        reuse = self.seq_reuse.setdefault(seq, [0, 0])
+        reuse[0] += hot_tokens
+        reuse[1] += cold_tokens
+        tokens = hot_tokens + cold_tokens
+        if tokens and latency_s > 0.0:
+            per_tok = latency_s / tokens
+            self.gather_lat_s = (per_tok if self.gather_lat_s is None
+                                 else 0.8 * self.gather_lat_s + 0.2 * per_tok)
+
+    def reuse_score(self, seq: int) -> Optional[float]:
+        """Hot-window share of this sequence's observed reads (None = never
+        read). Low score = cold sequence = cheap preemption victim."""
+        reuse = self.seq_reuse.get(seq)
+        if reuse is None or (reuse[0] + reuse[1]) == 0:
+            return None
+        return reuse[0] / (reuse[0] + reuse[1])
+
+    def forget_seq(self, seq: int) -> None:
+        """Drop per-sequence reuse state (finished request)."""
+        self.seq_reuse.pop(seq, None)
+
+    def _latency_bias(self) -> float:
+        """Extra threshold bias from *observed* gather latency: slow gathers
+        (≫ the modeled page-read cost) push appends toward pages, cheap
+        ones keep the log attractive."""
+        if self.gather_lat_s is None or not self.page_per_token_s:
+            return 0.0
+        ratio = self.gather_lat_s / self.page_per_token_s
+        if ratio > self.SLOW_GATHER_RATIO:
+            return -1.0                     # gathers hurt → favor pages
+        if ratio < self.FAST_GATHER_RATIO:
+            return 0.25                     # gathers cheap → keep logging
+        return 0.0
 
     def route(self, nbytes: int) -> str:
         """Record one append of ``nbytes`` and return ``"log"``/``"pages"``."""
@@ -536,7 +655,8 @@ class AdaptiveRouter:
             if hi - lo > gap_w:
                 gap_w, gap_mid = hi - lo, (lo + hi) / 2
         if gap_mid is not None:
-            # bimodal: split at the valley, biased by observed reuse
+            # bimodal: split at the valley, biased by observed reuse and by
+            # the measured gather-latency-vs-page-cost ratio
             reads = self.hot_reads + self.cold_reads
             bias = 0.0
             if reads:
@@ -544,6 +664,7 @@ class AdaptiveRouter:
                     bias = -0.5        # cold-heavy reuse → favor pages
                 elif self.hot_reads > 0.75 * reads:
                     bias = 0.5         # hot-window reuse → favor the log
+            bias = max(-1.5, min(1.5, bias + self._latency_bias()))
             self.threshold = int(2 ** (gap_mid + bias))
             return
         mode = max(buckets, key=lambda b: self.hist[b])
@@ -576,7 +697,12 @@ class HybridKVCache(_DrainingKV):
                          hbm_budget_bytes=hbm_budget_bytes)
         # pages whose pending state the page side owns: seq → {logical}
         self.page_owned: dict[int, set[int]] = {}
-        self.router = AdaptiveRouter(threshold_bytes, spec.page_bytes)
+        # modeled cost of serving one token from a compacted page — the
+        # reference the router's gather-latency feedback compares against
+        page_per_token = (HOST_LINK.read_latency / spec.page_tokens
+                          + spec.token_bytes / HOST_LINK.read_bw)
+        self.router = AdaptiveRouter(threshold_bytes, spec.page_bytes,
+                                     page_per_token_s=page_per_token)
         self.stats.update({"routed_log": 0, "routed_pages": 0,
                            "page_appends": 0, "force_drains": 0,
                            "redo_bytes": 0})
@@ -607,8 +733,23 @@ class HybridKVCache(_DrainingKV):
         # (after the force-drain), the log never patches it again
         return logical not in self.page_owned.get(seq, ())
 
-    def _observe_read(self, hot_tokens: int, cold_tokens: int) -> None:
-        self.router.observe_read(hot_tokens, cold_tokens)
+    def _observe_read(self, seq: int, hot_tokens: int, cold_tokens: int,
+                      latency_s: float) -> None:
+        self.router.observe_read(seq, hot_tokens, cold_tokens, latency_s)
+
+    def victim_hint(self, candidates: Iterable[int]) -> Optional[int]:
+        """Preemption victim from the router's per-sequence reuse histogram:
+        the candidate whose reads reuse the hot window least (its history is
+        served from pages/disk anyway), ties broken toward the largest HBM
+        footprint. ``None`` when no candidate has been read yet — the
+        scheduler then falls back to LRU."""
+        scored = [(self.router.reuse_score(seq), seq) for seq in candidates]
+        if all(score is None for score, _ in scored):
+            return None
+        # unread sequences score neutral: known-cold beats unknown
+        return min(scored, key=lambda sv: (
+            0.5 if sv[0] is None else sv[0],
+            -self.resident_bytes(sv[1])))[1]
 
     def _append_pages(self, seq: int, toks: list[np.ndarray]) -> None:
         spec = self.spec
@@ -657,8 +798,13 @@ class HybridKVCache(_DrainingKV):
         else:
             self.stats["routed_pages"] += 1
             self._append_pages(seq, toks)
-        self._advance(self.clock.now)
+        if not self._batch_depth:
+            self._advance(self.clock.now)
 
     def _drop_seq(self, seq: int) -> None:
         super()._drop_seq(seq)
         self.page_owned.pop(seq, None)
+
+    def release(self, seq: int) -> None:
+        super().release(seq)
+        self.router.forget_seq(seq)

@@ -1,8 +1,13 @@
-"""Serving driver: batched requests through the tiered-KV engine, comparing
-the paper's two designs at the KV call-site.
+"""Serving driver: continuous-batching decode through the tiered-KV engine,
+comparing the paper's designs at the KV call-site under real concurrency.
 
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b-smoke \
-        --design log --requests 4 --max-new 16
+        --design log --requests 4 --max-new 16 --max-batch-seqs 4
+
+Requests share one running batch (admitted/preempted/restored by the
+scheduler); ``--hbm-budget-bytes`` small enough to bind makes the
+preemption path visible in the printed stats. ``--sequential`` runs the
+one-at-a-time reference loop instead (same tokens, no batching).
 """
 from __future__ import annotations
 
@@ -14,8 +19,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.engines import EngineSpec, list_kv_engines
 from repro.models import build_model
-from repro.serving import ServeConfig, ServingEngine
-from repro.serving.engine import Request
+from repro.serving import Request, ServeConfig, ServingEngine
 
 
 def main(argv=None):
@@ -29,6 +33,16 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch-seqs", type=int, default=8,
+                    help="continuous-batching width cap")
+    ap.add_argument("--max-batch-tokens", type=int, default=None,
+                    help="running-batch token cap (None = unlimited)")
+    ap.add_argument("--hbm-budget-bytes", type=int, default=64 << 20,
+                    help="KV-tier HBM budget; small values force "
+                         "preempt/restore cycles")
+    ap.add_argument("--sequential", action="store_true",
+                    help="run the batch=1 reference loop instead of the "
+                         "continuous-batching scheduler")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -38,7 +52,10 @@ def main(argv=None):
     engine = ServingEngine(model, params, ServeConfig(
         max_len=args.prompt_len + args.max_new + 1,
         engine_spec=EngineSpec(engine=args.design,
-                               drain_shards=args.drain_shards)))
+                               drain_shards=args.drain_shards,
+                               kv_hbm_bytes=args.hbm_budget_bytes),
+        max_batch_seqs=args.max_batch_seqs,
+        max_batch_tokens=args.max_batch_tokens))
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(rid=i,
@@ -46,11 +63,15 @@ def main(argv=None):
                                         dtype=np.int32),
                     max_new=args.max_new)
             for i in range(args.requests)]
-    engine.generate(reqs)
+    if args.sequential:
+        engine.generate_sequential(reqs)
+    else:
+        engine.generate(reqs)
     for r in reqs:
         print(f"req {r.rid}: generated {len(r.generated)} tokens "
               f"{r.generated[:8]}...")
-    print(f"tiered-kv[{args.design}] stats: {engine.stats()}")
+    mode = "sequential" if args.sequential else "batched"
+    print(f"tiered-kv[{args.design}] ({mode}) stats: {engine.stats()}")
 
 
 if __name__ == "__main__":

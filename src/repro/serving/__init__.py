@@ -1,4 +1,6 @@
-"""Serving: prefill/decode engine with tiered KV offload (paper's designs)."""
-from repro.serving.engine import ServeConfig, ServingEngine
+"""Serving: continuous-batching prefill/decode engine with tiered KV
+offload and preemption-under-HBM-pressure (paper's designs, serving tier)."""
+from repro.serving.engine import Request, ServeConfig, ServingEngine
+from repro.serving.scheduler import Scheduler
 
-__all__ = ["ServeConfig", "ServingEngine"]
+__all__ = ["Request", "ServeConfig", "ServingEngine", "Scheduler"]

@@ -1,0 +1,90 @@
+"""Ragged-batch bookkeeping for continuous-batching decode.
+
+A running batch holds sequences of different lengths, each prefilled at
+batch=1. Per-sequence decode caches are *rows*: every cache array keeps its
+batch dimension at size 1. The scheduler concatenates rows into one batched
+cache for a single ``decode_step`` over the whole batch, and splits the
+result back into rows afterwards — raggedness is carried entirely by the
+per-row ``pos`` entries (every KV array is already padded to ``max_len`` by
+prefill, and the decode attention masks by position), so no re-padding is
+ever needed.
+
+The batch axis differs per cache key (``model.prefill`` stacks layer scans
+differently per family):
+
+* ``pos`` — shape ``(B,)``: axis 0;
+* ``seg_conv`` / ``seg_ssm`` (Zamba2 hybrid) — shape
+  ``(n_seg, seg_len, B, ...)`` from the nested segment scan: axis 2;
+* everything else (``k``/``v``/``c``/``kr``/``conv``/``ssm``/``shared_*``/
+  ``tail_*``/``ek``/``ev``/quant scales) — shape ``(L, B, ...)``: axis 1.
+
+Host round-trips (``row_to_host``/``row_to_device``) are exact — preempting
+a row to host memory and restoring it later changes no bits, which is what
+makes preemption invisible in the generated tokens.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+#: cache keys whose batch axis is not the default 1
+_SPECIAL_BATCH_AXIS = {"pos": 0, "seg_conv": 2, "seg_ssm": 2}
+
+
+def batch_axis(key: str) -> int:
+    """The batch dimension of cache entry ``key``."""
+    return _SPECIAL_BATCH_AXIS.get(key, 1)
+
+
+def concat_rows(rows: list[dict]) -> dict:
+    """Concatenate per-sequence cache rows (batch dim 1 each) into one
+    batched cache, preserving row order."""
+    first = rows[0]
+    return {k: jnp.concatenate([r[k] for r in rows], axis=batch_axis(k))
+            for k in first}
+
+
+def split_row(cache: dict, i: int) -> dict:
+    """Slice row ``i`` back out of a batched cache (keeps batch dim 1)."""
+    out = {}
+    for k, v in cache.items():
+        ax = batch_axis(k)
+        idx = [slice(None)] * v.ndim
+        idx[ax] = slice(i, i + 1)
+        out[k] = v[tuple(idx)]
+    return out
+
+
+def row_to_host(row: dict) -> dict:
+    """Materialize a cache row into host numpy arrays (preemption spill)."""
+    return {k: np.asarray(v) for k, v in row.items()}
+
+
+def row_to_device(row: dict) -> dict:
+    """Bring a spilled cache row back onto the device (restore)."""
+    return {k: jnp.asarray(v) for k, v in row.items()}
+
+
+def gather_new_kv(cache_k, cache_v, positions):
+    """On-device gather of the tokens a decode step just wrote.
+
+    cache_k/cache_v: ``(L, B, T, K, D)``; positions: ``(B,)`` — the write
+    index each row used. Returns ``(B, L, 2, K, D)`` float16, still on
+    device: the caller transfers exactly one token per sequence per step
+    instead of round-tripping whole cache rows through host memory.
+    """
+    B = positions.shape[0]
+    b_idx = jnp.arange(B)
+    k = cache_k[:, b_idx, positions]          # (L, B, K, D)
+    v = cache_v[:, b_idx, positions]
+    return jnp.stack([k, v], axis=2).transpose(1, 0, 2, 3, 4).astype(
+        jnp.float16)                          # (B, L, 2, K, D)
+
+
+def gather_prefill_kv(cache_k, cache_v, n: int):
+    """On-device slice of a prompt's prefilled KV: ``(L, 2, n, K, D)``
+    float16 for one batch-1 row, cast before transfer so the host copy is
+    the mirror's dtype (half the bytes of the fp32 cache)."""
+    k = cache_k[:, 0, :n]                     # (L, n, K, D)
+    v = cache_v[:, 0, :n]
+    return jnp.stack([k, v], axis=1).astype(jnp.float16)

@@ -11,6 +11,18 @@ mirrors as ONE batched append (a large write — under ``kvhybrid`` it routes
 to the page side), decode steps as single-token appends (small writes — the
 log side). The mirror's simulated tier-times and amplification stats are
 what kvcache_bench reports against the paper's expectations.
+
+``generate()`` runs requests through the continuous-batching
+:class:`~repro.serving.scheduler.Scheduler`: requests are admitted into a
+running batch, every scheduler tick steps the whole batch through a single
+batched ``decode_step``, and sequences are preempted to the disk tier (and
+later restored) when the engine's HBM accounting hits its budget.
+``generate_sequential()`` keeps the one-request-at-a-time loop as the
+reference implementation the scheduler must match token-for-token.
+
+Mirror transfers are sliced **on device**: each decode step moves exactly
+one ``(L, 2, K, D)`` float16 token per sequence over the device→host link
+(counted in ``stats()["mirror_d2h_bytes"]``), never a whole cache row.
 """
 from __future__ import annotations
 
@@ -24,6 +36,7 @@ import numpy as np
 from repro.core.clock import SimClock
 from repro.core.engines import EngineSpec, create_kv_engine
 from repro.core.kvcache import KVSpec
+from repro.serving import batching
 
 
 @dataclass
@@ -38,6 +51,10 @@ class ServeConfig:
     greedy: bool = True
     # the shared config object; None → built from the legacy fields above
     engine_spec: Optional[EngineSpec] = None
+    # continuous-batching scheduler knobs
+    max_batch_seqs: int = 8        # running-batch width cap
+    max_batch_tokens: Optional[int] = None   # running-batch token cap
+    min_running: int = 1           # preemption floor: progress guarantee
 
     def resolved_spec(self) -> EngineSpec:
         """One EngineSpec no matter which knobs the caller used.
@@ -95,31 +112,72 @@ class ServingEngine:
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cfg.max_len))
         self._decode = jax.jit(model.decode_step)
+        self._gather_new_kv = jax.jit(batching.gather_new_kv)
+        self._gather_prefill_kv = jax.jit(batching.gather_prefill_kv,
+                                          static_argnums=2)
+        self.mirror_d2h_bytes = 0      # device→host mirror traffic (exact)
+        self.sched_stats: dict = {}    # last generate()'s scheduler counters
 
+    # -------------------------------------------------------------- mirroring
     def _mirror_kv(self, rid: int, cache, pos: int):
-        """Mirror the newly appended token's KV into the tiered cache."""
+        """Mirror the newly appended token's KV into the tiered cache.
+
+        The ``(L, K, D)`` token is sliced and stacked ON DEVICE
+        (:func:`batching.gather_new_kv`) so only the single fp16 token
+        crosses the device→host link — never the whole padded cache row.
+        """
         if "k" not in cache:
             return                      # SSM-family: O(1) state, nothing to page
-        k = np.asarray(cache["k"][:, 0, pos])    # (L, K, D) (batch idx 0)
-        v = np.asarray(cache["v"][:, 0, pos])
-        tok = np.stack([k, v], axis=1)           # (L, 2, K, D)
-        self.tiered.append(rid, tok.astype(np.float16))
+        tok = np.asarray(self._gather_new_kv(
+            cache["k"], cache["v"], jnp.asarray([pos], jnp.int32)))[0]
+        self.mirror_d2h_bytes += tok.nbytes
+        self.tiered.append(rid, tok)
+
+    def mirror_decode_batch(self, rids: list, cache, positions) -> None:
+        """Mirror one decode step's tokens for a whole running batch: one
+        on-device gather, ONE device→host transfer of ``(B, L, 2, K, D)``
+        fp16, one batched ``append_many`` into the tiered engine."""
+        if "k" not in cache or not rids:
+            return
+        toks = np.asarray(self._gather_new_kv(
+            cache["k"], cache["v"], jnp.asarray(positions, jnp.int32)))
+        self.mirror_d2h_bytes += toks.nbytes
+        self.tiered.append_many(
+            [(rid, toks[i]) for i, rid in enumerate(rids)])
 
     def _mirror_prefill(self, rid: int, cache, n: int):
-        """Mirror the whole prompt's KV as one batched append."""
+        """Mirror the whole prompt's KV as one batched append (sliced to the
+        prompt's ``n`` live tokens on device, cast to fp16 before transfer)."""
         if "k" not in cache or n == 0:
             return
-        k = np.asarray(cache["k"][:, 0, :n])     # (L, T, K, D) (batch idx 0)
-        v = np.asarray(cache["v"][:, 0, :n])
-        toks = np.stack([k, v], axis=1)          # (L, 2, T, K, D)
-        self.tiered.append(rid, toks.astype(np.float16))
+        toks = np.asarray(self._gather_prefill_kv(cache["k"], cache["v"], n))
+        self.mirror_d2h_bytes += toks.nbytes
+        self.tiered.append(rid, toks)
+
+    # ------------------------------------------------------------- generation
+    def prefill_one(self, req: Request):
+        """Prefill one request at batch=1 and mirror its prompt KV; returns
+        (logits, cache row) for the scheduler to admit."""
+        batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+        logits, cache = self._prefill(self.params, batch)
+        self._mirror_prefill(req.rid, cache, req.prompt.shape[0])
+        return logits, cache
 
     def generate(self, requests: list[Request]) -> list[Request]:
-        """Sequential continuous decode (batch=1 per request on CPU tests)."""
+        """Continuous-batching decode: all requests share one running batch,
+        stepped together and preempted/restored under HBM pressure. Greedy
+        outputs are token-identical to :meth:`generate_sequential`."""
+        from repro.serving.scheduler import Scheduler
+        sched = Scheduler(self, requests)
+        sched.run()
+        self.sched_stats = sched.stats.as_dict()
+        return requests
+
+    def generate_sequential(self, requests: list[Request]) -> list[Request]:
+        """Sequential reference: one request at a time, batch=1 decode. The
+        scheduler's batched path must match this token-for-token."""
         for req in requests:
-            batch = {"tokens": jnp.asarray(req.prompt[None, :])}
-            logits, cache = self._prefill(self.params, batch)
-            self._mirror_prefill(req.rid, cache, req.prompt.shape[0])
+            logits, cache = self.prefill_one(req)
             for _ in range(req.max_new):
                 nxt = int(jnp.argmax(logits[:, -1], -1)[0])
                 req.generated.append(nxt)
@@ -131,4 +189,6 @@ class ServingEngine:
         return requests
 
     def stats(self) -> dict:
-        return {"sim_time_s": self.clock.now, **self.tiered.stats}
+        return {"sim_time_s": self.clock.now,
+                "mirror_d2h_bytes": self.mirror_d2h_bytes,
+                **self.sched_stats, **self.tiered.stats}

@@ -1,0 +1,238 @@
+"""Continuous-batching scheduler with preemption under HBM pressure.
+
+The serving translation of the paper's thesis: log-vs-page tradeoffs only
+appear under *concurrent mixed* load, so the engine must actually run
+concurrent mixed load. The scheduler keeps three queues:
+
+* **waiting** — submitted, not yet prefetched (FIFO by submission order);
+* **running** — sequences decoding together; every tick steps ALL of them
+  through a single batched ``decode_step`` and mirrors each new token into
+  the tiered :class:`~repro.core.engines.kv.KVCacheEngine` in one
+  ``append_many`` batch;
+* **preempted** — spilled under HBM pressure: the model cache row lives in
+  host memory (exact numpy round-trip), the tiered KV on the disk tier via
+  ``KVCacheEngine.preempt``; re-admission restores both.
+
+State machine::
+
+    waiting --admit/prefill--> running --max_new reached--> finished
+                                  |  ^
+               pressure >= 1.0 -> |  | re-admit (FIFO, ahead of waiting)
+                                  v  |
+                               preempted
+
+**Admission** fills the batch up to ``max_batch_seqs`` / ``max_batch_tokens``,
+re-admitting preempted sequences ahead of new arrivals (the starvation
+guard: a preempted request can only wait behind finitely many decode steps).
+New admissions stop while the engine reports full pressure, but an empty
+batch always force-admits — the scheduler never deadlocks with work queued.
+
+**Preemption** triggers when ``KVCacheEngine.pressure()`` reaches 1.0 (the
+engine's HBM accounting has hit its budget). The victim comes from
+``victim_hint`` — ``kvhybrid`` answers from its router's per-sequence reuse
+histogram (coldest sequence first) — with an LRU fallback for ``paged`` /
+``log`` (least recently admitted/restored, ties broken toward the largest
+``resident_bytes``). At least ``min_running`` sequences always keep
+running, so every tick makes progress and every admitted request finishes.
+
+**Coherence rule:** a sequence is preempted only *between* decode steps,
+after its step's KV token has been mirrored (append-then-preempt order), so
+the spilled tiered image always equals the model cache row it shadows, and
+restore changes no bits. Greedy decode is therefore token-identical to the
+sequential reference for ANY admission order, batch size, HBM budget, or
+preemption schedule (``tests/test_scheduler.py`` locks this down).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving import batching
+
+if TYPE_CHECKING:                      # engine.py imports us for generate()
+    from repro.serving.engine import Request, ServingEngine
+
+
+@dataclass
+class _Running:
+    """A sequence in the running batch: its batch-1 model-cache row, the
+    logits its next token will be argmaxed from, and LRU bookkeeping."""
+    req: "Request"
+    cache: dict                        # device arrays, batch dim 1
+    logits: object                     # (1, 1, V) device array
+    length: int                        # tokens in the cache row (pos)
+    mirrored: bool                     # has KV in the tiered engine
+    admitted_tick: int                 # last admission/restore tick (LRU)
+
+
+@dataclass
+class _Preempted:
+    """A spilled sequence: model cache row in host memory, tiered KV on the
+    disk tier (when the family mirrors KV at all)."""
+    req: "Request"
+    cache: dict                        # host numpy arrays
+    logits: np.ndarray
+    length: int
+    mirrored: bool
+
+
+@dataclass
+class SchedulerStats:
+    """Scheduler-level counters (engine-level ones live in tiered.stats)."""
+    ticks: int = 0
+    admitted: int = 0
+    finished: int = 0
+    preempts: int = 0
+    restores: int = 0
+    peak_running: int = 0
+
+    def as_dict(self) -> dict:
+        return {f"sched_{k}": v for k, v in self.__dict__.items()}
+
+
+class Scheduler:
+    """Drives one batch of requests to completion over a ServingEngine."""
+
+    def __init__(self, engine: "ServingEngine", requests: list["Request"]):
+        self.engine = engine
+        cfg = engine.cfg
+        self.max_batch_seqs = max(cfg.max_batch_seqs, 1)
+        self.max_batch_tokens: Optional[int] = cfg.max_batch_tokens
+        self.min_running = max(cfg.min_running, 1)
+        self.waiting: deque["Request"] = deque(requests)
+        self.running: list[_Running] = []
+        self.preempted: deque[_Preempted] = deque()
+        self.stats = SchedulerStats()
+
+    # -------------------------------------------------------------- admission
+    def _batch_tokens(self) -> int:
+        return sum(r.length for r in self.running)
+
+    def _has_room(self, cand_tokens: int) -> bool:
+        if len(self.running) >= self.max_batch_seqs:
+            return False
+        if not self.running:
+            return True                # force progress: never deadlock
+        if self.engine.tiered.pressure() >= 1.0:
+            return False               # admitting now would preempt someone
+        if self.max_batch_tokens is not None and \
+                self._batch_tokens() + cand_tokens > self.max_batch_tokens:
+            return False
+        return True
+
+    def _admit(self) -> None:
+        # preempted sequences re-admit ahead of new arrivals (starvation
+        # guard: FIFO, and nothing can overtake them)
+        while self.preempted and self._has_room(self.preempted[0].length + 1):
+            pre = self.preempted.popleft()
+            if pre.mirrored:
+                self.engine.tiered.restore(pre.req.rid)
+            self.running.append(_Running(
+                req=pre.req, cache=batching.row_to_device(pre.cache),
+                logits=jnp.asarray(pre.logits), length=pre.length,
+                mirrored=pre.mirrored, admitted_tick=self.stats.ticks))
+            self.stats.restores += 1
+        while self.waiting and \
+                self._has_room(len(self.waiting[0].prompt) + 1):
+            req = self.waiting.popleft()
+            logits, cache = self.engine.prefill_one(req)
+            self.running.append(_Running(
+                req=req, cache=cache, logits=logits,
+                length=len(req.prompt), mirrored="k" in cache,
+                admitted_tick=self.stats.ticks))
+            self.stats.admitted += 1
+        self.stats.peak_running = max(self.stats.peak_running,
+                                      len(self.running))
+
+    # ------------------------------------------------------------------ step
+    def _step(self) -> None:
+        """One batched decode step over every running sequence: argmax each
+        row's pending logits, decode all rows at once, mirror the new KV
+        tokens as one multi-sequence append, split the rows back out."""
+        rows = self.running
+        tokens = []
+        for r in rows:
+            nxt = int(jnp.argmax(r.logits[:, -1], -1)[0])
+            r.req.generated.append(nxt)
+            tokens.append(nxt)
+        batch = batching.concat_rows([r.cache for r in rows])
+        positions = batch["pos"]
+        logits, batch = self.engine._decode(
+            self.engine.params, batch,
+            jnp.asarray(tokens, jnp.int32)[:, None], positions)
+        # one batch = one model family, so either every row mirrors or none
+        self.engine.mirror_decode_batch(
+            [r.req.rid for r in rows] if rows[0].mirrored else [], batch,
+            np.asarray(positions))
+        for i, r in enumerate(rows):
+            r.cache = batching.split_row(batch, i)
+            r.logits = logits[i:i + 1]
+            r.length += 1
+
+    def _finish_done(self) -> None:
+        still = []
+        for r in self.running:
+            if len(r.req.generated) >= r.req.max_new:
+                r.req.done = True
+                if r.mirrored:
+                    self.engine.tiered.release(r.req.rid)
+                self.stats.finished += 1
+            else:
+                still.append(r)
+        self.running = still
+
+    # ------------------------------------------------------------ preemption
+    def _pick_victim(self) -> _Running:
+        candidates = [r for r in self.running]
+        hint = self.engine.tiered.victim_hint(
+            [r.req.rid for r in candidates if r.mirrored])
+        if hint is not None:
+            return next(r for r in candidates if r.req.rid == hint)
+        # LRU fallback: least recently (re)admitted, ties toward the row
+        # whose preemption frees the most HBM
+        return min(candidates, key=lambda r: (
+            r.admitted_tick, -self.engine.tiered.resident_bytes(r.req.rid)))
+
+    def _over_budget(self) -> bool:
+        """HBM pressure at the ceiling, or the running batch has decoded
+        its way past the token cap (admission checks only the first step's
+        headroom; growth is reclaimed here)."""
+        if self.engine.tiered.pressure() >= 1.0:
+            return True
+        return (self.max_batch_tokens is not None
+                and self._batch_tokens() > self.max_batch_tokens)
+
+    def _preempt_under_pressure(self) -> None:
+        while self._over_budget() and \
+                len(self.running) > self.min_running:
+            victim = self._pick_victim()
+            self.running.remove(victim)
+            if victim.mirrored:
+                self.engine.tiered.preempt(victim.req.rid)
+            self.preempted.append(_Preempted(
+                req=victim.req, cache=batching.row_to_host(victim.cache),
+                logits=np.asarray(victim.logits), length=victim.length,
+                mirrored=victim.mirrored))
+            self.stats.preempts += 1
+
+    # ------------------------------------------------------------------- run
+    def tick(self) -> bool:
+        """One scheduling round: admit → batched step → retire finished →
+        preempt under pressure. Returns False when all work is done."""
+        self._admit()
+        self._finish_done()    # max_new=0 rows retire without decoding
+        if not self.running:
+            return bool(self.waiting or self.preempted)
+        self.stats.ticks += 1
+        self._step()
+        self._finish_done()
+        self._preempt_under_pressure()
+        return bool(self.waiting or self.running or self.preempted)
+
+    def run(self) -> None:
+        while self.tick():
+            pass

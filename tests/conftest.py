@@ -7,6 +7,14 @@ os.environ.pop("XLA_FLAGS", None)
 import numpy as np
 import pytest
 
+
+def pytest_configure(config):
+    # `-m "not slow"` gives a quick iteration loop; tier-1 runs everything
+    config.addinivalue_line(
+        "markers",
+        "slow: heavyweight serving/property tests (deselect with "
+        "-m \"not slow\")")
+
 try:        # hypothesis is optional: property tests skip when it is absent
     from hypothesis import HealthCheck, settings
 except ModuleNotFoundError:

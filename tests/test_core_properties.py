@@ -160,6 +160,75 @@ def test_kv_engines_agree_on_any_op_sequence(ops):
                 assert np.array_equal(got, first), (name, seq, layer)
 
 
+# --------------------------------------------------------------------------
+# Continuous-batching scheduler: batched == sequential for ANY schedule
+# --------------------------------------------------------------------------
+
+_SERVE_MODEL = None
+
+
+def _serve_model():
+    """One tiny model shared by every hypothesis example (jit caches too)."""
+    global _SERVE_MODEL
+    if _SERVE_MODEL is None:
+        import jax
+        from repro.configs import get_config
+        from repro.models import build_model
+        cfg = get_config("internlm2-1.8b-smoke")
+        model = build_model(cfg, remat=False)
+        params = model.init(jax.random.PRNGKey(0))
+        _SERVE_MODEL = (cfg, model, params)
+    return _SERVE_MODEL
+
+
+@pytest.mark.slow
+@settings(max_examples=5)
+@given(
+    n_requests=st.integers(1, 3),
+    arrival_perm=st.permutations(range(3)),
+    max_new=st.integers(1, 4),
+    max_batch_seqs=st.integers(1, 3),
+    budget_tokens=st.sampled_from([6, 12, 1 << 20]),
+    seed=st.integers(0, 3),
+)
+def test_scheduler_matches_sequential_for_any_schedule(
+        n_requests, arrival_perm, max_new, max_batch_seqs, budget_tokens,
+        seed):
+    """Random arrival schedules × batch widths × HBM budgets: the
+    continuous-batching scheduler's greedy tokens equal the sequential
+    reference for every registered KV engine (tiny budgets force
+    preempt/restore cycles mid-decode; they must be invisible)."""
+    from repro.serving import Request, ServeConfig, ServingEngine
+    cfg, model, params = _serve_model()
+    rng = np.random.default_rng(seed)
+    lens = [(6, 9)[i % 2] for i in range(n_requests)]
+    prompts = [rng.integers(0, cfg.vocab_size, n, dtype=np.int32)
+               for n in lens]
+    token_bytes = (model.cfg.num_layers * 2 * model.cfg.num_kv_heads
+                   * model.cfg.head_dim * 2)
+
+    def mk_engine(name):
+        return ServingEngine(model, params, ServeConfig(
+            max_len=16, page_tokens=4,
+            engine_spec=EngineSpec(engine=name,
+                                   kv_hbm_bytes=budget_tokens * token_bytes,
+                                   kv_hot_window=4, drain_shards=2),
+            max_batch_seqs=max_batch_seqs))
+
+    ref = [Request(rid=i, prompt=p.copy(), max_new=max_new)
+           for i, p in enumerate(prompts)]
+    mk_engine("log").generate_sequential(ref)
+    want = {r.rid: list(r.generated) for r in ref}
+
+    order = [i for i in arrival_perm if i < n_requests]
+    for name in list_kv_engines():
+        reqs = [Request(rid=i, prompt=p.copy(), max_new=max_new)
+                for i, p in enumerate(prompts)]
+        mk_engine(name).generate([reqs[i] for i in order])
+        for r in reqs:
+            assert r.done and r.generated == want[r.rid], (name, r.rid)
+
+
 @settings(max_examples=15)
 @given(st.integers(2, 64))
 def test_monotone_capacity_no_data_loss(cache_pages):

@@ -18,7 +18,8 @@ from repro.core import NVCacheFS, SimClock
 from repro.core.clock import ShardedDrainer
 from repro.core.engines import (EngineSpec, create_kv_engine, get_kv_engine,
                                 list_kv_engines, register_kv_engine)
-from repro.core.kvcache import HybridKVCache, KVSpec, LogKVCache, PagedKVCache
+from repro.core.kvcache import (AdaptiveRouter, HybridKVCache, KVSpec,
+                                LogKVCache, PagedKVCache)
 
 SPEC = KVSpec(num_layers=3, kv_heads=2, head_dim=8, page_tokens=4)
 KV_ENGINES = ("paged", "log", "kvhybrid")
@@ -307,6 +308,66 @@ def test_adaptive_routing_splits_mixed_workload():
     assert small < kv.threshold <= 8 * SPEC.page_bytes
     assert kv.stats["routed_pages"] >= 4
     assert kv.stats["routed_log"] >= 0.9 * 200
+
+
+def test_gather_latency_feedback_converges_from_wrong_prior():
+    """Observed gather *latency* (not just hot/cold counts) must steer the
+    threshold: with identical bimodal histograms and neutral reuse counts,
+    the router that measures slow gathers (patch-dominated reads) converges
+    below the valley — prefill bursts route to pages — while the router
+    measuring cheap gathers keeps a higher threshold. Both start from the
+    wrong log-everything prior."""
+    page_cost = 1e-6
+    routers = {
+        "slow": AdaptiveRouter(1 << 20, SPEC.page_bytes,
+                               page_per_token_s=page_cost),
+        "fast": AdaptiveRouter(1 << 20, SPEC.page_bytes,
+                               page_per_token_s=page_cost),
+    }
+    lat = {"slow": 10 * page_cost, "fast": page_cost}
+    for i in range(64):
+        for name, r in routers.items():
+            r.route(128 if i % 2 else 8192)          # bimodal sizes
+            # neutral reuse split (no count bias), distinct latencies
+            r.observe_read(seq=i % 3, hot_tokens=5, cold_tokens=5,
+                           latency_s=lat[name] * 10)
+    assert routers["slow"].gather_lat_s > routers["fast"].gather_lat_s
+    assert routers["slow"].threshold < routers["fast"].threshold
+    # slow gathers: the large mode must have crossed to the page side
+    assert routers["slow"].threshold <= 8192
+    assert routers["slow"].route(8192) == "pages"
+    assert routers["slow"].route(128) == "log"       # small writes still log
+
+
+def test_hybrid_engine_feeds_real_gather_latency_to_router():
+    """The engine wires simulated read latency into the router (and tracks
+    per-sequence reuse for victim selection)."""
+    kv, _ = _mk("kvhybrid")
+    rng = np.random.default_rng(12)
+    for _ in range(10):
+        kv.append(0, _tok(rng))
+    assert kv.router.gather_lat_s is None
+    kv.read(0, 0)
+    assert kv.router.gather_lat_s is not None and kv.router.gather_lat_s > 0
+    assert kv.router.reuse_score(0) is not None
+
+
+def test_hybrid_victim_hint_prefers_cold_sequences():
+    """victim_hint consults the router's per-sequence reuse histogram: the
+    sequence whose reads never touch the hot window is the cheapest spill."""
+    kv, _ = _mk("kvhybrid")
+    rng = np.random.default_rng(13)
+    for _ in range(24):                  # long history: hot window covers
+        kv.append(0, _tok(rng))          # only a sliver → cold-heavy reads
+    for _ in range(5):                   # short history: mostly hot reads
+        kv.append(1, _tok(rng))
+    assert kv.victim_hint([0, 1]) is None            # nothing read yet → LRU
+    kv.read(0, 0)
+    kv.read(1, 0)
+    assert kv.router.reuse_score(0) < kv.router.reuse_score(1)
+    assert kv.victim_hint([0, 1]) == 0               # coldest reuse goes first
+    kv.release(0)
+    assert kv.router.reuse_score(0) is None          # reuse state released
 
 
 # ------------------------------------------- nvhybrid crash equivalence (FS)

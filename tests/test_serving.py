@@ -49,12 +49,44 @@ def test_tiered_mirror_consistent_with_model_cache():
     rng = np.random.default_rng(2)
     req = Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 12,
                                              dtype=np.int32), max_new=4)
-    engine.generate([req])
+    engine.generate_sequential([req])
     n = engine.tiered.seq_len[0]
     assert n == 12 + 4
     got = engine.tiered.gather(0, layer=0)
     assert got.shape[1] == n
     assert np.isfinite(got.astype(np.float32)).all()
+
+
+def test_batched_generate_releases_finished_sequences():
+    """The scheduler frees a finished request's KV from every tier — that
+    is what makes room for the next admission under pressure."""
+    cfg, engine = _engine("paged")
+    rng = np.random.default_rng(2)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 12,
+                                               dtype=np.int32), max_new=4)
+            for i in range(2)]
+    engine.generate(reqs)
+    assert all(r.done for r in reqs)
+    assert engine.tiered.seq_len == {}
+    assert engine.stats()["releases"] == 2
+
+
+def test_mirror_transfers_only_the_new_token_bytes():
+    """Regression: the decode mirror must slice the new token on device and
+    transfer exactly one (L, 2, K, D) fp16 token per generated token — the
+    byte stat would be ~max_len× larger if a whole cache row round-tripped."""
+    prompt_len, max_new = 12, 4
+    cfg, engine = _engine("log")
+    rng = np.random.default_rng(4)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, prompt_len,
+                                               dtype=np.int32),
+                    max_new=max_new) for i in range(2)]
+    engine.generate(reqs)
+    token_bytes = (engine.model.cfg.num_layers * 2
+                   * engine.model.cfg.num_kv_heads
+                   * engine.model.cfg.head_dim * 2)        # fp16
+    expect = 2 * (prompt_len + max_new) * token_bytes      # 2 requests
+    assert engine.stats()["mirror_d2h_bytes"] == expect
 
 
 def test_ssm_arch_skips_kv_mirroring():
