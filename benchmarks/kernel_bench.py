@@ -2,6 +2,13 @@
 their jnp oracles on CPU (correctness-scale), plus the analytic TPU-side
 FLOP/byte counts the roofline uses. Real-TPU timing happens on hardware; the
 bench records the work the kernels would do.
+
+``--smoke`` is the CI gate for the serving decode kernel: it runs
+``paged_attention`` (single-layer and the batched multi-layer entry) in
+Pallas **interpret mode** against the jnp oracles over the block-table
+contract's edge cases — ragged lengths, an empty row, single-page
+sequences — and exits nonzero on any mismatch, so kernel regressions fail
+the workflow before the serving tier ever sees them.
 """
 from __future__ import annotations
 
@@ -14,7 +21,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import flash_attention, log_patch, paged_attention
+from repro.kernels import (flash_attention, log_patch, paged_attention,
+                           paged_attention_layers)
+from repro.kernels.paged_attention.ref import (paged_attention_layers_ref,
+                                               paged_attention_ref)
 from repro.roofline.hw import V5E
 
 
@@ -58,6 +68,66 @@ def bench_paged(B=8, H=8, K=4, D=128, T=16, P=256, MP=16):
             "tpu_roofline_us": bytes_moved / V5E.hbm_bandwidth * 1e6}
 
 
+def bench_paged_layers(L=4, B=8, H=8, K=4, D=128, T=16, P=256, MP=16):
+    """The batched multi-layer pooled-decode entry: one kernel launch for
+    the whole (L, B) decode attention read over the device page pool."""
+    rng = np.random.default_rng(4)
+    q = jnp.asarray(rng.standard_normal((L, B, H, D)), jnp.float32)
+    pk = jnp.asarray(rng.standard_normal((L, P, T, K, D)), jnp.float32)
+    pv = jnp.asarray(rng.standard_normal((L, P, T, K, D)), jnp.float32)
+    tbl = jnp.asarray(rng.integers(0, P, (B, MP)), jnp.int32)
+    lens = jnp.asarray(rng.integers(T, T * MP, B), jnp.int32)
+    t_ref = _time(paged_attention_layers, q, pk, pv, tbl, lens)
+    t_pal = _time(lambda *a: paged_attention_layers(*a, force_pallas=True),
+                  q, pk, pv, tbl, lens)
+    bytes_moved = L * B * MP * T * K * D * 2 * 2 * 4
+    return {"kernel": "paged_attention_layers",
+            "shape": f"L{L} B{B} pages{MP}x{T}",
+            "ref_us": t_ref * 1e6, "pallas_interp_us": t_pal * 1e6,
+            "tpu_bytes": bytes_moved,
+            "tpu_roofline_us": bytes_moved / V5E.hbm_bandwidth * 1e6}
+
+
+def smoke_check() -> dict:
+    """Interpret-mode parity gate over the block-table contract edges:
+    ragged lengths, an empty row, a single-token row, single-page
+    sequences, for both paged_attention entries. Raises on mismatch."""
+    rng = np.random.default_rng(7)
+    L, B, H, K, D, T, P, MP = 2, 4, 8, 4, 64, 8, 24, 4
+    q = jnp.asarray(rng.standard_normal((L, B, H, D)), jnp.float32)
+    pk = jnp.asarray(rng.standard_normal((L, P, T, K, D)), jnp.float32)
+    pv = jnp.asarray(rng.standard_normal((L, P, T, K, D)), jnp.float32)
+    tbl = jnp.asarray(rng.integers(0, P, (B, MP)), jnp.int32)
+    # empty row, single token, exactly one page, ragged mid-page
+    lens = jnp.asarray([0, 1, T, T * MP - 3], jnp.int32)
+    cases = {
+        "paged_attention": (
+            paged_attention(q[0], pk[0], pv[0], tbl, lens,
+                            force_pallas=True),
+            paged_attention_ref(q[0], pk[0], pv[0], tbl, lens)),
+        "paged_attention_layers": (
+            paged_attention_layers(q, pk, pv, tbl, lens, force_pallas=True),
+            paged_attention_layers_ref(q, pk, pv, tbl, lens)),
+    }
+    errs = {}
+    for name, (out, ref) in cases.items():
+        err = float(jnp.max(jnp.abs(out - ref)))
+        errs[name] = err
+        if not np.isfinite(err) or err > 2e-5:
+            raise SystemExit(
+                f"kernel smoke FAILED: {name} diverges from its oracle "
+                f"(max abs err {err:.3e}) on the ragged/empty/single-page "
+                f"contract cases")
+        empty = np.asarray(out)[..., 0, :, :] if out.ndim == 4 else \
+            np.asarray(out)[0]
+        if np.any(empty != 0):
+            raise SystemExit(
+                f"kernel smoke FAILED: {name} returned nonzero output for "
+                f"an empty (length 0) row")
+    return {"kernel": "smoke_gate", "shape": f"lens={list(map(int, lens))}",
+            "max_abs_err": errs}
+
+
 def bench_log_patch(P=64, T=16, C=512, N=128):
     rng = np.random.default_rng(2)
     pool = jnp.asarray(rng.standard_normal((P, T, C)), jnp.float32)
@@ -77,10 +147,23 @@ def bench_log_patch(P=64, T=16, C=512, N=128):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="artifacts/kernel_bench.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: interpret-mode paged_attention parity on "
+                         "the block-table contract edges + small timing "
+                         "rows; exits nonzero on kernel regression")
     args = ap.parse_args(argv)
-    rows = [bench_flash(), bench_paged(), bench_log_patch()]
+    if args.smoke:
+        rows = [smoke_check(),
+                bench_paged(B=4, K=4, D=64, T=8, P=32, MP=4),
+                bench_paged_layers(L=2, B=4, K=4, D=64, T=8, P=32, MP=4)]
+        print("paged_attention smoke gate passed:", rows[0]["max_abs_err"])
+    else:
+        rows = [bench_flash(), bench_paged(), bench_paged_layers(),
+                bench_log_patch()]
     print("kernel,shape,ref_us,pallas_interp_us,tpu_roofline_us")
     for r in rows:
+        if r["kernel"] == "smoke_gate":
+            continue
         print(f"{r['kernel']},{r['shape']},{r['ref_us']:.0f},"
               f"{r['pallas_interp_us']:.0f},{r['tpu_roofline_us']:.2f}")
     out = Path(args.out)

@@ -8,7 +8,12 @@ The ``serve`` workload is the serving-scale regime: a Poisson arrival
 process through a continuous-batching loop (the model-free twin of the
 serving scheduler) with preemption when the engine's HBM accounting crosses
 its budget — it additionally reports throughput, p50/p99 request latency,
-and preempt/restore counts per engine. ``--smoke`` shrinks it to CI size.
+preempt/restore counts, the pool hit rate, and the device→host mirror bytes
+the pooled path saves, per engine. Pool-capable engines (``paged``) run the
+serve workload over their device-resident page pool by default (appends are
+device-born, page-granular LRU spills under pressure) — that is the decode
+-throughput comparison against the mirror-path engines; ``--no-pool`` forces
+everyone onto the host-mirror path. ``--smoke`` shrinks it to CI size.
 """
 from __future__ import annotations
 
@@ -24,20 +29,57 @@ from repro.core.engines import EngineSpec, create_kv_engine, list_kv_engines
 from repro.core.kvcache import KVSpec
 
 
+def _pool_hit_rate(stats: dict):
+    """Fraction of KV reuse served from the fast tier: pool residency for
+    pooled engines, HBM LRU hits for host-paged, hot-window hits for the
+    log designs. None when the workload never exercised the fast tier."""
+    if stats.get("pool_hits") or stats.get("pool_faults"):
+        hits, misses = stats["pool_hits"], stats["pool_faults"]
+    elif stats.get("hbm_hits") or stats.get("hbm_misses"):
+        hits, misses = stats["hbm_hits"], stats["hbm_misses"]
+    else:
+        hits = stats.get("hot_hits", 0)
+        misses = stats.get("patches", 0) + stats.get("host_reads", 0)
+    total = hits + misses
+    return hits / total if total else None
+
+
 def bench(engine: str, *, layers=8, kv_heads=8, head_dim=128, tokens=512,
-          workload="decode", drain_shards=1, seed=0, smoke=False) -> dict:
+          workload="decode", drain_shards=1, seed=0, smoke=False,
+          pool=True) -> dict:
     kvspec = KVSpec(num_layers=layers, kv_heads=kv_heads, head_dim=head_dim,
                     page_tokens=16)
     clock = SimClock()
     spec = EngineSpec(engine=engine, kv_hbm_bytes=2 << 20, kv_hot_window=128,
                       drain_shards=drain_shards)
     kv = create_kv_engine(spec, kvspec, clock)
+    pooled = False
     if workload == "serve":
         wl = ServeWorkload(seed=seed)
         if smoke:
             wl = wl.smoke()
+        if pool and kv.supports_pool():
+            # pool floor: max_batch_seqs - 1 max-length sequences
+            # co-resident plus a decode reserve page per batch slot — a
+            # full-width batch of worst-case sequences still overflows (so
+            # the preemption path is exercised), but a pool smaller than
+            # the steady working set would measure page thrash, not the
+            # design
+            max_seq = max(wl.prompt_tokens) + max(wl.decode_tokens)
+            seq_pages = -(-max_seq // kvspec.page_tokens)
+            min_pages = (max(wl.max_batch_seqs - 1, 2) * seq_pages
+                         + wl.max_batch_seqs)
+            budget_pages = spec.kv_hbm_bytes // (kvspec.page_bytes * layers)
+            kv.init_pool(pages=max(budget_pages, min_pages))
+            pooled = True
         serve = run_serve_workload(kv, kvspec, wl, clock)
         appended = serve.pop("appended_tokens")
+        per_token = kvspec.token_bytes * layers
+        serve["pool_hit_rate"] = _pool_hit_rate(kv.stats)
+        # bytes a dense HBM mirror would have moved device→host for the
+        # same token stream — zero is saved on the mirror path
+        serve["mirror_d2h_saved_bytes"] = appended * per_token if pooled \
+            else 0
     else:
         by_name = {w.name: w for w in kv_workloads(tokens)}
         if workload not in by_name:
@@ -49,7 +91,7 @@ def bench(engine: str, *, layers=8, kv_heads=8, head_dim=128, tokens=512,
         serve = {}
     host_w = clock.bytes_moved("host", "write")
     host_r = clock.bytes_moved("host", "read")
-    return {"design": engine, "workload": wl.name,
+    return {"design": engine, "workload": wl.name, "pooled": pooled,
             "drain_shards": drain_shards, "sim_time_s": clock.now,
             "host_write_bytes": host_w, "host_read_bytes": host_r,
             "write_amplification": host_w / (
@@ -69,6 +111,10 @@ def main(argv=None):
     ap.add_argument("--drain-shards", type=int, default=1)
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized serve workload (seconds, still preempts)")
+    ap.add_argument("--no-pool", dest="pool", action="store_false",
+                    help="serve workload: force pool-capable engines onto "
+                         "the host-mirror path (baseline for the pooled "
+                         "decode-throughput comparison)")
     ap.add_argument("--out", default="artifacts/kvcache_bench.json")
     args = ap.parse_args(argv)
     engines = (list_kv_engines() if args.engines == "all"
@@ -76,17 +122,22 @@ def main(argv=None):
     wl_names = ([w.name for w in kv_workloads()] + ["serve"]
                 if args.workloads == "all" else args.workloads.split(","))
     rows = [bench(e, tokens=args.tokens, workload=w,
-                  drain_shards=args.drain_shards, smoke=args.smoke)
+                  drain_shards=args.drain_shards, smoke=args.smoke,
+                  pool=args.pool)
             for w in wl_names for e in engines]
     print("design,workload,sim_time_s,write_amp,host_read_MB,"
-          "tput_tok_s,p50_ms,p99_ms,preempts")
+          "tput_tok_s,p50_ms,p99_ms,preempts,pool_hit,d2h_saved_MB")
     for r in rows:
+        hit = r.get("pool_hit_rate")
         serve_cols = (f"{r['throughput_tok_per_s']:.0f},"
                       f"{r['p50_latency_s']*1e3:.2f},"
                       f"{r['p99_latency_s']*1e3:.2f},"
-                      f"{r['preempts']}" if r["workload"] == "serve"
-                      else ",,,")
-        print(f"{r['design']},{r['workload']},{r['sim_time_s']:.4f},"
+                      f"{r['preempts']},"
+                      f"{'' if hit is None else f'{hit:.3f}'},"
+                      f"{r['mirror_d2h_saved_bytes']/1e6:.1f}"
+                      if r["workload"] == "serve" else ",,,,,")
+        name = r["design"] + ("+pool" if r["pooled"] else "")
+        print(f"{name},{r['workload']},{r['sim_time_s']:.4f},"
               f"{r['write_amplification']:.2f},"
               f"{r['host_read_bytes']/1e6:.1f},{serve_cols}")
     # write the artifact BEFORE the gate so a failing CI run still leaves

@@ -1,6 +1,8 @@
 """Serving example: continuous-batching generation with the tiered KV
 cache, comparing the paper's designs at the serving call-site (DESIGN.md
-§2a) — including preemption under HBM pressure.
+§2a) — including preemption under HBM pressure and the mirror-free pooled
+decode path (decode straight over the device page pool, zero device→host
+mirror traffic).
 
     PYTHONPATH=src python examples/serve_kv_offload.py
 """
@@ -21,30 +23,67 @@ def main():
     prompts = [rng.integers(0, cfg.vocab_size, 24, dtype=np.int32)
                for _ in range(3)]
 
-    def run(design, hbm_bytes, sequential=False):
+    def run(design, hbm_bytes, sequential=False, paged_decode=None,
+            chunk=None):
         engine = ServingEngine(model, params, ServeConfig(
             max_len=64, page_tokens=8,
             engine_spec=EngineSpec(engine=design, kv_hot_window=16,
                                    drain_shards=2, kv_hbm_bytes=hbm_bytes),
-            max_batch_seqs=4))
+            max_batch_seqs=4, paged_decode=paged_decode,
+            prefill_chunk_tokens=chunk))
         reqs = [Request(rid=i, prompt=p.copy(), max_new=16)
                 for i, p in enumerate(prompts)]
         (engine.generate_sequential if sequential
          else engine.generate)(reqs)
-        return [r.generated for r in reqs], engine.stats()
+        return [r.generated for r in reqs], engine
 
-    reference, _ = run("log", 64 << 20, sequential=True)
-
-    # tight HBM budget: ~40 resident tokens across the whole batch — room
-    # for two requests to co-run, not three, so the scheduler must
-    # preempt/restore mid-decode, and tokens must not change
-    token_bytes = (cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim * 2)
-    outputs = {}
+    # the reference every path below must reproduce token-for-token: the
+    # one-request-at-a-time loop over the dense mirror
+    reference, _ = run("log", 64 << 20, sequential=True,
+                       paged_decode=False)
     designs = list_kv_engines()          # paged, log, kvhybrid, plugins...
+
+    # ---- mirror-free pooled decode: every registered engine, unconstrained
+    # budget. Pool-capable engines decode over their device page pool with
+    # ZERO device→host mirror bytes; the rest fall back to the mirror path
+    # transparently — and everyone still generates the reference tokens.
+    print("pooled decode (auto: pool-capable engines go mirror-free)")
     for design in designs:
-        outputs[design], s = run(design, 40 * token_bytes)
-        print(f"design={design:8s} sim_tier_time={s['sim_time_s']*1e6:9.1f}us "
-              f"preempts={s['preempts']} restores={s['restores']} "
+        out, eng = run(design, 64 << 20, chunk=12)
+        s = eng.stats()
+        mode = "pooled" if eng.pooled else "mirror"
+        print(f"  design={design:8s} path={mode:6s} "
+              f"mirror_d2h_bytes={s['mirror_d2h_bytes']:8d} "
+              f"prefill_chunks={s['sched_prefill_chunks']}")
+        assert out == reference, (design, "pooled decode must match the "
+                                  "sequential mirrored reference")
+        if eng.pooled:
+            assert s["mirror_d2h_bytes"] == 0, \
+                "the pooled path must never mirror a token device→host"
+        assert s["sched_prefill_chunks"] >= 1, \
+            "24-token prompts over a 12-token chunk budget must split"
+
+    # ---- preemption under HBM pressure: a budget with room for two
+    # requests to co-run, not three, so the scheduler must preempt/restore
+    # mid-decode, and tokens must not change
+    token_bytes = (cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim * 2)
+    print("preemption under a binding HBM budget")
+    outputs = {}
+    for design in designs:
+        # pooled paged accounts whole fp32 pool pages (2x the fp16
+        # token_bytes) and refuses admissions it cannot place, so its
+        # squeeze point differs: 9 pool pages — the smallest pool the
+        # liveness floor (max_len/page_tokens + 1) accepts — admit two
+        # prompts (3 pages each) but not their decoded growth (5 each)
+        budget = (9 * 8 * token_bytes * 2 if design == "paged"
+                  else 40 * token_bytes)
+        outputs[design], eng = run(design, budget)
+        assert (design != "paged") or eng.pooled, \
+            "paged must stay on the pooled path in the pressure run"
+        s = eng.stats()
+        print(f"  design={design:8s} sim_tier_time="
+              f"{s['sim_time_s']*1e6:9.1f}us preempts={s['preempts']} "
+              f"restores={s['restores']} "
               f"peak_batch={s['sched_peak_running']}")
         assert s["preempts"] >= 1, "budget should have forced a preemption"
     assert all(outputs[d] == reference for d in designs), \
@@ -52,11 +91,15 @@ def main():
     print(f"\nall {len(designs)} registered KV designs, decoding as ONE "
           "continuously-batched pool under a budget that forces "
           "preempt/restore cycles, generated exactly the sequential "
-          "reference tokens — designs differ only in tier traffic (paging "
-          "pays 2x writes + page DMA on miss; logging pays 1x sequential "
-          "writes + patch reads; kvhybrid routes each append to whichever "
-          "side wins it), exactly the paper's trade-off transplanted to "
-          "the serving tier.")
+          "reference tokens — and the paged design did it MIRROR-FREE: "
+          "decode ran the paged_attention kernel straight over its "
+          "device-resident page pool (block-table indirection), spilling "
+          "LRU pool pages at page granularity under pressure, with zero "
+          "device→host mirror traffic. The designs differ only in tier "
+          "traffic (paging pays page DMA + page-granular spills; logging "
+          "pays 1x sequential writes + patch reads; kvhybrid routes each "
+          "append to whichever side wins it) — the paper's trade-off "
+          "transplanted to the serving tier.")
 
 
 if __name__ == "__main__":

@@ -138,9 +138,86 @@ class KVCacheEngine(abc.ABC):
         ``None`` means no opinion — the scheduler falls back to LRU.
         ``kvhybrid`` overrides this to consult its router's per-sequence
         reuse histogram (cold-read-heavy sequences are the cheapest to
-        serve from the spilled tier, so they go first).
+        serve from the spilled tier, so they go first); ``paged`` in pooled
+        mode answers at page granularity (the candidate whose preemption
+        frees the most device pool pages).
         """
         return None
+
+    def can_admit_tokens(self, n_tokens: int) -> bool:
+        """Would admitting a sequence of ``n_tokens`` fit right now?
+
+        Engines with hard allocation limits (the pooled paged engine: a
+        fixed number of device pool pages) override this so the scheduler
+        never admits a sequence it cannot place. The default is True —
+        host-tier engines self-limit through ``pressure()`` alone.
+        """
+        return True
+
+    # ----------------------------------------------- device-resident KV pool
+    # The mirror-free serving path (ISSUE 4): an engine that supports
+    # pooling owns (L, P, T, K, D) device arrays of KV pages; the serving
+    # engine decodes *directly* over them with the paged_attention kernel
+    # (block-table indirection), so no dense per-sequence mirror and no
+    # device→host copy exists on the decode path. Engines that return False
+    # from supports_pool() (log, kvhybrid — their layouts are logs, not
+    # page pools) transparently stay on the mirrored dense-cache path.
+
+    def supports_pool(self) -> bool:
+        """True if this engine can own a device-resident paged KV pool."""
+        return False
+
+    @property
+    def pooled(self) -> bool:
+        """True once :meth:`init_pool` has activated the device pool."""
+        return False
+
+    def init_pool(self, dtype=None, pages: Optional[int] = None) -> None:
+        """Activate pooled mode: allocate the device page pool (sized from
+        the engine's HBM budget unless ``pages`` overrides it). Must be
+        called before any append. ``dtype`` defaults to the KVSpec dtype;
+        the serving engine passes the model's cache dtype so pooled decode
+        is bit-identical to the dense path."""
+        raise RuntimeError(
+            f"KV engine {self.engine_name!r} has no paged pool; check "
+            f"supports_pool() before init_pool()")
+
+    def pool_views(self):
+        """The device pool arrays ``(pool_k, pool_v)``, each
+        ``(L, P, T, K, D)``. The engine retains ownership — callers must
+        hand updated arrays back through :meth:`commit_decode` /
+        :meth:`commit_prefill`."""
+        raise RuntimeError(
+            f"KV engine {self.engine_name!r} has no paged pool")
+
+    def prepare_decode(self, seqs: Sequence[int], max_pages: int):
+        """Ready one decode step for ``seqs``: fault every spilled page
+        back in, allocate a fresh page for each sequence whose next token
+        starts one, and return ``(block_table, lengths)`` — an
+        ``(B, max_pages) int32`` table plus current token counts."""
+        raise RuntimeError(
+            f"KV engine {self.engine_name!r} has no paged pool")
+
+    def commit_decode(self, pool_k, pool_v, seqs: Sequence[int]) -> None:
+        """Accept updated pool arrays after the model scattered one new
+        token per sequence in ``seqs``; advances ``seq_len`` and the
+        resident-page accounting (HBM write charges, no host traffic)."""
+        raise RuntimeError(
+            f"KV engine {self.engine_name!r} has no paged pool")
+
+    def alloc_prefill(self, seq: int, n_tokens: int):
+        """Allocate pages covering ``n_tokens`` upcoming tokens of ``seq``
+        and return the sequence's physical-page row (np.int32)."""
+        raise RuntimeError(
+            f"KV engine {self.engine_name!r} has no paged pool")
+
+    def commit_prefill(self, pool_k, pool_v, seq: int,
+                       n_tokens: int) -> None:
+        """Accept updated pool arrays after a prompt's KV was scattered
+        into ``seq``'s pages on device (the admission path's one
+        device-side copy; still zero device→host traffic)."""
+        raise RuntimeError(
+            f"KV engine {self.engine_name!r} has no paged pool")
 
 
 _KV_REGISTRY: dict[str, type[KVCacheEngine]] = {}

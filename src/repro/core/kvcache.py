@@ -165,7 +165,23 @@ class _TieredKV(KVCacheEngine):
 
 @register_kv_engine("paged")
 class PagedKVCache(_TieredKV):
-    """NVPages design over (layer, seq) KV pages."""
+    """NVPages design over (layer, seq) KV pages.
+
+    Two modes share the block table and the (seq → [phys]) indirection:
+
+    * **host mode** (default, the original design): pages live in a host
+      numpy pool, an HBM LRU models the device working set, appends pay the
+      2× redo+page host write, misses DMA whole pages up.
+    * **pooled mode** (:meth:`init_pool`, the mirror-free serving path):
+      pages live in device-resident ``(L, P, T, K, D)`` arrays the
+      paged_attention kernel reads directly. Page alloc/free is tied to the
+      same LRU accounting — when the fixed pool fills, the least-recently
+      -used page of a non-pinned sequence is *spilled to the host tier at
+      page granularity* (D2H one page) and faulted back on demand (H2D),
+      so HBM-pressure spills evict pool pages, never dense per-sequence
+      mirrors. Decode appends are device-born (the model scatters them in
+      place) and cost HBM writes only — zero device→host mirror traffic.
+    """
 
     def __init__(self, spec: KVSpec, clock: SimClock, *,
                  hbm_budget_bytes: int):
@@ -173,8 +189,10 @@ class PagedKVCache(_TieredKV):
         self.pool: dict[tuple, np.ndarray] = {}      # (layer, phys) → page
         self.block_table: dict[int, list[int]] = {}  # seq → [phys per logical]
         self.hbm_lru = LRUList()                     # (layer, phys) resident
+        self.hbm_budget_bytes = hbm_budget_bytes
         self.hbm_capacity = max(hbm_budget_bytes // spec.page_bytes, 1)
         self.next_phys = 0
+        self._pooled = False
         self.stats.update({"hbm_hits": 0, "hbm_misses": 0, "dma_up_bytes": 0,
                            "host_writes": 0, "redo_bytes": 0})
 
@@ -182,6 +200,284 @@ class PagedKVCache(_TieredKV):
     def from_spec(cls, spec: EngineSpec, kvspec: KVSpec,
                   clock: SimClock) -> "PagedKVCache":
         return cls(kvspec, clock, hbm_budget_bytes=spec.kv_hbm_bytes)
+
+    # ------------------------------------------------------ device page pool
+    def supports_pool(self) -> bool:
+        return True
+
+    @property
+    def pooled(self) -> bool:
+        return self._pooled
+
+    def init_pool(self, dtype=None, pages: Optional[int] = None) -> None:
+        import jax.numpy as jnp
+        if self._pooled:
+            raise RuntimeError("init_pool() called twice")
+        if self.seq_len or self.pool or self._preempted:
+            raise RuntimeError("init_pool() must run before any append")
+        spec = self.spec
+        self.pool_dtype = np.dtype(dtype if dtype is not None else spec.dtype)
+        # one physical page spans every layer (the block table is shared by
+        # the whole stack), so a page group costs L per-layer pages of HBM
+        self._group_bytes = (spec.num_layers * 2 * spec.page_tokens
+                             * spec.kv_heads * spec.head_dim
+                             * self.pool_dtype.itemsize)
+        self.pool_pages = (pages if pages is not None else
+                           max(self.hbm_budget_bytes // self._group_bytes, 1))
+        shape = (spec.num_layers, self.pool_pages, spec.page_tokens,
+                 spec.kv_heads, spec.head_dim)
+        self.dev_k = jnp.zeros(shape, self.pool_dtype)
+        self.dev_v = jnp.zeros(shape, self.pool_dtype)
+        self.free_pages: list[int] = list(range(self.pool_pages - 1, -1, -1))
+        self.pool_lru = LRUList()                    # resident phys pages
+        self.phys_owner: dict[int, tuple[int, int]] = {}  # phys → (seq, log)
+        self.host_pages: dict[tuple[int, int], np.ndarray] = {}  # spilled
+        self._in_restore = False
+        self._pooled = True
+        self.stats.update({"pool_appends": 0, "pool_hits": 0,
+                           "pool_faults": 0, "pool_page_spills": 0,
+                           "pool_d2h_bytes": 0, "pool_h2d_bytes": 0})
+
+    def pool_views(self):
+        if not self._pooled:
+            return super().pool_views()      # the loud "no pool" error
+        return self.dev_k, self.dev_v
+
+    def _token_group_bytes(self) -> int:
+        """One token across all layers at pool dtype."""
+        spec = self.spec
+        return (spec.num_layers * 2 * spec.kv_heads * spec.head_dim
+                * self.pool_dtype.itemsize)
+
+    def _page_np(self, phys: int) -> np.ndarray:
+        """Materialize device page ``phys`` as host (L, 2, T, K, D)."""
+        import jax.numpy as jnp
+        return np.asarray(jnp.stack(
+            [self.dev_k[:, phys], self.dev_v[:, phys]], axis=1))
+
+    def _spill_lru_page(self, pinned: set) -> int:
+        """Evict the least-recently-used resident page of a non-pinned
+        sequence to the host tier (page-granular spill); returns the freed
+        physical index."""
+        for phys in self.pool_lru.lru_order():
+            seq, logical = self.phys_owner[phys]
+            if seq in pinned:
+                continue
+            page = self._page_np(phys)
+            self.host_pages[(seq, logical)] = page
+            self.block_table[seq][logical] = -1
+            self.phys_owner.pop(phys)
+            self.pool_lru.remove(phys)
+            self.clock.charge(HOST_LINK, "write", page.nbytes,
+                              random_access=True)          # D2H page out
+            self.stats["pool_page_spills"] += 1
+            self.stats["pool_d2h_bytes"] += page.nbytes
+            return phys
+        raise RuntimeError(
+            "paged pool exhausted: every resident page belongs to a pinned "
+            "sequence — the HBM budget is too small for the running batch")
+
+    def _alloc_page(self, pinned: set) -> int:
+        if self.free_pages:
+            return self.free_pages.pop()
+        return self._spill_lru_page(pinned)
+
+    def _extend_table(self, seq: int, pinned: set) -> None:
+        table = self.block_table.setdefault(seq, [])
+        phys = self._alloc_page(pinned)
+        self.phys_owner[phys] = (seq, len(table))
+        table.append(phys)
+        self.pool_lru.touch(phys)
+
+    def _fault_page(self, seq: int, logical: int, pinned: set) -> None:
+        import jax.numpy as jnp
+        phys = self._alloc_page(pinned)
+        page = self.host_pages.pop((seq, logical))       # (L, 2, T, K, D)
+        self.dev_k = self.dev_k.at[:, phys].set(
+            jnp.asarray(page[:, 0], self.pool_dtype))
+        self.dev_v = self.dev_v.at[:, phys].set(
+            jnp.asarray(page[:, 1], self.pool_dtype))
+        self.block_table[seq][logical] = phys
+        self.phys_owner[phys] = (seq, logical)
+        self.pool_lru.touch(phys)
+        self.clock.charge(HOST_LINK, "read", page.nbytes,
+                          random_access=True)            # H2D fault-in
+        self.stats["pool_faults"] += 1
+        self.stats["pool_h2d_bytes"] += page.nbytes
+
+    def _ensure_seq_resident(self, seq: int, pinned: set) -> None:
+        for logical, phys in enumerate(self.block_table.get(seq, [])):
+            if phys < 0:
+                self._fault_page(seq, logical, pinned)
+            else:
+                self.pool_lru.touch(phys)
+                self.stats["pool_hits"] += 1
+
+    def prepare_decode(self, seqs: Sequence[int], max_pages: int):
+        pinned = set(seqs)
+        for seq in seqs:
+            self._check_active(seq)
+            self._ensure_seq_resident(seq, pinned)
+            table = self.block_table.setdefault(seq, [])
+            if self.seq_len.get(seq, 0) >= self.spec.page_tokens * len(table):
+                self._extend_table(seq, pinned)
+        tbl = np.zeros((len(seqs), max_pages), np.int32)
+        lens = np.zeros(len(seqs), np.int32)
+        for i, seq in enumerate(seqs):
+            row = self.block_table.get(seq, [])
+            if len(row) > max_pages:
+                raise ValueError(
+                    f"sequence {seq} spans {len(row)} pages > max_pages="
+                    f"{max_pages}")
+            tbl[i, :len(row)] = row
+            lens[i] = self.seq_len.get(seq, 0)
+        return tbl, lens
+
+    def commit_decode(self, pool_k, pool_v, seqs: Sequence[int]) -> None:
+        self.dev_k, self.dev_v = pool_k, pool_v
+        per_tok = self._token_group_bytes()
+        for seq in seqs:
+            pos = self.seq_len.get(seq, 0)
+            self.seq_len[seq] = pos + 1
+            self.pool_lru.touch(
+                self.block_table[seq][pos // self.spec.page_tokens])
+            self.clock.charge(HBM, "write", per_tok)
+            self.stats["pool_appends"] += 1
+
+    def alloc_prefill(self, seq: int, n_tokens: int):
+        pinned = {seq}
+        self._check_active(seq)
+        self._ensure_seq_resident(seq, pinned)
+        table = self.block_table.setdefault(seq, [])
+        end = self.seq_len.get(seq, 0) + n_tokens
+        need = -(-end // self.spec.page_tokens) - len(table)
+        for _ in range(max(need, 0)):
+            self._extend_table(seq, pinned)
+        return np.asarray(table, np.int32)
+
+    def commit_prefill(self, pool_k, pool_v, seq: int,
+                       n_tokens: int) -> None:
+        self.dev_k, self.dev_v = pool_k, pool_v
+        self.seq_len[seq] = self.seq_len.get(seq, 0) + n_tokens
+        for phys in self.block_table.get(seq, []):
+            if phys >= 0:
+                self.pool_lru.touch(phys)
+        self.clock.charge(HBM, "write", n_tokens * self._token_group_bytes())
+        self.stats["pool_appends"] += n_tokens
+
+    def can_admit_tokens(self, n_tokens: int) -> bool:
+        if not self._pooled:
+            return True
+        pages_needed = -(-n_tokens // self.spec.page_tokens)
+        return pages_needed + self._reserve_pages() <= len(self.free_pages)
+
+    def _reserve_pages(self) -> int:
+        """Pages the next decode step will claim: one per active sequence
+        whose next token starts a fresh page."""
+        T = self.spec.page_tokens
+        return sum(1 for seq, n in self.seq_len.items()
+                   if seq not in self._preempted
+                   and n >= T * len(self.block_table.get(seq, ())))
+
+    # pooled data paths ------------------------------------------------------
+    def _append_tokens_pooled(self, seq: int, toks: list[np.ndarray]) -> None:
+        """Host-facing append in pooled mode (benchmarks, the sequential
+        mirror, and restores): scatter into the device pool. Decode-shaped
+        appends model device-born tokens (HBM write only); restores pay the
+        host→device upload."""
+        import jax.numpy as jnp
+        spec = self.spec
+        pinned = {seq}
+        self._ensure_seq_resident(seq, pinned)
+        table = self.block_table.setdefault(seq, [])
+        start = self.seq_len.get(seq, 0)
+        end = start + len(toks)
+        for _ in range(-(-end // spec.page_tokens) - len(table)):
+            self._extend_table(seq, pinned)
+        arr = np.stack(toks)                      # (n, L, 2, K, D)
+        for logical in range(start // spec.page_tokens,
+                             -(-end // spec.page_tokens)):
+            lo = max(start, logical * spec.page_tokens)
+            hi = min(end, (logical + 1) * spec.page_tokens)
+            sl = slice(lo - logical * spec.page_tokens,
+                       hi - logical * spec.page_tokens)
+            chunk = arr[lo - start:hi - start]    # (m, L, 2, K, D)
+            phys = table[logical]
+            self.dev_k = self.dev_k.at[:, phys, sl].set(
+                jnp.asarray(chunk[:, :, 0].transpose(1, 0, 2, 3),
+                            self.pool_dtype))
+            self.dev_v = self.dev_v.at[:, phys, sl].set(
+                jnp.asarray(chunk[:, :, 1].transpose(1, 0, 2, 3),
+                            self.pool_dtype))
+            self.pool_lru.touch(phys)
+        nbytes = len(toks) * self._token_group_bytes()
+        if self._in_restore:
+            # disk → host → device: pay the PCIe upload per restored page
+            self.clock.charge(HOST_LINK, "read", nbytes, random_access=False)
+            self.stats["pool_h2d_bytes"] += nbytes
+        self.clock.charge(HBM, "write", nbytes)
+        self.stats["pool_appends"] += len(toks)
+        self.seq_len[seq] = end
+
+    def restore(self, seq: int) -> None:
+        if not self._pooled:
+            return super().restore(seq)
+        self._in_restore = True
+        try:
+            super().restore(seq)
+        finally:
+            self._in_restore = False
+
+    def _read_pooled(self, seq: int, layer: int) -> np.ndarray:
+        spec = self.spec
+        self._ensure_seq_resident(seq, {seq})
+        T = self.seq_len.get(seq, 0)
+        out = np.zeros((2, T, spec.kv_heads, spec.head_dim), spec.dtype)
+        for logical, phys in enumerate(self.block_table.get(seq, [])):
+            lo = logical * spec.page_tokens
+            hi = min(lo + spec.page_tokens, T)
+            if lo >= T:
+                break
+            out[0, lo:hi] = np.asarray(
+                self.dev_k[layer, phys, :hi - lo]).astype(spec.dtype)
+            out[1, lo:hi] = np.asarray(
+                self.dev_v[layer, phys, :hi - lo]).astype(spec.dtype)
+            self.pool_lru.touch(phys)
+            self.clock.charge(HBM, "read", (hi - lo) * spec.token_bytes)
+        return out
+
+    def _spill_pooled(self, seq: int) -> np.ndarray:
+        """Whole-sequence preemption blob, gathered page by page: resident
+        pages pay a D2H transfer each, already-spilled pages are host-side
+        copies (no device traffic)."""
+        spec = self.spec
+        T = self.seq_len.get(seq, 0)
+        blob = np.zeros((spec.num_layers, 2, T, spec.kv_heads,
+                         spec.head_dim), self.pool_dtype)
+        for logical, phys in enumerate(self.block_table.get(seq, [])):
+            lo = logical * spec.page_tokens
+            hi = min(lo + spec.page_tokens, T)
+            if lo >= T:
+                break
+            if phys < 0:
+                page = self.host_pages[(seq, logical)]
+            else:
+                page = self._page_np(phys)
+                self.clock.charge(HOST_LINK, "write", page.nbytes,
+                                  random_access=True)      # D2H page out
+                self.stats["pool_d2h_bytes"] += page.nbytes
+                self.stats["pool_page_spills"] += 1
+            blob[:, :, lo:hi] = page[:, :, :hi - lo]
+        return blob
+
+    def _drop_seq_pooled(self, seq: int) -> None:
+        for logical, phys in enumerate(self.block_table.pop(seq, [])):
+            if phys >= 0:
+                self.phys_owner.pop(phys, None)
+                self.pool_lru.remove(phys)
+                self.free_pages.append(phys)
+            else:
+                self.host_pages.pop((seq, logical), None)
 
     def _ensure_resident(self, layer: int, phys: int) -> None:
         key = (layer, phys)
@@ -209,6 +505,8 @@ class PagedKVCache(_TieredKV):
         self.hbm_lru.touch((layer, phys))
 
     def _append_tokens(self, seq: int, toks: list[np.ndarray]) -> None:
+        if self._pooled:
+            return self._append_tokens_pooled(seq, toks)
         spec = self.spec
         for kv_token in toks:
             pos = self.seq_len.get(seq, 0)
@@ -236,6 +534,8 @@ class PagedKVCache(_TieredKV):
     def _read(self, seq: int, layer: int) -> np.ndarray:
         """Materialize (2, T, kv_heads, head_dim) for attention; pages are
         DMA'd to HBM on miss (block-table indirection)."""
+        if self._pooled:
+            return self._read_pooled(seq, layer)
         spec = self.spec
         T = self.seq_len.get(seq, 0)
         out = np.zeros((2, T, spec.kv_heads, spec.head_dim), spec.dtype)
@@ -251,6 +551,8 @@ class PagedKVCache(_TieredKV):
         return out
 
     def _spill(self, seq: int) -> np.ndarray:
+        if self._pooled:
+            return self._spill_pooled(seq)
         spec = self.spec
         T = self.seq_len.get(seq, 0)
         blob = np.zeros((spec.num_layers, 2, T, spec.kv_heads,
@@ -265,6 +567,8 @@ class PagedKVCache(_TieredKV):
         return blob
 
     def _drop_seq(self, seq: int) -> None:
+        if self._pooled:
+            return self._drop_seq_pooled(seq)
         for phys in self.block_table.pop(seq, []):
             for layer in range(self.spec.num_layers):
                 self.pool.pop((layer, phys), None)
@@ -272,16 +576,51 @@ class PagedKVCache(_TieredKV):
 
     # -------------------------------------------------------------- pressure
     def hbm_used_bytes(self) -> int:
+        if self._pooled:
+            return ((self.pool_pages - len(self.free_pages))
+                    * self._group_bytes)
         return len(self.hbm_lru) * self.spec.page_bytes
 
     def hbm_limit_bytes(self) -> Optional[int]:
+        if self._pooled:
+            return self.pool_pages * self._group_bytes
         return self.hbm_capacity * self.spec.page_bytes
 
+    def pressure(self) -> float:
+        if not self._pooled:
+            return super().pressure()
+        # count the pages the NEXT decode step will claim, so the scheduler
+        # preempts one tick before allocation would have to spill pages of
+        # the running batch itself (page-granular early warning)
+        used = self.pool_pages - len(self.free_pages) + self._reserve_pages()
+        return min(used / self.pool_pages, 1.0)
+
     def resident_bytes(self, seq: int) -> int:
+        if self._pooled:
+            n = sum(1 for phys in self.block_table.get(seq, ()) if phys >= 0)
+            return n * self._group_bytes
         n = sum(1 for phys in self.block_table.get(seq, ())
                 for layer in range(self.spec.num_layers)
                 if (layer, phys) in self.hbm_lru)
         return n * self.spec.page_bytes
+
+    def victim_hint(self, candidates: Iterable[int]) -> Optional[int]:
+        """Pooled mode answers at page granularity: preempt the candidate
+        whose eviction frees the most device pool pages (ties toward the
+        least recently appended). Host mode keeps the LRU fallback."""
+        if not self._pooled:
+            return None
+        cands = list(candidates)
+        if not cands:
+            return None
+        order = {phys: i for i, phys in enumerate(self.pool_lru.lru_order())}
+
+        def key(seq):
+            pages = [p for p in self.block_table.get(seq, ()) if p >= 0]
+            coldest = min((order.get(p, len(order)) for p in pages),
+                          default=len(order))
+            return (-len(pages), coldest)
+        return min(cands, key=key)
 
 
 class _DrainingKV(_TieredKV):

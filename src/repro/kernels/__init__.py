@@ -3,8 +3,34 @@
 * flash_attention — chunked online-softmax attention (train/prefill)
 * paged_attention — decode attention over a paged KV pool with block-table
   indirection (the paging design's on-device read path)
+* paged_attention_layers — the batched multi-layer form of the same kernel:
+  the mirror-free serving decode entry point
 * log_patch       — apply KV log records to page-shaped buffers (the logging
   design's on-device drain/patch path)
+
+Block-table contract (shared by the kernels, ``PagedKVCache``'s device pool,
+and the pooled serving decode path):
+
+* **Pool layout** — K and V pools are ``(L, P, T, K, D)`` device arrays:
+  ``L`` model layers, ``P`` physical pages, ``T = page_tokens`` token slots
+  per page, ``K`` KV heads, ``D`` head dim. The single-layer entry takes one
+  ``(P, T, K, D)`` slice. Physical page index ``p`` addresses the *same*
+  page slot in every layer — pages are allocated per sequence, never per
+  layer, so one block table serves the whole stack.
+* **Block table** — ``(B, MP) int32``; row ``b`` maps the sequence's logical
+  page ``i`` to physical page ``table[b, i]``. Entries at or past
+  ``ceil(lengths[b] / T)`` are dead: the kernels clamp them into range and
+  skip their compute (and, on TPU, their DMA), so any padding value is safe.
+* **Ragged lengths** — ``lengths: (B,) int32`` is the only raggedness
+  carrier; token slots at or past ``lengths[b]`` inside the last live page
+  are masked. ``lengths[b] == 0`` rows produce exactly zero output.
+* **Ownership** — the device pool is owned by the KV engine
+  (``repro.core.kvcache.PagedKVCache`` in pooled mode), which ties page
+  alloc/free to its resident/LRU accounting; the FS tier never sees pool
+  pages, only whole-sequence spill blobs. Eviction rule: under HBM pressure
+  the engine spills least-recently-used *pool pages* to the host tier
+  (page-granular), and the scheduler preempts whole sequences only when
+  page spills cannot make room.
 
 Each package has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper + XLA fallback) and ref.py (pure-jnp oracle). Kernels are validated
@@ -12,7 +38,9 @@ in interpret mode on CPU; the TPU path is selected automatically on TPU
 backends.
 """
 from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ops import (paged_attention,
+                                               paged_attention_layers)
 from repro.kernels.log_patch.ops import log_patch
 
-__all__ = ["flash_attention", "paged_attention", "log_patch"]
+__all__ = ["flash_attention", "paged_attention", "paged_attention_layers",
+           "log_patch"]

@@ -1,3 +1,4 @@
-from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ops import (paged_attention,
+                                               paged_attention_layers)
 
-__all__ = ["paged_attention"]
+__all__ = ["paged_attention", "paged_attention_layers"]

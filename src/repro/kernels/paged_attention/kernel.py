@@ -1,4 +1,4 @@
-"""Paged decode-attention Pallas TPU kernel.
+"""Paged decode-attention Pallas TPU kernels.
 
 The paging design's on-device read path (DESIGN.md §2a): the KV cache lives
 as fixed-size token pages in a physical pool; the block table is
@@ -7,9 +7,22 @@ step DMAs exactly one page of K and V into VMEM — block-table indirection
 *inside* the kernel, the TPU analogue of NVPages' radix-tree → page pointer
 walk.
 
-Grid: (B, K, max_pages); online-softmax state in VMEM scratch across the
-page axis. Pages past ``lengths[b]`` are skipped with ``pl.when`` (no DMA
-cost on TPU since their index maps clamp to page 0 and the body is skipped).
+Two entry points share the kernel body:
+
+* ``paged_attention_pallas`` — one layer: grid (B, K, max_pages) over a
+  ``(P, T, K, D)`` pool.
+* ``paged_attention_layers_pallas`` — the serving stack's batched
+  multi-layer form: grid (L, B, K, max_pages) over a device-resident
+  ``(L, P, T, K, D)`` pool, one block table shared by every layer (pages
+  are allocated per sequence, not per layer). This is the mirror-free
+  decode entry: the scheduler hands the kernel the pool + block table and
+  no dense per-request KV copy ever exists.
+
+Online-softmax state lives in VMEM scratch across the page axis. Pages past
+``lengths[b]`` are skipped with ``pl.when`` (no DMA cost on TPU since their
+index maps clamp to page 0 and the body is skipped). A row with
+``lengths[b] == 0`` never runs the compute body, so its output is exactly
+zero — the refs mirror that contract.
 """
 from __future__ import annotations
 
@@ -104,3 +117,88 @@ def paged_attention_pallas(q, pool_k, pool_v, block_table, lengths, *,
         interpret=interpret,
     )(table, lengths.astype(jnp.int32), qg, pool_k, pool_v)
     return out.reshape(B, H, D)
+
+
+def _pa_layers_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                      m_ref, l_ref, acc_ref, *, scale: float,
+                      page_tokens: int):
+    b = pl.program_id(1)
+    p = pl.program_id(3)
+    last_p = pl.num_programs(3) - 1
+    length = len_ref[b]
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    live = (p * page_tokens) < length
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0, 0].astype(jnp.float32)               # (G, D)
+        k = k_ref[0, 0, :, 0, :].astype(jnp.float32)         # (T, D)
+        v = v_ref[0, 0, :, 0, :].astype(jnp.float32)         # (T, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = p * page_tokens + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)              # (G, T)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        pr = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(pr, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            pr, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(p == last_p)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, 0] = out.astype(o_ref.dtype)
+
+
+def paged_attention_layers_pallas(q, pool_k, pool_v, block_table, lengths, *,
+                                  scale: float | None = None,
+                                  interpret: bool = False):
+    """Batched multi-layer entry: q: (L,B,H,D); pool_k/v: (L,P,T,K,D);
+    block_table: (B,MP) shared across layers; lengths: (B,) ragged."""
+    L, B, H, D = q.shape
+    _, P, T, K, _ = pool_k.shape
+    MP = block_table.shape[1]
+    G = H // K
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(L, B, K, G, D)
+    table = jnp.clip(block_table, 0, P - 1).astype(jnp.int32)
+
+    kernel = functools.partial(_pa_layers_kernel, scale=scale, page_tokens=T)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(L, B, K, MP),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, G, D),
+                         lambda l, b, k, p, tbl, ln: (l, b, k, 0, 0)),
+            pl.BlockSpec((1, 1, T, 1, D),
+                         lambda l, b, k, p, tbl, ln: (l, tbl[b, p], 0, k, 0)),
+            pl.BlockSpec((1, 1, T, 1, D),
+                         lambda l, b, k, p, tbl, ln: (l, tbl[b, p], 0, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, G, D),
+                               lambda l, b, k, p, tbl, ln: (l, b, k, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((L, B, K, G, D), q.dtype),
+        interpret=interpret,
+    )(table, lengths.astype(jnp.int32), qg, pool_k, pool_v)
+    return out.reshape(L, B, H, D)

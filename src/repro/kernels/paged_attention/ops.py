@@ -1,12 +1,20 @@
-"""jit'd public wrapper for paged decode attention."""
+"""jit'd public wrappers for paged decode attention.
+
+``paged_attention`` is the single-layer form; ``paged_attention_layers`` is
+the serving stack's batched multi-layer entry point (one device-resident
+``(L, P, T, K, D)`` pool, one ``(B, MP)`` block table shared across layers,
+ragged ``(B,)`` lengths) used by the mirror-free pooled decode path.
+"""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
 
-from repro.kernels.paged_attention.kernel import paged_attention_pallas
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.kernel import (
+    paged_attention_layers_pallas, paged_attention_pallas)
+from repro.kernels.paged_attention.ref import (
+    paged_attention_layers_ref, paged_attention_ref)
 
 
 @partial(jax.jit, static_argnames=("scale", "force_pallas"))
@@ -21,3 +29,22 @@ def paged_attention(q, pool_k, pool_v, block_table, lengths, *, scale=None,
                                       scale=scale, interpret=True)
     return paged_attention_ref(q, pool_k, pool_v, block_table, lengths,
                                scale=scale)
+
+
+@partial(jax.jit, static_argnames=("scale", "force_pallas"))
+def paged_attention_layers(q, pool_k, pool_v, block_table, lengths, *,
+                           scale=None, force_pallas: bool = False):
+    """Batched multi-layer decode attention over a paged KV pool.
+
+    q: (L, B, H, D); pool_k/v: (L, P, T, K, D); block_table: (B, MP);
+    lengths: (B,). Rows with ``lengths[b] == 0`` return zeros.
+    """
+    if jax.default_backend() == "tpu":
+        return paged_attention_layers_pallas(q, pool_k, pool_v, block_table,
+                                             lengths, scale=scale)
+    if force_pallas:
+        return paged_attention_layers_pallas(q, pool_k, pool_v, block_table,
+                                             lengths, scale=scale,
+                                             interpret=True)
+    return paged_attention_layers_ref(q, pool_k, pool_v, block_table,
+                                      lengths, scale=scale)

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for paged decode attention (block-table indirection)."""
+"""Pure-jnp oracles for paged decode attention (block-table indirection)."""
 from __future__ import annotations
 
 import jax
@@ -13,16 +13,18 @@ def paged_attention_ref(q, pool_k, pool_v, block_table, lengths, *,
     pool_k/v:    (P, T, K, D)        physical pages of T tokens
     block_table: (B, MaxPages) int32 logical→physical page mapping
     lengths:     (B,) int32          tokens valid per sequence
-    Returns (B, H, D).
+    Returns (B, H, D). A row with ``lengths[b] == 0`` returns exactly zero
+    (the kernel never runs its compute body for such rows).
     """
     B, H, D = q.shape
     P, T, K, _ = pool_k.shape
     G = H // K
     if scale is None:
         scale = 1.0 / (D ** 0.5)
+    table = jnp.clip(block_table, 0, P - 1)
     # gather logical KV: (B, MaxPages*T, K, D)
-    k = pool_k[block_table].reshape(B, -1, K, D)
-    v = pool_v[block_table].reshape(B, -1, K, D)
+    k = pool_k[table].reshape(B, -1, K, D)
+    v = pool_v[table].reshape(B, -1, K, D)
     S = k.shape[1]
     qg = q.reshape(B, K, G, D).astype(jnp.float32)
     s = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32)) * scale
@@ -30,4 +32,15 @@ def paged_attention_ref(q, pool_k, pool_v, block_table, lengths, *,
     s = jnp.where(valid[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    out = jnp.where((lengths > 0)[:, None, None, None], out, 0.0)
     return out.reshape(B, H, D).astype(q.dtype)
+
+
+def paged_attention_layers_ref(q, pool_k, pool_v, block_table, lengths, *,
+                               scale: float | None = None):
+    """Multi-layer oracle: q (L,B,H,D); pool_k/v (L,P,T,K,D); one block
+    table + ragged lengths shared by every layer. Returns (L,B,H,D)."""
+    def one_layer(ql, pkl, pvl):
+        return paged_attention_ref(ql, pkl, pvl, block_table, lengths,
+                                   scale=scale)
+    return jax.vmap(one_layer)(q, pool_k, pool_v)

@@ -8,6 +8,12 @@ Requests share one running batch (admitted/preempted/restored by the
 scheduler); ``--hbm-budget-bytes`` small enough to bind makes the
 preemption path visible in the printed stats. ``--sequential`` runs the
 one-at-a-time reference loop instead (same tokens, no batching).
+
+``--paged-decode`` forces the mirror-free pooled path (decode runs the
+paged_attention kernel directly over the engine's device page pool;
+``mirror_d2h_bytes`` stays 0); ``--mirror-decode`` forces the dense-mirror
+path; default is auto (pooled when engine + model support it).
+``--prefill-chunk-tokens`` splits long prompts across scheduler ticks.
 """
 from __future__ import annotations
 
@@ -43,19 +49,36 @@ def main(argv=None):
     ap.add_argument("--sequential", action="store_true",
                     help="run the batch=1 reference loop instead of the "
                          "continuous-batching scheduler")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--paged-decode", dest="paged_decode",
+                      action="store_true", default=None,
+                      help="force mirror-free decode over the device page "
+                           "pool (requires a pool-capable engine)")
+    mode.add_argument("--mirror-decode", dest="paged_decode",
+                      action="store_false",
+                      help="force the dense-mirror decode path")
+    ap.add_argument("--page-tokens", type=int, default=16,
+                    help="tokens per KV page (pool geometry)")
+    ap.add_argument("--prefill-chunk-tokens", type=int, default=None,
+                    help="split prompts longer than this across ticks "
+                         "(default: max-batch-tokens)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.PRNGKey(args.seed))
+    max_len = args.prompt_len + args.max_new + 1
+    max_len += -max_len % args.page_tokens     # pool wants page alignment
     engine = ServingEngine(model, params, ServeConfig(
-        max_len=args.prompt_len + args.max_new + 1,
+        max_len=max_len, page_tokens=args.page_tokens,
         engine_spec=EngineSpec(engine=args.design,
                                drain_shards=args.drain_shards,
                                kv_hbm_bytes=args.hbm_budget_bytes),
         max_batch_seqs=args.max_batch_seqs,
-        max_batch_tokens=args.max_batch_tokens))
+        max_batch_tokens=args.max_batch_tokens,
+        paged_decode=args.paged_decode,
+        prefill_chunk_tokens=args.prefill_chunk_tokens))
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(rid=i,
@@ -70,7 +93,8 @@ def main(argv=None):
     for r in reqs:
         print(f"req {r.rid}: generated {len(r.generated)} tokens "
               f"{r.generated[:8]}...")
-    mode = "sequential" if args.sequential else "batched"
+    mode = ("sequential" if args.sequential else
+            "batched+pooled" if engine.pooled else "batched+mirror")
     print(f"tiered-kv[{args.design}] ({mode}) stats: {engine.stats()}")
 
 

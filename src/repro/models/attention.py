@@ -307,6 +307,39 @@ def attn_decode(params, cfg, x, cache_k, cache_v, positions):
     return out, cache_k, cache_v
 
 
+def attn_decode_paged(params, cfg, x, pool_k, pool_v, block_table,
+                      positions):
+    """Single-step decode directly over a paged KV pool (mirror-free path).
+
+    pool_k/pool_v: (P, T, K, D) — one layer's slice of the device-resident
+    pool; block_table: (B, MP) int32 logical→physical mapping; positions:
+    (B,) int32 write/query index. The new token's K/V is scattered into its
+    page slot (each sequence owns its pages exclusively, so the (phys, slot)
+    targets never collide across the batch) and attention runs through the
+    ``paged_attention`` kernel over the pool — no dense per-sequence cache
+    row exists anywhere.
+
+    Returns (out, new_pool_k, new_pool_v).
+    """
+    from repro.kernels.paged_attention import paged_attention
+
+    B, S, _ = x.shape
+    assert S == 1
+    K, H, D = cfg.num_kv_heads, cfg.num_heads, cfg.head_dim
+    pos2 = positions[:, None]                                      # (B, 1)
+    q, k, v = _project_qkv(params, cfg, x, pos2, rope=True)
+    T = pool_k.shape[1]
+    b_idx = jnp.arange(B)
+    phys = block_table[b_idx, positions // T]                      # (B,)
+    slot = positions % T
+    pool_k = pool_k.at[phys, slot].set(k[:, 0].astype(pool_k.dtype))
+    pool_v = pool_v.at[phys, slot].set(v[:, 0].astype(pool_v.dtype))
+    out = paged_attention(q.reshape(B, H, D), pool_k, pool_v, block_table,
+                          positions + 1, scale=1.0 / math.sqrt(D))
+    out = out.reshape(B, 1, H * D) @ params["wo"]
+    return out, pool_k, pool_v
+
+
 # ---------------------------------------------------------------------------
 # MLA (DeepSeek-V2 multi-head latent attention)
 # ---------------------------------------------------------------------------

@@ -90,6 +90,20 @@ def decode_decoder_block(params, cfg, h, cache, positions, *, ffn_kind: str,
     return h + rs * f, (c0, c1)
 
 
+def decode_paged_block(params, cfg, h, pool_k, pool_v, block_table,
+                       positions):
+    """Single-token block over one layer's slice of the paged KV pool
+    (mirror-free decode; dense GQA attention only)."""
+    rs = cfg.residual_scale
+    x = rmsnorm(params["ln_attn"], h, cfg.norm_eps)
+    a, pool_k, pool_v = attn_mod.attn_decode_paged(
+        params["attn"], cfg, x, pool_k, pool_v, block_table, positions)
+    h = h + rs * a
+    x = rmsnorm(params["ln_ffn"], h, cfg.norm_eps)
+    f = apply_ffn(params["ffn"], x, cfg.ffn_activation)
+    return h + rs * f, (pool_k, pool_v)
+
+
 # ---------------------------------------------------------------------------
 # Encoder block (bidirectional) and enc-dec decoder block (w/ cross-attn)
 # ---------------------------------------------------------------------------

@@ -408,6 +408,54 @@ class LM:
         logits = self._logits(params, h[:, -1:])
         return logits, cache
 
+    # ---------------------------------------------------- paged decode step
+    def supports_paged_decode(self) -> bool:
+        """True when this model can decode directly over a paged KV pool:
+        the dense-GQA decoder stack with a plain (k, v) cache. MLA caches a
+        latent (not per-head KV), int8 caches carry scales, and the other
+        families keep state the pool has no layout for — they all stay on
+        the mirrored dense-cache path."""
+        return (self.cfg.family == "attn_dense" and self.cfg.mla is None
+                and self.kv_cache_dtype == "native")
+
+    def decode_step_paged(self, params, cache, tokens, positions):
+        """One decode step over a device-resident paged KV pool.
+
+        cache: ``pos (B,)``, ``pool_k``/``pool_v`` ``(L, P, T, K, D)``, and
+        ``block_table (B, MP)`` (dead entries clamped/skipped by the
+        kernel). The layer scan carries the pool slices as xs, each layer
+        scattering its new token into its page slot and attending through
+        the ``paged_attention`` kernel — no dense per-sequence KV row is
+        ever materialized, which is what keeps the serving mirror's
+        device→host traffic at zero on this path.
+        """
+        if not self.supports_paged_decode():
+            raise ValueError(
+                f"paged decode supports the dense-GQA family only; got "
+                f"family={self.cfg.family!r} mla={self.cfg.mla is not None} "
+                f"kv_cache_dtype={self.kv_cache_dtype!r}")
+        cfg = self.cfg
+        params = jax.tree.map(
+            lambda a: a.astype(self.compute_dtype)
+            if a.dtype in (jnp.float32, jnp.bfloat16) and a.ndim >= 1 else a,
+            params)
+        h = self._embed_tokens(params, tokens)
+        table = cache["block_table"]
+
+        def body(carry, xs):
+            lp, pk, pv = xs
+            hh, (npk, npv) = B.decode_paged_block(
+                lp, cfg, carry, pk, pv, table, positions)
+            return hh, (npk, npv)
+        h, (npk, npv) = jax.lax.scan(
+            body, h, (params["blocks"], cache["pool_k"], cache["pool_v"]),
+            unroll=self.scan_unroll)
+        new_cache = {"pos": positions + 1, "pool_k": npk, "pool_v": npv,
+                     "block_table": table}
+        h = rmsnorm(params["final_ln"], h, cfg.norm_eps)
+        logits = self._logits(params, h)
+        return logits, new_cache
+
     # ---------------------------------------------------------- decode step
     def decode_step(self, params, cache, tokens, positions):
         """tokens: (B, 1) int32; positions: (B,) int32 write/query index."""

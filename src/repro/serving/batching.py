@@ -21,6 +21,12 @@ differently per family):
 Host round-trips (``row_to_host``/``row_to_device``) are exact — preempting
 a row to host memory and restoring it later changes no bits, which is what
 makes preemption invisible in the generated tokens.
+
+On the **pooled (mirror-free) decode path** a row's cache is just
+``{"pos"}`` — its KV lives in the engine-owned device page pool, addressed
+through the block table, so concat/split/round-trip shrink to the position
+vector and the scatter/gather helpers below move prompt KV between the
+dense prefill cache and the pool entirely on device.
 """
 from __future__ import annotations
 
@@ -88,3 +94,32 @@ def gather_prefill_kv(cache_k, cache_v, n: int):
     k = cache_k[:, 0, :n]                     # (L, n, K, D)
     v = cache_v[:, 0, :n]
     return jnp.stack([k, v], axis=1).astype(jnp.float16)
+
+
+def gather_kv_range(cache_k, cache_v, lo: int, hi: int):
+    """On-device slice of cache positions ``[lo, hi)`` for one batch-1 row:
+    ``(L, 2, hi-lo, K, D)`` float16. The chunked-prefill mirror path uses
+    this to append each processed chunk as ONE batched transfer instead of
+    one per token."""
+    k = cache_k[:, 0, lo:hi]
+    v = cache_v[:, 0, lo:hi]
+    return jnp.stack([k, v], axis=1).astype(jnp.float16)
+
+
+def scatter_prefill_pages(pool_k, pool_v, cache_k, cache_v, phys, n: int):
+    """Scatter a batch-1 prompt's prefilled KV into its pool pages ON
+    DEVICE (the mirror-free admission path: a device-to-device copy, zero
+    bytes over the device→host link).
+
+    pool_k/pool_v: ``(L, P, T, K, D)``; cache_k/cache_v: ``(L, 1, max_len,
+    K, D)``; phys: ``(npages,)`` int32 physical pages owning logical pages
+    ``0..npages-1``. Slots past ``n`` inside the last page carry prefill
+    padding — callers mask them with ``lengths`` (the kernel contract) and
+    later appends overwrite them in place.
+    """
+    L, P, T, K, D = pool_k.shape
+    npages = phys.shape[0]
+    k = cache_k[:, 0, :npages * T].reshape(L, npages, T, K, D)
+    v = cache_v[:, 0, :npages * T].reshape(L, npages, T, K, D)
+    return (pool_k.at[:, phys].set(k.astype(pool_k.dtype)),
+            pool_v.at[:, phys].set(v.astype(pool_v.dtype)))

@@ -23,6 +23,18 @@ reference implementation the scheduler must match token-for-token.
 Mirror transfers are sliced **on device**: each decode step moves exactly
 one ``(L, 2, K, D)`` float16 token per sequence over the device→host link
 (counted in ``stats()["mirror_d2h_bytes"]``), never a whole cache row.
+
+**Mirror-free pooled decode (ISSUE 4).** When the KV engine owns a device
+-resident page pool (``paged``) and the model family supports it, the
+dense mirror disappears entirely: admission scatters the prompt's prefilled
+KV into pool pages on device, every decode step runs
+``model.decode_step_paged`` — the ``paged_attention`` Pallas kernel over
+the pool with block-table indirection — and the engine's block-table/LRU
+accounting advances through ``prepare_decode``/``commit_decode`` with no
+device→host copy at all: ``mirror_d2h_bytes`` stays **zero** on this path
+(pinned by test). Engines without a pool (``log``, ``kvhybrid``) and model
+families without a plain (k, v) cache fall back to the mirrored path
+transparently; ``ServeConfig.paged_decode`` forces either path.
 """
 from __future__ import annotations
 
@@ -55,6 +67,13 @@ class ServeConfig:
     max_batch_seqs: int = 8        # running-batch width cap
     max_batch_tokens: Optional[int] = None   # running-batch token cap
     min_running: int = 1           # preemption floor: progress guarantee
+    # mirror-free pooled decode: None = auto (pooled when the engine has a
+    # device page pool AND the model family supports paged decode), True =
+    # require it (raise if unsupported), False = always mirror
+    paged_decode: Optional[bool] = None
+    # chunked prefill: prompts longer than this admit chunk by chunk across
+    # ticks (None → max_batch_tokens; chunking off when both are None)
+    prefill_chunk_tokens: Optional[int] = None
 
     def resolved_spec(self) -> EngineSpec:
         """One EngineSpec no matter which knobs the caller used.
@@ -115,8 +134,43 @@ class ServingEngine:
         self._gather_new_kv = jax.jit(batching.gather_new_kv)
         self._gather_prefill_kv = jax.jit(batching.gather_prefill_kv,
                                           static_argnums=2)
+        self._gather_kv_range = jax.jit(batching.gather_kv_range,
+                                        static_argnums=(2, 3))
         self.mirror_d2h_bytes = 0      # device→host mirror traffic (exact)
         self.sched_stats: dict = {}    # last generate()'s scheduler counters
+        # ------------------------------------------- mirror-free pooled path
+        self.max_pages = -(-cfg.max_len // cfg.page_tokens)
+        pool_dtype = np.dtype(model.compute_dtype)
+        # liveness floor: the pool must hold one max-length sequence plus a
+        # reserve page, or a lone running sequence could exhaust it with
+        # nothing left to preempt
+        group_bytes = (mcfg.num_layers * 2 * cfg.page_tokens * kv_heads
+                       * head_dim * pool_dtype.itemsize)
+        budget_pages = cfg.resolved_spec().kv_hbm_bytes // group_bytes
+        pool_fits = budget_pages >= self.max_pages + 1
+        pool_ok = (self.tiered.supports_pool()
+                   and model.supports_paged_decode())
+        if cfg.paged_decode and not (pool_ok and pool_fits):
+            raise ValueError(
+                f"paged_decode=True needs a pool-capable KV engine, a "
+                f"dense-GQA model, and an HBM budget of at least "
+                f"{self.max_pages + 1} pool pages; got engine="
+                f"{self.tiered.engine_name!r} (supports_pool="
+                f"{self.tiered.supports_pool()}), family="
+                f"{model.cfg.family!r}, budget_pages={budget_pages}")
+        self.pooled = (pool_ok and pool_fits) if cfg.paged_decode is None \
+            else bool(cfg.paged_decode)
+        if self.pooled:
+            if cfg.max_len % cfg.page_tokens:
+                raise ValueError(
+                    f"pooled decode needs max_len ({cfg.max_len}) to be a "
+                    f"multiple of page_tokens ({cfg.page_tokens})")
+            # the pool is the model's decode cache: same dtype as the dense
+            # path so pooled decode is numerically identical to it
+            self.tiered.init_pool(dtype=pool_dtype)
+            self._decode_paged = jax.jit(model.decode_step_paged)
+            self._scatter_prefill = jax.jit(batching.scatter_prefill_pages,
+                                            static_argnums=5)
 
     # -------------------------------------------------------------- mirroring
     def _mirror_kv(self, rid: int, cache, pos: int):
@@ -155,12 +209,101 @@ class ServingEngine:
         self.tiered.append(rid, toks)
 
     # ------------------------------------------------------------- generation
-    def prefill_one(self, req: Request):
-        """Prefill one request at batch=1 and mirror its prompt KV; returns
-        (logits, cache row) for the scheduler to admit."""
-        batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+    def prefill_one(self, req: Request, n: Optional[int] = None):
+        """Prefill one request at batch=1 (the first ``n`` prompt tokens
+        when chunked admission splits it) and land its KV in the tiered
+        engine — mirrored as one batched append, or scattered into pool
+        pages on device on the mirror-free path. Returns (logits, cache
+        row) for the scheduler to admit."""
+        toks = req.prompt if n is None else req.prompt[:n]
+        batch = {"tokens": jnp.asarray(toks[None, :])}
         logits, cache = self._prefill(self.params, batch)
-        self._mirror_prefill(req.rid, cache, req.prompt.shape[0])
+        if self.pooled:
+            cache = self._pool_admit(req.rid, cache, toks.shape[0])
+        else:
+            self._mirror_prefill(req.rid, cache, toks.shape[0])
+        return logits, cache
+
+    def _pool_admit(self, rid: int, cache, n: int) -> dict:
+        """Move a fresh prompt's prefilled KV into the device pool (one
+        on-device scatter — zero device→host bytes) and shrink the row's
+        cache to its position vector."""
+        if n == 0:
+            return {"pos": cache["pos"]}
+        phys = self.tiered.alloc_prefill(rid, n)
+        pool_k, pool_v = self.tiered.pool_views()
+        pool_k, pool_v = self._scatter_prefill(
+            pool_k, pool_v, cache["k"], cache["v"],
+            jnp.asarray(phys, jnp.int32), n)
+        self.tiered.commit_prefill(pool_k, pool_v, rid, n)
+        return {"pos": cache["pos"]}
+
+    def decode_batch(self, rids: list, caches: list, tokens: list,
+                     mirrored: bool):
+        """One batched decode step over per-sequence cache rows.
+
+        Mirror path: dense batched ``decode_step`` + one device→host token
+        transfer per sequence. Pooled path: ``decode_step_paged`` directly
+        over the engine's device page pool (block-table indirection inside
+        the kernel) — the engine's page accounting advances through
+        ``prepare_decode``/``commit_decode`` and nothing crosses the
+        device→host link. Returns (logits, new cache rows).
+        """
+        batch = batching.concat_rows(caches)
+        positions = batch["pos"]
+        tok_arr = jnp.asarray(tokens, jnp.int32)[:, None]
+        if self.pooled:
+            tbl, lens = self.tiered.prepare_decode(rids, self.max_pages)
+            if not np.array_equal(lens, np.asarray(positions)):
+                raise RuntimeError(
+                    f"pool/table drift: engine lengths {lens.tolist()} != "
+                    f"model positions {np.asarray(positions).tolist()}")
+            pool_k, pool_v = self.tiered.pool_views()
+            cache = {"pos": positions, "pool_k": pool_k, "pool_v": pool_v,
+                     "block_table": jnp.asarray(tbl)}
+            logits, out = self._decode_paged(self.params, cache, tok_arr,
+                                             positions)
+            self.tiered.commit_decode(out["pool_k"], out["pool_v"], rids)
+            batch = {"pos": out["pos"]}
+        else:
+            logits, batch = self._decode(self.params, batch, tok_arr,
+                                         positions)
+            self.mirror_decode_batch(rids if mirrored else [], batch,
+                                     np.asarray(positions))
+        return logits, [batching.split_row(batch, i)
+                        for i in range(len(caches))]
+
+    def extend_one(self, rid: int, cache, toks: np.ndarray, start: int,
+                   mirrored: bool):
+        """Process ``toks`` additional prompt tokens for one admitted row
+        (chunked prefill): each token runs through the decode path at
+        batch=1, and the chunk's KV lands in the tiered engine as ONE
+        batched append (mirror path) or directly in its pool pages (pooled
+        path — per-token page allocation, still zero device→host bytes).
+        Returns (logits, cache) positioned after the chunk."""
+        logits = None
+        if self.pooled:
+            for t in toks:
+                tbl, _ = self.tiered.prepare_decode([rid], self.max_pages)
+                pc = {"pos": cache["pos"],
+                      "block_table": jnp.asarray(tbl)}
+                pc["pool_k"], pc["pool_v"] = self.tiered.pool_views()
+                logits, out = self._decode_paged(
+                    self.params, pc, jnp.asarray([[int(t)]], jnp.int32),
+                    cache["pos"])
+                self.tiered.commit_decode(out["pool_k"], out["pool_v"],
+                                          [rid])
+                cache = {"pos": out["pos"]}
+            return logits, cache
+        for t in toks:
+            logits, cache = self._decode(
+                self.params, cache, jnp.asarray([[int(t)]], jnp.int32),
+                cache["pos"])
+        if mirrored and len(toks):
+            kv = np.asarray(self._gather_kv_range(
+                cache["k"], cache["v"], start, start + len(toks)))
+            self.mirror_d2h_bytes += kv.nbytes
+            self.tiered.append(rid, kv)
         return logits, cache
 
     def generate(self, requests: list[Request]) -> list[Request]:
@@ -174,10 +317,14 @@ class ServingEngine:
         return requests
 
     def generate_sequential(self, requests: list[Request]) -> list[Request]:
-        """Sequential reference: one request at a time, batch=1 decode. The
-        scheduler's batched path must match this token-for-token."""
+        """Sequential reference: one request at a time, batch=1 decode over
+        the dense cache with the mirrored tiered append — ALWAYS, even on a
+        pool-enabled engine, because this is the reference the pooled path
+        must match token-for-token."""
         for req in requests:
-            logits, cache = self.prefill_one(req)
+            batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+            logits, cache = self._prefill(self.params, batch)
+            self._mirror_prefill(req.rid, cache, req.prompt.shape[0])
             for _ in range(req.max_new):
                 nxt = int(jnp.argmax(logits[:, -1], -1)[0])
                 req.generated.append(nxt)

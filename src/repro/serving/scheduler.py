@@ -24,8 +24,20 @@ State machine::
 **Admission** fills the batch up to ``max_batch_seqs`` / ``max_batch_tokens``,
 re-admitting preempted sequences ahead of new arrivals (the starvation
 guard: a preempted request can only wait behind finitely many decode steps).
-New admissions stop while the engine reports full pressure, but an empty
-batch always force-admits — the scheduler never deadlocks with work queued.
+New admissions stop while the engine reports full pressure (or, for pooled
+engines, while ``can_admit_tokens`` says the page pool cannot place the
+candidate), but an empty batch always force-admits — the scheduler never
+deadlocks with work queued.
+
+**Chunked prefill** (ISSUE 4): when a token cap is set, prompts longer than
+the chunk budget (``prefill_chunk_tokens``, defaulting to
+``max_batch_tokens``) admit with only their first chunk prefilled; the rest
+of the prompt rides along as the row's ``pending`` tail and is processed
+one chunk per tick — through the decode path at batch=1, its KV appended
+to the tiered engine per chunk (one batched append, or pool pages on the
+mirror-free path) — before the row joins batched decoding. Chunked rows
+preempt/restore like any other row, and the result is token-identical to
+one-shot prefill (locked down by test).
 
 **Preemption** triggers when ``KVCacheEngine.pressure()`` reaches 1.0 (the
 engine's HBM accounting has hit its budget). The victim comes from
@@ -67,6 +79,7 @@ class _Running:
     length: int                        # tokens in the cache row (pos)
     mirrored: bool                     # has KV in the tiered engine
     admitted_tick: int                 # last admission/restore tick (LRU)
+    pending: Optional[np.ndarray] = None   # unprocessed prompt tail (chunked)
 
 
 @dataclass
@@ -78,6 +91,7 @@ class _Preempted:
     logits: np.ndarray
     length: int
     mirrored: bool
+    pending: Optional[np.ndarray] = None
 
 
 @dataclass
@@ -89,6 +103,7 @@ class SchedulerStats:
     preempts: int = 0
     restores: int = 0
     peak_running: int = 0
+    prefill_chunks: int = 0            # chunk-continuation steps run
 
     def as_dict(self) -> dict:
         return {f"sched_{k}": v for k, v in self.__dict__.items()}
@@ -102,6 +117,8 @@ class Scheduler:
         cfg = engine.cfg
         self.max_batch_seqs = max(cfg.max_batch_seqs, 1)
         self.max_batch_tokens: Optional[int] = cfg.max_batch_tokens
+        self.chunk_tokens: Optional[int] = (cfg.prefill_chunk_tokens
+                                            or cfg.max_batch_tokens)
         self.min_running = max(cfg.min_running, 1)
         self.waiting: deque["Request"] = deque(requests)
         self.running: list[_Running] = []
@@ -119,10 +136,19 @@ class Scheduler:
             return True                # force progress: never deadlock
         if self.engine.tiered.pressure() >= 1.0:
             return False               # admitting now would preempt someone
+        if not self.engine.tiered.can_admit_tokens(cand_tokens):
+            return False               # pooled: no pages to place it
         if self.max_batch_tokens is not None and \
                 self._batch_tokens() + cand_tokens > self.max_batch_tokens:
             return False
         return True
+
+    def _first_chunk(self, prompt_len: int) -> int:
+        """Tokens the admission prefill processes (the rest rides as the
+        row's pending tail)."""
+        if self.chunk_tokens is None:
+            return prompt_len
+        return min(prompt_len, max(self.chunk_tokens, 1))
 
     def _admit(self) -> None:
         # preempted sequences re-admit ahead of new arrivals (starvation
@@ -134,42 +160,60 @@ class Scheduler:
             self.running.append(_Running(
                 req=pre.req, cache=batching.row_to_device(pre.cache),
                 logits=jnp.asarray(pre.logits), length=pre.length,
-                mirrored=pre.mirrored, admitted_tick=self.stats.ticks))
+                mirrored=pre.mirrored, admitted_tick=self.stats.ticks,
+                pending=pre.pending))
             self.stats.restores += 1
-        while self.waiting and \
-                self._has_room(len(self.waiting[0].prompt) + 1):
+        while self.waiting and self._has_room(
+                self._first_chunk(len(self.waiting[0].prompt)) + 1):
             req = self.waiting.popleft()
-            logits, cache = self.engine.prefill_one(req)
+            first = self._first_chunk(len(req.prompt))
+            logits, cache = self.engine.prefill_one(req, first)
+            pending = req.prompt[first:] if first < len(req.prompt) else None
             self.running.append(_Running(
-                req=req, cache=cache, logits=logits,
-                length=len(req.prompt), mirrored="k" in cache,
-                admitted_tick=self.stats.ticks))
+                req=req, cache=cache, logits=logits, length=first,
+                mirrored="k" in cache or self.engine.pooled,
+                admitted_tick=self.stats.ticks, pending=pending))
             self.stats.admitted += 1
         self.stats.peak_running = max(self.stats.peak_running,
                                       len(self.running))
 
     # ------------------------------------------------------------------ step
+    def _prefill_chunks(self) -> None:
+        """Advance every mid-prefill row by one chunk (through the decode
+        path at batch=1). Rows still holding a pending tail sit out the
+        batched decode step — their logits only become meaningful once the
+        whole prompt has been processed."""
+        for r in self.running:
+            if r.pending is None or not len(r.pending):
+                r.pending = None
+                continue
+            m = (len(r.pending) if self.chunk_tokens is None
+                 else min(max(self.chunk_tokens, 1), len(r.pending)))
+            r.logits, r.cache = self.engine.extend_one(
+                r.req.rid, r.cache, r.pending[:m], r.length, r.mirrored)
+            r.length += m
+            r.pending = r.pending[m:] if m < len(r.pending) else None
+            self.stats.prefill_chunks += 1
+
     def _step(self) -> None:
-        """One batched decode step over every running sequence: argmax each
-        row's pending logits, decode all rows at once, mirror the new KV
-        tokens as one multi-sequence append, split the rows back out."""
-        rows = self.running
+        """One batched decode step over every fully-prefilled running
+        sequence: argmax each row's pending logits, decode all rows at once
+        through :meth:`ServingEngine.decode_batch` (dense mirror or pooled
+        paged-attention path), split the rows back out."""
+        rows = [r for r in self.running if r.pending is None]
+        if not rows:
+            return
         tokens = []
         for r in rows:
             nxt = int(jnp.argmax(r.logits[:, -1], -1)[0])
             r.req.generated.append(nxt)
             tokens.append(nxt)
-        batch = batching.concat_rows([r.cache for r in rows])
-        positions = batch["pos"]
-        logits, batch = self.engine._decode(
-            self.engine.params, batch,
-            jnp.asarray(tokens, jnp.int32)[:, None], positions)
         # one batch = one model family, so either every row mirrors or none
-        self.engine.mirror_decode_batch(
-            [r.req.rid for r in rows] if rows[0].mirrored else [], batch,
-            np.asarray(positions))
+        logits, caches = self.engine.decode_batch(
+            [r.req.rid for r in rows], [r.cache for r in rows], tokens,
+            rows[0].mirrored)
         for i, r in enumerate(rows):
-            r.cache = batching.split_row(batch, i)
+            r.cache = caches[i]
             r.logits = logits[i:i + 1]
             r.length += 1
 
@@ -216,18 +260,20 @@ class Scheduler:
             self.preempted.append(_Preempted(
                 req=victim.req, cache=batching.row_to_host(victim.cache),
                 logits=np.asarray(victim.logits), length=victim.length,
-                mirrored=victim.mirrored))
+                mirrored=victim.mirrored, pending=victim.pending))
             self.stats.preempts += 1
 
     # ------------------------------------------------------------------- run
     def tick(self) -> bool:
-        """One scheduling round: admit → batched step → retire finished →
-        preempt under pressure. Returns False when all work is done."""
+        """One scheduling round: admit → prefill chunks → batched step →
+        retire finished → preempt under pressure. Returns False when all
+        work is done."""
         self._admit()
         self._finish_done()    # max_new=0 rows retire without decoding
         if not self.running:
             return bool(self.waiting or self.preempted)
         self.stats.ticks += 1
+        self._prefill_chunks()
         self._step()
         self._finish_done()
         self._preempt_under_pressure()

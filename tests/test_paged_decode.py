@@ -1,0 +1,303 @@
+"""Mirror-free pooled decode + chunked prefill (ISSUE 4).
+
+Four suites lock the block-table-native serving path down:
+
+* **pooled equivalence** — decode over the device page pool (the
+  paged_attention kernel, block-table indirection) is token-identical to
+  the sequential mirrored reference for EVERY registered engine (pool
+  -capable ones go mirror-free, the rest fall back transparently), under
+  random admission order, preemption, and chunked prefill;
+* **zero-mirror pin** — ``mirror_d2h_bytes == 0`` on the pooled path, in
+  steady state AND under preemption churn (the regression that would
+  silently reintroduce the dense mirror);
+* **chunked prefill** — prompts longer than the chunk budget split across
+  ticks and still generate exactly the one-shot-prefill tokens, on both
+  the pooled and the mirrored path;
+* **pooled engine unit surface** — page alloc/free tied to the LRU
+  accounting: page-granular spill/fault keeps reads exact under a thrashing
+  pool, victim_hint answers by reclaimable pages, and the pool guards
+  (init-after-append, pool on a log engine, paged_decode=True on an
+  unsupported config) fail loudly.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.core import SimClock
+from repro.core.engines import (EngineSpec, create_kv_engine,
+                                list_kv_engines)
+from repro.core.kvcache import KVSpec
+from repro.models import build_model
+from repro.serving import Request, ServeConfig, ServingEngine
+
+ARCH = "internlm2-1.8b-smoke"
+MAX_LEN = 24                  # small so a tight pool still fits one seq
+PAGE_TOKENS = 4
+PROMPT_LENS = (8, 12, 8)
+MAX_NEW = 6
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_config(ARCH)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _group_bytes(mcfg):
+    """One fp32 pool page group (all layers)."""
+    return (mcfg.num_layers * 2 * PAGE_TOKENS * mcfg.num_kv_heads
+            * mcfg.head_dim * 4)
+
+
+def _requests(cfg, seed=0, max_new=MAX_NEW):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, n, dtype=np.int32),
+                    max_new=max_new)
+            for i, n in enumerate(PROMPT_LENS)]
+
+
+def _engine(lm, engine, *, hbm_bytes=64 << 20, paged_decode=None,
+            max_batch_tokens=None, chunk=None, max_batch_seqs=4):
+    cfg, model, params = lm
+    return ServingEngine(model, params, ServeConfig(
+        max_len=MAX_LEN, page_tokens=PAGE_TOKENS,
+        engine_spec=EngineSpec(engine=engine, kv_hbm_bytes=hbm_bytes,
+                               kv_hot_window=8, drain_shards=2),
+        max_batch_seqs=max_batch_seqs, max_batch_tokens=max_batch_tokens,
+        paged_decode=paged_decode, prefill_chunk_tokens=chunk))
+
+
+@pytest.fixture(scope="module")
+def reference(lm):
+    cfg, _, _ = lm
+    reqs = _requests(cfg)
+    _engine(lm, "log", paged_decode=False).generate_sequential(reqs)
+    return {r.rid: list(r.generated) for r in reqs}
+
+
+# --------------------------------------------------------- pooled equivalence
+def test_paged_engine_auto_enables_pool(lm):
+    eng = _engine(lm, "paged")
+    assert eng.pooled
+    assert eng.tiered.pooled
+
+
+@pytest.mark.parametrize("engine_name", list_kv_engines())
+def test_every_engine_matches_reference_under_auto_pooling(lm, reference,
+                                                           engine_name):
+    """The acceptance bar: pooled decode (or the transparent mirror
+    fallback) equals the sequential mirrored reference for every
+    registered engine, across admission orders."""
+    cfg, _, _ = lm
+    for order in ((0, 1, 2), (2, 0, 1), (1, 2, 0)):
+        reqs = _requests(cfg)
+        eng = _engine(lm, engine_name, max_batch_seqs=2)
+        eng.generate([reqs[i] for i in order])
+        for r in reqs:
+            assert r.done
+            assert r.generated == reference[r.rid], (engine_name, order)
+
+
+def test_pooled_decode_under_preemption_matches_reference(lm, reference):
+    """A pool with room for ~1.5 sequences forces whole-sequence preemption
+    (page-granular spill of every resident page) — tokens must not move."""
+    cfg, model, _ = lm
+    budget = 8 * _group_bytes(model.cfg)        # 8 pool pages of 4 tokens
+    reqs = _requests(cfg)
+    eng = _engine(lm, "paged", hbm_bytes=budget)
+    assert eng.pooled
+    eng.generate(reqs)
+    s = eng.stats()
+    assert s["preempts"] >= 1 and s["restores"] >= 1, s
+    assert s["pool_page_spills"] >= 1
+    for r in reqs:
+        assert r.generated == reference[r.rid]
+
+
+def test_log_engines_fall_back_to_mirror(lm, reference):
+    for name in ("log", "kvhybrid"):
+        eng = _engine(lm, name)
+        assert not eng.pooled
+        reqs = _requests(lm[0])
+        eng.generate(reqs)
+        assert all(r.generated == reference[r.rid] for r in reqs)
+        assert eng.stats()["mirror_d2h_bytes"] > 0
+
+
+def test_ssm_family_falls_back_to_mirror():
+    """No (k, v) cache → paged decode unsupported → transparent mirror
+    path even on a pool-capable engine."""
+    cfg = get_config("mamba2-1.3b-smoke")
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, ServeConfig(
+        max_len=16, page_tokens=4,
+        engine_spec=EngineSpec(engine="paged")))
+    assert not eng.pooled
+    rng = np.random.default_rng(3)
+    req = Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 8,
+                                             dtype=np.int32), max_new=4)
+    eng.generate([req])
+    assert len(req.generated) == 4
+
+
+# --------------------------------------------------------------- zero-mirror
+def test_mirror_d2h_bytes_pinned_zero_on_pooled_path(lm):
+    """THE regression pin: the pooled path must never move a KV byte over
+    the device→host link — not at admission, not per decode step, not
+    under preemption churn or chunked prefill."""
+    cfg, model, _ = lm
+    for kwargs in ({},                                        # steady state
+                   {"hbm_bytes": 8 * _group_bytes(model.cfg)},  # preempting
+                   {"max_batch_tokens": 10}):                 # chunking
+        reqs = _requests(cfg)
+        eng = _engine(lm, "paged", **kwargs)
+        assert eng.pooled
+        eng.generate(reqs)
+        assert eng.stats()["mirror_d2h_bytes"] == 0, kwargs
+    # the mirrored baseline moves exactly one fp16 token/seq/step + prompts
+    reqs = _requests(cfg)
+    eng = _engine(lm, "paged", paged_decode=False)
+    eng.generate(reqs)
+    token_bytes = (model.cfg.num_layers * 2 * model.cfg.num_kv_heads
+                   * model.cfg.head_dim * 2)
+    expect = sum(n + MAX_NEW for n in PROMPT_LENS) * token_bytes
+    assert eng.stats()["mirror_d2h_bytes"] == expect
+
+
+# ----------------------------------------------------------- chunked prefill
+@pytest.mark.parametrize("engine_name", ("paged", "log"))
+def test_chunked_prefill_token_identical_to_one_shot(lm, reference,
+                                                     engine_name):
+    """Prompts split across ticks (chunk budget below every prompt length)
+    generate exactly the one-shot-prefill tokens, pooled and mirrored."""
+    cfg, _, _ = lm
+    reqs = _requests(cfg)
+    eng = _engine(lm, engine_name, chunk=5)
+    eng.generate(reqs)
+    assert eng.sched_stats["sched_prefill_chunks"] >= 2
+    for r in reqs:
+        assert r.generated == reference[r.rid], engine_name
+
+
+def test_chunk_budget_defaults_to_max_batch_tokens(lm, reference):
+    cfg, _, _ = lm
+    reqs = _requests(cfg)
+    eng = _engine(lm, "log", max_batch_tokens=6)
+    eng.generate(reqs)
+    assert eng.sched_stats["sched_prefill_chunks"] >= 2
+    for r in reqs:
+        assert r.generated == reference[r.rid]
+
+
+def test_chunked_prefill_mirrors_one_append_per_chunk(lm):
+    """The mirror path appends each chunk as ONE batched transfer: the
+    tiered engine sees prefill-burst-sized appends, not token dribbles."""
+    cfg, _, _ = lm
+    reqs = [_requests(cfg)[1]]                  # the 12-token prompt
+    eng = _engine(lm, "log", chunk=5, max_batch_seqs=1)
+    eng.generate(reqs)
+    # 12-token prompt = chunks of 5/5/2 → first chunk via prefill append,
+    # two continuation chunks via extend_one's batched range append
+    assert eng.sched_stats["sched_prefill_chunks"] == 2
+
+
+# ------------------------------------------------------- pooled engine surface
+def _pooled_kv(pages, *, page_tokens=4):
+    kvspec = KVSpec(num_layers=2, kv_heads=2, head_dim=8,
+                    page_tokens=page_tokens)
+    clock = SimClock()
+    kv = create_kv_engine(EngineSpec(engine="paged", kv_hbm_bytes=1 << 30),
+                          kvspec, clock)
+    kv.init_pool(dtype=np.float32, pages=pages)
+    return kv, kvspec
+
+
+def test_pooled_reads_exact_under_page_thrash():
+    """A pool smaller than the working set spills/faults LRU pages at page
+    granularity — reads must stay bit-exact through arbitrary thrash."""
+    kv, kvspec = _pooled_kv(pages=3)
+    rng = np.random.default_rng(0)
+    shape = (2, 2, 2, 8)
+    ref = {}
+    for s in range(3):                  # 3 seqs × 2 pages > 3-page pool
+        toks = [rng.standard_normal(shape).astype(np.float32)
+                for _ in range(6)]
+        ref[s] = np.stack(toks)
+        for t in toks:
+            kv.append(s, t)
+    assert kv.stats["pool_page_spills"] >= 1
+    for s in range(3):
+        for layer in range(2):
+            got = kv.read(s, layer).astype(np.float32)
+            want = ref[s][:, layer].transpose(1, 0, 2, 3)
+            np.testing.assert_allclose(
+                got, want.astype(kvspec.dtype).astype(np.float32),
+                atol=1e-3)
+    assert kv.stats["pool_faults"] >= 1
+
+
+def test_pooled_preempt_restore_frees_and_rebuilds_pages():
+    kv, _ = _pooled_kv(pages=8)
+    rng = np.random.default_rng(1)
+    tok = lambda: rng.standard_normal((2, 2, 2, 8)).astype(np.float32)
+    for s in (0, 1):
+        for _ in range(7):
+            kv.append(s, tok())
+    free_before = len(kv.free_pages)
+    kv.preempt(0)
+    assert len(kv.free_pages) == free_before + 2    # ceil(7/4) pages freed
+    with pytest.raises(RuntimeError):
+        kv.read(0, 0)
+    kv.restore(0)
+    assert kv.seq_len[0] == 7
+    kv.release(0)
+    kv.release(1)
+    assert len(kv.free_pages) == kv.pool_pages
+    assert not kv.phys_owner and not kv.host_pages
+
+
+def test_pooled_victim_hint_prefers_most_pages():
+    kv, _ = _pooled_kv(pages=8)
+    rng = np.random.default_rng(2)
+    tok = lambda: rng.standard_normal((2, 2, 2, 8)).astype(np.float32)
+    for _ in range(9):                  # 3 pages
+        kv.append(0, tok())
+    for _ in range(2):                  # 1 page
+        kv.append(1, tok())
+    assert kv.victim_hint([0, 1]) == 0
+    assert kv.victim_hint([1]) == 1
+    assert kv.victim_hint([]) is None
+
+
+def test_pooled_can_admit_tokens_counts_free_pages():
+    kv, _ = _pooled_kv(pages=4)
+    rng = np.random.default_rng(3)
+    burst = rng.standard_normal((2, 2, 8, 2, 8)).astype(np.float32)
+    kv.append(0, burst)                 # 8 tokens = 2 pages
+    assert kv.can_admit_tokens(4)       # 1 page fits (reserve 1 for seq 0)
+    assert not kv.can_admit_tokens(8)   # 2 pages + reserve 1 > 2 free
+
+
+def test_pool_guards_fail_loudly(lm):
+    kv, _ = _pooled_kv(pages=4)
+    with pytest.raises(RuntimeError, match="twice"):
+        kv.init_pool()
+    kvspec = KVSpec(num_layers=2, kv_heads=2, head_dim=8, page_tokens=4)
+    log = create_kv_engine(EngineSpec(engine="log"), kvspec, SimClock())
+    assert not log.supports_pool()
+    with pytest.raises(RuntimeError, match="no paged pool"):
+        log.init_pool()
+    with pytest.raises(RuntimeError, match="no paged pool"):
+        log.pool_views()
+    # a pool too small for one max-length sequence refuses paged_decode=True
+    with pytest.raises(ValueError, match="pool pages"):
+        _engine(lm, "paged", hbm_bytes=1024, paged_decode=True)
+    # ...and paged_decode=True on a pool-less engine refuses too
+    with pytest.raises(ValueError, match="pool-capable"):
+        _engine(lm, "log", paged_decode=True)
