@@ -164,11 +164,40 @@ class ServeWorkload:
 
     def smoke(self) -> "ServeWorkload":
         """CI-sized variant: small enough to finish in seconds, tight
-        enough (relative to the bench's HBM budget) to still preempt."""
+        enough (relative to the bench's HBM budget) to still preempt. The
+        prefill-heavy mix keeps its prompt ≫ decode ratio."""
         import dataclasses
+        if self.name == "prefill_heavy":
+            return dataclasses.replace(self, requests=6,
+                                       prompt_tokens=(48, 96),
+                                       decode_tokens=(4, 8),
+                                       max_batch_seqs=3, gather_every=8)
         return dataclasses.replace(self, requests=6, prompt_tokens=(8, 24),
                                    decode_tokens=(12, 24), max_batch_seqs=3,
                                    gather_every=8)
+
+
+def prefill_heavy_workload(seed: int = 0) -> ServeWorkload:
+    """The ISSUE 5 serve regime: a Poisson mix dominated by long prompts
+    with short completions — the arrival pattern where per-chunk batch=1
+    launches serialize the tick and the fused mixed-batch step wins. Used
+    by ``kvcache_bench --workloads prefill_heavy`` and the fused-vs-unfused
+    tick comparison recorded in BENCH_serve.json."""
+    # decode tails stay well under the prompt mass (prompt:decode ≈ 4:1)
+    # but are long enough that decode growth — not just admission — can
+    # push a pool past its budget, so the preemption path is exercised at
+    # full size too, not only in --smoke
+    return ServeWorkload(name="prefill_heavy", requests=24,
+                         mean_interarrival_tokens=24.0,
+                         prompt_tokens=(96, 160, 256),
+                         decode_tokens=(16, 64), max_batch_seqs=4,
+                         gather_every=16, seed=seed)
+
+
+def serve_workloads() -> dict:
+    """Name → serve-workload preset (the arrival-process benchmarks)."""
+    return {"serve": ServeWorkload(),
+            "prefill_heavy": prefill_heavy_workload()}
 
 
 def run_serve_workload(kv, kvspec, wl: ServeWorkload, clock) -> dict:

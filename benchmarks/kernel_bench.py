@@ -22,9 +22,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import (flash_attention, log_patch, paged_attention,
-                           paged_attention_layers)
-from repro.kernels.paged_attention.ref import (paged_attention_layers_ref,
-                                               paged_attention_ref)
+                           paged_attention_layers,
+                           paged_attention_layers_ragged,
+                           paged_attention_ragged)
+from repro.kernels.paged_attention.ref import (
+    paged_attention_layers_ragged_ref, paged_attention_layers_ref,
+    paged_attention_ragged_ref, paged_attention_ref)
 from repro.roofline.hw import V5E
 
 
@@ -128,6 +131,130 @@ def smoke_check() -> dict:
             "max_abs_err": errs}
 
 
+def smoke_check_ragged() -> dict:
+    """CI gate for the ragged-query contract (ISSUE 5): the fused
+    mixed-batch entries must (a) match their oracles on the contract edges
+    — an empty padding row, a decode row, a chunk ending exactly on a page
+    boundary, a ragged mid-page chunk; (b) reduce to the plain decode
+    kernels BIT-FOR-BIT at q_len=1; (c) zero every padding query slot; and
+    (d) ignore poisoned dead pages and dead slots. Raises on any miss."""
+    rng = np.random.default_rng(11)
+    L, B, Qm, H, K, D, T, MP = 2, 4, 4, 8, 4, 64, 8, 4
+    P = B * MP                                     # disjoint tables
+    q = jnp.asarray(rng.standard_normal((L, B, Qm, H, D)), jnp.float32)
+    pk = np.asarray(rng.standard_normal((L, P, T, K, D)), np.float32)
+    pv = np.asarray(rng.standard_normal((L, P, T, K, D)), np.float32)
+    tbl = np.arange(P, dtype=np.int32).reshape(B, MP)
+    # padding row (q_len 0) / decode row / chunk ending ON the page
+    # boundary / ragged mid-page chunk
+    lens = jnp.asarray([0, 5, 2 * T, T * MP - 3], jnp.int32)
+    qls = jnp.asarray([0, 1, T, 3], jnp.int32)
+    tbl_j = jnp.asarray(tbl)
+    cases = {
+        "paged_attention_ragged": (
+            paged_attention_ragged(q[0], jnp.asarray(pk[0]),
+                                   jnp.asarray(pv[0]), tbl_j, lens, qls,
+                                   force_pallas=True),
+            paged_attention_ragged_ref(q[0], jnp.asarray(pk[0]),
+                                       jnp.asarray(pv[0]), tbl_j, lens,
+                                       qls)),
+        "paged_attention_layers_ragged": (
+            paged_attention_layers_ragged(q, jnp.asarray(pk),
+                                          jnp.asarray(pv), tbl_j, lens, qls,
+                                          force_pallas=True),
+            paged_attention_layers_ragged_ref(q, jnp.asarray(pk),
+                                              jnp.asarray(pv), tbl_j, lens,
+                                              qls)),
+    }
+    errs = {}
+    for name, (out, ref) in cases.items():
+        err = float(jnp.max(jnp.abs(out - ref)))
+        errs[name] = err
+        if not np.isfinite(err) or err > 2e-5:
+            raise SystemExit(
+                f"kernel smoke FAILED: {name} diverges from its oracle "
+                f"(max abs err {err:.3e}) on the ragged-query contract "
+                f"edges")
+        o = np.asarray(out)
+        if o.ndim == 4:                           # single layer (B,Qm,H,D)
+            o = o[None]
+        for b in range(B):
+            ql = int(qls[b])
+            if np.any(o[:, b, ql:] != 0):
+                raise SystemExit(
+                    f"kernel smoke FAILED: {name} returned nonzero output "
+                    f"in padding query slots of row {b} (q_len={ql})")
+    # (b) q_len=1 ≡ the existing decode kernels, bit for bit
+    lens1 = jnp.asarray([3, 5, 2 * T, T * MP - 3], jnp.int32)
+    qls1 = jnp.ones(B, jnp.int32)
+    r1 = paged_attention_ragged(q[0, :, :1], jnp.asarray(pk[0]),
+                                jnp.asarray(pv[0]), tbl_j, lens1, qls1,
+                                force_pallas=True)
+    d1 = paged_attention(q[0, :, 0], jnp.asarray(pk[0]), jnp.asarray(pv[0]),
+                         tbl_j, lens1, force_pallas=True)
+    if not np.array_equal(np.asarray(r1[:, 0]), np.asarray(d1)):
+        raise SystemExit(
+            "kernel smoke FAILED: paged_attention_ragged at q_len=1 is not "
+            "bit-for-bit paged_attention")
+    rl = paged_attention_layers_ragged(q[:, :, :1], jnp.asarray(pk),
+                                       jnp.asarray(pv), tbl_j, lens1, qls1,
+                                       force_pallas=True)
+    dl = paged_attention_layers(q[:, :, 0], jnp.asarray(pk), jnp.asarray(pv),
+                                tbl_j, lens1, force_pallas=True)
+    if not np.array_equal(np.asarray(rl[:, :, 0]), np.asarray(dl)):
+        raise SystemExit(
+            "kernel smoke FAILED: paged_attention_layers_ragged at q_len=1 "
+            "is not bit-for-bit paged_attention_layers")
+    # (d) dead-page poisoning under ragged queries: slots at or past
+    # lens[b] must never reach the output
+    pk2, pv2 = pk.copy(), pv.copy()
+    lens_np = np.asarray(lens)
+    for b in range(B):
+        for lp in range(MP):
+            phys = tbl[b, lp]
+            start = lp * T
+            if start >= lens_np[b]:
+                pk2[:, phys] = 1e6
+                pv2[:, phys] = -1e6
+            elif start + T > lens_np[b]:
+                pk2[:, phys, lens_np[b] - start:] = 1e6
+                pv2[:, phys, lens_np[b] - start:] = -1e6
+    out_poisoned = paged_attention_layers_ragged(
+        q, jnp.asarray(pk2), jnp.asarray(pv2), tbl_j, lens, qls,
+        force_pallas=True)
+    dead_err = float(jnp.max(jnp.abs(
+        out_poisoned - cases["paged_attention_layers_ragged"][0])))
+    errs["dead_page_poisoning"] = dead_err
+    if not np.isfinite(dead_err) or dead_err > 1e-5:
+        raise SystemExit(
+            f"kernel smoke FAILED: poisoning dead pages changed the ragged "
+            f"output (max abs err {dead_err:.3e})")
+    return {"kernel": "smoke_gate_ragged",
+            "shape": f"lens={list(map(int, lens))} qls={list(map(int, qls))}",
+            "max_abs_err": errs}
+
+
+def bench_paged_ragged(L=4, B=8, Qm=8, H=8, K=4, D=128, T=16, P=256, MP=16):
+    """The fused mixed-batch entry: decode rows and prefill-chunk rows in
+    one launch (half the rows q_len=1, half q_len=Qm)."""
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.standard_normal((L, B, Qm, H, D)), jnp.float32)
+    pk = jnp.asarray(rng.standard_normal((L, P, T, K, D)), jnp.float32)
+    pv = jnp.asarray(rng.standard_normal((L, P, T, K, D)), jnp.float32)
+    tbl = jnp.asarray(rng.integers(0, P, (B, MP)), jnp.int32)
+    qls = jnp.asarray([1 if b % 2 else Qm for b in range(B)], jnp.int32)
+    lens = jnp.asarray(rng.integers(T, T * MP - Qm, B), jnp.int32) + qls
+    t_ref = _time(paged_attention_layers_ragged, q, pk, pv, tbl, lens, qls)
+    t_pal = _time(lambda *a: paged_attention_layers_ragged(
+        *a, force_pallas=True), q, pk, pv, tbl, lens, qls)
+    bytes_moved = L * B * MP * T * K * D * 2 * 2 * 4
+    return {"kernel": "paged_attention_layers_ragged",
+            "shape": f"L{L} B{B} Q{Qm} pages{MP}x{T}",
+            "ref_us": t_ref * 1e6, "pallas_interp_us": t_pal * 1e6,
+            "tpu_bytes": bytes_moved,
+            "tpu_roofline_us": bytes_moved / V5E.hbm_bandwidth * 1e6}
+
+
 def bench_log_patch(P=64, T=16, C=512, N=128):
     rng = np.random.default_rng(2)
     pool = jnp.asarray(rng.standard_normal((P, T, C)), jnp.float32)
@@ -153,16 +280,19 @@ def main(argv=None):
                          "rows; exits nonzero on kernel regression")
     args = ap.parse_args(argv)
     if args.smoke:
-        rows = [smoke_check(),
+        rows = [smoke_check(), smoke_check_ragged(),
                 bench_paged(B=4, K=4, D=64, T=8, P=32, MP=4),
-                bench_paged_layers(L=2, B=4, K=4, D=64, T=8, P=32, MP=4)]
+                bench_paged_layers(L=2, B=4, K=4, D=64, T=8, P=32, MP=4),
+                bench_paged_ragged(L=2, B=4, Qm=4, K=4, D=64, T=8, P=32,
+                                   MP=4)]
         print("paged_attention smoke gate passed:", rows[0]["max_abs_err"])
+        print("ragged-query smoke gate passed:", rows[1]["max_abs_err"])
     else:
         rows = [bench_flash(), bench_paged(), bench_paged_layers(),
-                bench_log_patch()]
+                bench_paged_ragged(), bench_log_patch()]
     print("kernel,shape,ref_us,pallas_interp_us,tpu_roofline_us")
     for r in rows:
-        if r["kernel"] == "smoke_gate":
+        if r["kernel"].startswith("smoke_gate"):
             continue
         print(f"{r['kernel']},{r['shape']},{r['ref_us']:.0f},"
               f"{r['pallas_interp_us']:.0f},{r['tpu_roofline_us']:.2f}")

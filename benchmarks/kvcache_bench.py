@@ -4,26 +4,39 @@ decode appends + periodic full-history gathers per engine × workload;
 reports simulated tier time, write amplification, DMA traffic, and (for
 ``kvhybrid``) the learned routing split.
 
-The ``serve`` workload is the serving-scale regime: a Poisson arrival
-process through a continuous-batching loop (the model-free twin of the
-serving scheduler) with preemption when the engine's HBM accounting crosses
-its budget — it additionally reports throughput, p50/p99 request latency,
-preempt/restore counts, the pool hit rate, and the device→host mirror bytes
-the pooled path saves, per engine. Pool-capable engines (``paged``) run the
-serve workload over their device-resident page pool by default (appends are
-device-born, page-granular LRU spills under pressure) — that is the decode
--throughput comparison against the mirror-path engines; ``--no-pool`` forces
-everyone onto the host-mirror path. ``--smoke`` shrinks it to CI size.
+The ``serve`` and ``prefill_heavy`` workloads are the serving-scale regime:
+a Poisson arrival process through a continuous-batching loop (the
+model-free twin of the serving scheduler) with preemption when the engine's
+HBM accounting crosses its budget — they additionally report throughput,
+p50/p99 request latency, preempt/restore counts, the pool hit rate, and the
+device→host mirror bytes the pooled path saves, per engine.
+``prefill_heavy`` is the long-prompt Poisson mix where fused mixed-batch
+ticks matter most. Pool-capable engines (``paged``) run the serve workloads
+over their device-resident page pool by default; ``--no-pool`` forces
+everyone onto the host-mirror path. ``--smoke`` shrinks everything to CI
+size.
+
+When a serve-style workload runs, the bench ALSO runs the model-backed
+fused-vs-unfused tick comparison (the real ``ServingEngine`` +
+``Scheduler`` over the smoke model on a prefill-heavy request set, fused
+mixed-batch ticks vs the batch=1-per-chunk baseline) and writes everything
+to a stable ``BENCH_serve.json`` at the repo root so the serving perf
+trajectory is tracked across PRs. ``--fused-gate`` (CI) exits nonzero if
+the fused path is not faster than the ``fuse_ticks=False`` baseline.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import time
 from pathlib import Path
 
-from benchmarks.common import (ServeWorkload, kv_workloads, run_kv_workload,
-                               run_serve_workload)
+import numpy as np
+
+from benchmarks.common import (ServeWorkload, kv_workloads,
+                               prefill_heavy_workload, run_kv_workload,
+                               run_serve_workload, serve_workloads)
 from repro.core import SimClock
 from repro.core.engines import EngineSpec, create_kv_engine, list_kv_engines
 from repro.core.kvcache import KVSpec
@@ -50,14 +63,23 @@ def bench(engine: str, *, layers=8, kv_heads=8, head_dim=128, tokens=512,
     kvspec = KVSpec(num_layers=layers, kv_heads=kv_heads, head_dim=head_dim,
                     page_tokens=16)
     clock = SimClock()
-    spec = EngineSpec(engine=engine, kv_hbm_bytes=2 << 20, kv_hot_window=128,
+    budget = 2 << 20
+    if workload in serve_workloads():
+        wl = dataclasses.replace(serve_workloads()[workload], seed=seed)
+        if smoke:
+            wl = wl.smoke()
+        # the budget must hold MORE than one worst-case prompt, or a single
+        # long-prompt request saturates it alone and the twin never reaches
+        # the concurrency the preemption path needs (prefill_heavy's
+        # prompts are far longer than serve's; 1.25 prompts keeps the
+        # squeeze binding either way)
+        per_token = kvspec.token_bytes * layers
+        budget = max(budget, int(1.25 * max(wl.prompt_tokens) * per_token))
+    spec = EngineSpec(engine=engine, kv_hbm_bytes=budget, kv_hot_window=128,
                       drain_shards=drain_shards)
     kv = create_kv_engine(spec, kvspec, clock)
     pooled = False
-    if workload == "serve":
-        wl = ServeWorkload(seed=seed)
-        if smoke:
-            wl = wl.smoke()
+    if workload in serve_workloads():
         if pool and kv.supports_pool():
             # pool floor: max_batch_seqs - 1 max-length sequences
             # co-resident plus a decode reserve page per batch slot — a
@@ -85,18 +107,101 @@ def bench(engine: str, *, layers=8, kv_heads=8, head_dim=128, tokens=512,
         if workload not in by_name:
             raise ValueError(
                 f"unknown workload {workload!r}; choose from "
-                f"{', '.join([*by_name, 'serve'])}")
+                f"{', '.join([*by_name, *serve_workloads()])}")
         wl = dataclasses.replace(by_name[workload], seed=seed)
         appended = run_kv_workload(kv, kvspec, wl)
         serve = {}
     host_w = clock.bytes_moved("host", "write")
     host_r = clock.bytes_moved("host", "read")
     return {"design": engine, "workload": wl.name, "pooled": pooled,
+            "smoke": smoke,
             "drain_shards": drain_shards, "sim_time_s": clock.now,
             "host_write_bytes": host_w, "host_read_bytes": host_r,
             "write_amplification": host_w / (
                 appended * kvspec.token_bytes * layers),
             **serve, **kv.stats}
+
+
+def bench_fused_ticks(*, smoke=False, arch="internlm2-1.8b-smoke", seed=0,
+                      fuse=None) -> dict:
+    """Model-backed fused-vs-unfused tick comparison (the tentpole's
+    acceptance measurement): the real ServingEngine + Scheduler over the
+    smoke model on a prefill-heavy request set — long prompts admitted
+    chunk by chunk, short completions — once with fused mixed-batch ticks
+    and once with the batch=1-per-chunk baseline (``fuse_ticks=False``).
+
+    Each path runs twice and times the second (warm-jit) pass, so the
+    comparison measures per-tick launch structure, not compile time. Also
+    reports the deterministic launch accounting: model step calls per
+    generated+prefilled token (the fused path's structural win).
+    """
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import Request, ServeConfig, ServingEngine
+
+    cfg = get_config(arch)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    n_req = 4 if smoke else 6
+    chunk = 8
+    prompt_lens = [int(x) for x in rng.choice(
+        (24, 40) if smoke else (32, 48, 64), n_req)]
+    max_new = 4 if smoke else 8
+    max_len = max(prompt_lens) + max_new + 1
+    max_len += -max_len % 8
+    page_tokens = 8
+
+    def run(fuse_ticks: bool) -> dict:
+        # ONE engine for both reps: jax.jit caches live on the engine's
+        # wrapper objects, so only same-engine reuse makes rep 1 a warm
+        # measurement of per-tick launch structure rather than compiles
+        eng = ServingEngine(model, params, ServeConfig(
+            max_len=max_len, page_tokens=page_tokens,
+            engine_spec=EngineSpec(engine="paged",
+                                   kv_hbm_bytes=256 << 20),
+            max_batch_seqs=4, prefill_chunk_tokens=chunk,
+            fuse_ticks=fuse_ticks))
+
+        def one_pass():
+            reqs = [Request(rid=i,
+                            prompt=rng.integers(0, cfg.vocab_size,
+                                                prompt_lens[i],
+                                                dtype=np.int32),
+                            max_new=max_new) for i in range(n_req)]
+            t0 = time.perf_counter()
+            eng.generate(reqs)
+            return time.perf_counter() - t0
+
+        one_pass()                      # rep 0: compile every step shape
+        calls_warm = eng.stats()["step_calls"]
+        wall = one_pass()               # rep 1: warm, identical schedule
+        s = eng.stats()
+        step_calls = s["step_calls"] - calls_warm     # the timed pass only
+        tokens = sum(prompt_lens) + n_req * max_new
+        return {"fused": eng.fused, "wall_s": wall,
+                "tokens": tokens, "ticks": s["sched_ticks"],
+                "step_calls": step_calls,
+                "step_compiles": s["step_compiles"],
+                "prefill_chunks": s["sched_prefill_chunks"],
+                "tokens_per_s": tokens / max(wall, 1e-9),
+                "tokens_per_launch": tokens / max(step_calls, 1)}
+
+    rows = {}
+    if fuse in (None, True):
+        rows["fused"] = run(True)
+    if fuse in (None, False):
+        rows["unfused"] = run(False)
+    if "fused" in rows and "unfused" in rows:
+        rows["speedup_wall"] = (rows["fused"]["tokens_per_s"]
+                                / max(rows["unfused"]["tokens_per_s"], 1e-9))
+        rows["launch_ratio"] = (rows["unfused"]["step_calls"]
+                                / max(rows["fused"]["step_calls"], 1))
+    rows["config"] = {"arch": arch, "requests": n_req,
+                      "prompt_lens": prompt_lens, "max_new": max_new,
+                      "chunk_tokens": chunk, "smoke": smoke}
+    return rows
 
 
 def main(argv=None):
@@ -107,24 +212,39 @@ def main(argv=None):
                          "enumerate the registry")
     ap.add_argument("--workloads", default="decode",
                     help="comma-separated workload names "
-                         "(decode/prefill/mixed/serve), or 'all'")
+                         "(decode/prefill/mixed/serve/prefill_heavy), or "
+                         "'all'")
     ap.add_argument("--drain-shards", type=int, default=1)
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized serve workload (seconds, still preempts)")
     ap.add_argument("--no-pool", dest="pool", action="store_false",
-                    help="serve workload: force pool-capable engines onto "
+                    help="serve workloads: force pool-capable engines onto "
                          "the host-mirror path (baseline for the pooled "
                          "decode-throughput comparison)")
+    ap.add_argument("--no-fuse", dest="fused_bench", action="store_false",
+                    help="skip the model-backed fused-vs-unfused tick "
+                         "comparison that normally accompanies serve-style "
+                         "workloads")
+    ap.add_argument("--fused-gate", action="store_true",
+                    help="CI: exit nonzero unless the fused mixed-batch "
+                         "tick beats the batch=1-per-chunk baseline")
     ap.add_argument("--out", default="artifacts/kvcache_bench.json")
+    ap.add_argument("--serve-out", default="BENCH_serve.json",
+                    help="repo-root serving perf record (written whenever "
+                         "a serve-style workload runs)")
     args = ap.parse_args(argv)
     engines = (list_kv_engines() if args.engines == "all"
                else tuple(args.engines.split(",")))
-    wl_names = ([w.name for w in kv_workloads()] + ["serve"]
+    wl_names = ([w.name for w in kv_workloads()] + list(serve_workloads())
                 if args.workloads == "all" else args.workloads.split(","))
     rows = [bench(e, tokens=args.tokens, workload=w,
                   drain_shards=args.drain_shards, smoke=args.smoke,
                   pool=args.pool)
             for w in wl_names for e in engines]
+    serve_rows = [r for r in rows if r["workload"] in serve_workloads()]
+    fused = None
+    if serve_rows and args.fused_bench:
+        fused = bench_fused_ticks(smoke=args.smoke)
     print("design,workload,sim_time_s,write_amp,host_read_MB,"
           "tput_tok_s,p50_ms,p99_ms,preempts,pool_hit,d2h_saved_MB")
     for r in rows:
@@ -135,19 +255,52 @@ def main(argv=None):
                       f"{r['preempts']},"
                       f"{'' if hit is None else f'{hit:.3f}'},"
                       f"{r['mirror_d2h_saved_bytes']/1e6:.1f}"
-                      if r["workload"] == "serve" else ",,,,,")
+                      if r["workload"] in serve_workloads() else ",,,,,")
         name = r["design"] + ("+pool" if r["pooled"] else "")
         print(f"{name},{r['workload']},{r['sim_time_s']:.4f},"
               f"{r['write_amplification']:.2f},"
               f"{r['host_read_bytes']/1e6:.1f},{serve_cols}")
-    # write the artifact BEFORE the gate so a failing CI run still leaves
-    # the evidence of which engine stopped preempting
+    if fused is not None:
+        print(f"fused-vs-unfused ticks: "
+              f"{fused['fused']['tokens_per_s']:.1f} vs "
+              f"{fused['unfused']['tokens_per_s']:.1f} tok/s "
+              f"(x{fused['speedup_wall']:.2f} wall), "
+              f"{fused['fused']['step_calls']} vs "
+              f"{fused['unfused']['step_calls']} launches "
+              f"(x{fused['launch_ratio']:.2f})")
+    # write the artifacts BEFORE the gates so a failing CI run still leaves
+    # the evidence of what regressed
     out = Path(args.out)
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(rows, indent=1))
-    if any(r["workload"] == "serve" and not r["preempts"] for r in rows):
+    if serve_rows:
+        Path(args.serve_out).write_text(json.dumps(
+            {"engines": serve_rows, "fused_vs_unfused": fused},
+            indent=1, sort_keys=True))
+    if any(r["workload"] in serve_workloads() and not r["preempts"]
+           for r in rows):
         raise SystemExit("serve workload never crossed the HBM budget — "
                          "preemption path not exercised")
+    if args.fused_gate:
+        if fused is None:
+            raise SystemExit("--fused-gate needs a serve-style workload "
+                             "and the fused bench enabled")
+        # gate on the DETERMINISTIC structural property (model launches per
+        # schedule — one fused forward per tick must beat the
+        # batch=1-per-chunk launch count), not on wall clock, which a
+        # noisy CI runner could flip without any code regression; the wall
+        # speedup is still recorded in BENCH_serve.json and warned about
+        if fused["launch_ratio"] <= 1.0:
+            raise SystemExit(
+                f"fused mixed-batch ticks do NOT launch fewer model steps "
+                f"than the batch=1-per-chunk baseline "
+                f"(x{fused['launch_ratio']:.2f}) — the regression this "
+                f"gate exists to prevent")
+        if fused["speedup_wall"] <= 1.0:
+            print(f"WARNING: fused wall speedup x"
+                  f"{fused['speedup_wall']:.2f} <= 1 on this runner "
+                  f"(launch ratio x{fused['launch_ratio']:.2f} still "
+                  f"holds)")
     return rows
 
 

@@ -194,16 +194,50 @@ class KVCacheEngine(abc.ABC):
         """Ready one decode step for ``seqs``: fault every spilled page
         back in, allocate a fresh page for each sequence whose next token
         starts one, and return ``(block_table, lengths)`` — an
-        ``(B, max_pages) int32`` table plus current token counts."""
-        raise RuntimeError(
-            f"KV engine {self.engine_name!r} has no paged pool")
+        ``(B, max_pages) int32`` table plus current token counts.
+
+        Single-token special case of :meth:`prepare_step`."""
+        return self.prepare_step(seqs, [1] * len(seqs), max_pages)
 
     def commit_decode(self, pool_k, pool_v, seqs: Sequence[int]) -> None:
         """Accept updated pool arrays after the model scattered one new
         token per sequence in ``seqs``; advances ``seq_len`` and the
-        resident-page accounting (HBM write charges, no host traffic)."""
+        resident-page accounting (HBM write charges, no host traffic).
+
+        Single-token special case of :meth:`commit_step`."""
+        return self.commit_step(pool_k, pool_v, seqs, [1] * len(seqs))
+
+    def prepare_step(self, seqs: Sequence[int], n_tokens: Sequence[int],
+                     max_pages: int):
+        """Multi-token generalization of :meth:`prepare_decode` — ready one
+        fused mixed-batch step that appends ``n_tokens[i]`` tokens to
+        ``seqs[i]`` (decode rows: 1; prefill-chunk rows: up to the chunk
+        budget): fault every spilled page back in, allocate pages covering
+        each sequence's chunk, and return ``(block_table, ctx_lens)`` —
+        ``ctx_lens`` are the token counts BEFORE the step (each row's chunk
+        start position)."""
         raise RuntimeError(
             f"KV engine {self.engine_name!r} has no paged pool")
+
+    def commit_step(self, pool_k, pool_v, seqs: Sequence[int],
+                    n_tokens: Sequence[int]) -> None:
+        """Accept updated pool arrays after the model scattered
+        ``n_tokens[i]`` new tokens for ``seqs[i]`` in one fused step;
+        advances ``seq_len`` and the resident-page accounting."""
+        raise RuntimeError(
+            f"KV engine {self.engine_name!r} has no paged pool")
+
+    def can_place_step(self, seqs: Sequence[int],
+                       n_tokens: Sequence[int]) -> bool:
+        """Would :meth:`prepare_step` succeed for this batch right now?
+
+        ``prepare_step`` pins EVERY batch sequence's pages while it
+        allocates (a later allocation must never spill a page the kernel is
+        about to read), so a fused tick whose chunks need more pages than
+        ``free + spillable-from-outside-the-batch`` cannot be placed — the
+        scheduler preempts a row and retries instead of crashing into the
+        pool-exhausted error. Engines without a pool always say True."""
+        return True
 
     def alloc_prefill(self, seq: int, n_tokens: int):
         """Allocate pages covering ``n_tokens`` upcoming tokens of ``seq``

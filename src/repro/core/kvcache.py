@@ -313,13 +313,20 @@ class PagedKVCache(_TieredKV):
                 self.pool_lru.touch(phys)
                 self.stats["pool_hits"] += 1
 
-    def prepare_decode(self, seqs: Sequence[int], max_pages: int):
+    def prepare_step(self, seqs: Sequence[int], n_tokens: Sequence[int],
+                     max_pages: int):
+        """Multi-token step preparation (fused mixed-batch ticks): every
+        batch sequence's pages are pinned — a later allocation must never
+        spill a page the kernel is about to read — and each sequence gets
+        pages covering its whole chunk."""
         pinned = set(seqs)
-        for seq in seqs:
+        T = self.spec.page_tokens
+        for seq, n in zip(seqs, n_tokens):
             self._check_active(seq)
             self._ensure_seq_resident(seq, pinned)
             table = self.block_table.setdefault(seq, [])
-            if self.seq_len.get(seq, 0) >= self.spec.page_tokens * len(table):
+            end = self.seq_len.get(seq, 0) + max(int(n), 1)
+            for _ in range(-(-end // T) - len(table)):
                 self._extend_table(seq, pinned)
         tbl = np.zeros((len(seqs), max_pages), np.int32)
         lens = np.zeros(len(seqs), np.int32)
@@ -333,16 +340,19 @@ class PagedKVCache(_TieredKV):
             lens[i] = self.seq_len.get(seq, 0)
         return tbl, lens
 
-    def commit_decode(self, pool_k, pool_v, seqs: Sequence[int]) -> None:
+    def commit_step(self, pool_k, pool_v, seqs: Sequence[int],
+                    n_tokens: Sequence[int]) -> None:
         self.dev_k, self.dev_v = pool_k, pool_v
         per_tok = self._token_group_bytes()
-        for seq in seqs:
+        T = self.spec.page_tokens
+        for seq, n in zip(seqs, n_tokens):
+            n = int(n)
             pos = self.seq_len.get(seq, 0)
-            self.seq_len[seq] = pos + 1
-            self.pool_lru.touch(
-                self.block_table[seq][pos // self.spec.page_tokens])
-            self.clock.charge(HBM, "write", per_tok)
-            self.stats["pool_appends"] += 1
+            self.seq_len[seq] = pos + n
+            for logical in range(pos // T, -(-(pos + n) // T)):
+                self.pool_lru.touch(self.block_table[seq][logical])
+            self.clock.charge(HBM, "write", n * per_tok)
+            self.stats["pool_appends"] += n
 
     def alloc_prefill(self, seq: int, n_tokens: int):
         pinned = {seq}
@@ -370,6 +380,27 @@ class PagedKVCache(_TieredKV):
             return True
         pages_needed = -(-n_tokens // self.spec.page_tokens)
         return pages_needed + self._reserve_pages() <= len(self.free_pages)
+
+    def can_place_step(self, seqs: Sequence[int],
+                       n_tokens: Sequence[int]) -> bool:
+        """Conservative placement check for one fused step: every page the
+        batch will hold afterwards (chunk growth + faulting back any
+        spilled page of a batch sequence) must be coverable by free pages
+        plus pages spillable from sequences OUTSIDE the batch — because
+        ``prepare_step`` pins the whole batch while allocating."""
+        if not self._pooled:
+            return True
+        T = self.spec.page_tokens
+        batch = set(seqs)
+        needed = 0
+        for seq, n in zip(seqs, n_tokens):
+            table = self.block_table.get(seq, [])
+            resident = sum(1 for p in table if p >= 0)
+            target = -(-(self.seq_len.get(seq, 0) + max(int(n), 1)) // T)
+            needed += max(target, len(table)) - resident
+        spillable = sum(1 for owner, _ in self.phys_owner.values()
+                        if owner not in batch)
+        return needed <= len(self.free_pages) + spillable
 
     def _reserve_pages(self) -> int:
         """Pages the next decode step will claim: one per active sequence

@@ -5,6 +5,9 @@
   indirection (the paging design's on-device read path)
 * paged_attention_layers — the batched multi-layer form of the same kernel:
   the mirror-free serving decode entry point
+* paged_attention_ragged / paged_attention_layers_ragged — the ragged-query
+  forms: up to ``Qmax`` new-token queries per row, so decode rows and
+  prefill-chunk rows share one launch (the fused mixed-batch tick)
 * log_patch       — apply KV log records to page-shaped buffers (the logging
   design's on-device drain/patch path)
 
@@ -21,9 +24,24 @@ and the pooled serving decode path):
   page ``i`` to physical page ``table[b, i]``. Entries at or past
   ``ceil(lengths[b] / T)`` are dead: the kernels clamp them into range and
   skip their compute (and, on TPU, their DMA), so any padding value is safe.
-* **Ragged lengths** — ``lengths: (B,) int32`` is the only raggedness
-  carrier; token slots at or past ``lengths[b]`` inside the last live page
-  are masked. ``lengths[b] == 0`` rows produce exactly zero output.
+* **Ragged lengths** — ``lengths: (B,) int32`` carries the KV raggedness;
+  token slots at or past ``lengths[b]`` inside the last live page are
+  masked. ``lengths[b] == 0`` rows produce exactly zero output.
+* **Ragged queries** (the ``*_ragged`` entries) — ``q: (B, Qmax, H, D)``
+  holds each row's block of new-token queries, padded to a shared ``Qmax``;
+  ``q_lens: (B,) int32`` is the per-row query count (decode rows: 1,
+  prefill-chunk rows: up to ``chunk_tokens``). ``lengths[b]`` INCLUDES the
+  chunk: query ``i < q_lens[b]`` sits at absolute position
+  ``lengths[b] - q_lens[b] + i`` and attends causally to pool positions at
+  or before it — intra-chunk causal masking against the pool. Query slots
+  at or past ``q_lens[b]`` produce exactly zero; ``q_lens[b] == 0`` rows
+  (batch-width padding on the bucketing ladder) are skipped entirely and
+  produce exactly zero. ``q_len == 1`` is bit-for-bit the plain decode
+  entry (pinned by ``kernel_bench --smoke``).
+* **Bucketing ladder** — callers (the serving engine) pad batch width and
+  ``Qmax`` up to a power-of-two ladder so the jitted entries stop
+  recompiling per width; the padding rows/slots are masked by
+  ``q_lens``/``lengths`` as above.
 * **Ownership** — the device pool is owned by the KV engine
   (``repro.core.kvcache.PagedKVCache`` in pooled mode), which ties page
   alloc/free to its resident/LRU accounting; the FS tier never sees pool
@@ -38,9 +56,11 @@ in interpret mode on CPU; the TPU path is selected automatically on TPU
 backends.
 """
 from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.paged_attention.ops import (paged_attention,
-                                               paged_attention_layers)
+from repro.kernels.paged_attention.ops import (
+    paged_attention, paged_attention_layers, paged_attention_layers_ragged,
+    paged_attention_ragged)
 from repro.kernels.log_patch.ops import log_patch
 
 __all__ = ["flash_attention", "paged_attention", "paged_attention_layers",
+           "paged_attention_ragged", "paged_attention_layers_ragged",
            "log_patch"]

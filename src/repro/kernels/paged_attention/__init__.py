@@ -1,4 +1,6 @@
-from repro.kernels.paged_attention.ops import (paged_attention,
-                                               paged_attention_layers)
+from repro.kernels.paged_attention.ops import (
+    paged_attention, paged_attention_layers, paged_attention_layers_ragged,
+    paged_attention_ragged)
 
-__all__ = ["paged_attention", "paged_attention_layers"]
+__all__ = ["paged_attention", "paged_attention_layers",
+           "paged_attention_ragged", "paged_attention_layers_ragged"]

@@ -7,16 +7,29 @@ step DMAs exactly one page of K and V into VMEM — block-table indirection
 *inside* the kernel, the TPU analogue of NVPages' radix-tree → page pointer
 walk.
 
-Two entry points share the kernel body:
+Four entry points, three kernel bodies (the two ragged entries share one
+body parameterized by the grid's batch-axis offset):
 
-* ``paged_attention_pallas`` — one layer: grid (B, K, max_pages) over a
-  ``(P, T, K, D)`` pool.
+* ``paged_attention_pallas`` — one layer, one query token per row: grid
+  (B, K, max_pages) over a ``(P, T, K, D)`` pool.
 * ``paged_attention_layers_pallas`` — the serving stack's batched
   multi-layer form: grid (L, B, K, max_pages) over a device-resident
   ``(L, P, T, K, D)`` pool, one block table shared by every layer (pages
   are allocated per sequence, not per layer). This is the mirror-free
   decode entry: the scheduler hands the kernel the pool + block table and
   no dense per-request KV copy ever exists.
+* ``paged_attention_ragged_pallas`` / ``paged_attention_layers_ragged_pallas``
+  — the ragged-query extension (ISSUE 5): each row carries a block of up to
+  ``Qmax`` new-token queries (``q: (B, Qmax, H, D)``), with per-row
+  ``q_lens`` raggedness. Decode rows (``q_len == 1``) and prefill-chunk
+  rows (``q_len ≤ chunk``) attend in the SAME launch — the fused
+  mixed-batch tick. Query ``i`` of row ``b`` sits at absolute position
+  ``lengths[b] - q_lens[b] + i`` and attends causally to pool positions at
+  or before it (causal *within* the chunk against the page pool). Slots at
+  or past ``q_lens[b]`` produce exactly zero; ``q_lens[b] == 0`` rows
+  (batch-width padding) produce exactly zero and are skipped entirely.
+  With ``q_len == 1`` the math reduces bit-for-bit to the plain decode
+  entries (the CI smoke gate pins this).
 
 Online-softmax state lives in VMEM scratch across the page axis. Pages past
 ``lengths[b]`` are skipped with ``pl.when`` (no DMA cost on TPU since their
@@ -202,3 +215,167 @@ def paged_attention_layers_pallas(q, pool_k, pool_v, block_table, lengths, *,
         interpret=interpret,
     )(table, lengths.astype(jnp.int32), qg, pool_k, pool_v)
     return out.reshape(L, B, H, D)
+
+
+# ---------------------------------------------------------------------------
+# Ragged-query entries (fused mixed-batch ticks, ISSUE 5)
+# ---------------------------------------------------------------------------
+def _ragged_softmax_step(s, m_ref, l_ref, acc_ref, v):
+    """One online-softmax update over a (QG, T) score block whose rows past
+    ``q_len`` (query padding) are fully masked. Masked probabilities are
+    zeroed explicitly: a fully-masked row's running max stays NEG_INF and
+    ``exp(s - m)`` would otherwise evaluate to exp(0) = 1 garbage."""
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    pr = jnp.where(s > NEG_INF * 0.5, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(pr, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        pr, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+
+def _pa_ragged_kernel(table_ref, len_ref, qlen_ref, q_ref, k_ref, v_ref,
+                      o_ref, m_ref, l_ref, acc_ref, *, scale: float,
+                      page_tokens: int, group: int, batch_axis: int):
+    """Shared ragged-query kernel body: the single-layer entry runs it with
+    ``batch_axis=0`` over grid (B, K, MP), the multi-layer entry with
+    ``batch_axis=1`` over grid (L, B, K, MP) — the layer axis only shifts
+    the program ids and adds a leading 1 to every block, which the
+    reshapes below collapse."""
+    b = pl.program_id(batch_axis)
+    p = pl.program_id(batch_axis + 2)
+    last_p = pl.num_programs(batch_axis + 2) - 1
+    length = len_ref[b]
+    q_len = qlen_ref[b]
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    live = ((p * page_tokens) < length) & (q_len > 0)
+
+    @pl.when(live)
+    def _compute():
+        D = acc_ref.shape[-1]
+        q = q_ref[...].reshape(acc_ref.shape).astype(jnp.float32)  # (QG, D)
+        k = k_ref[...].reshape(page_tokens, D).astype(jnp.float32)
+        v = v_ref[...].reshape(page_tokens, D).astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = p * page_tokens + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        qi = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+        # query i sits at absolute position length - q_len + i: causal
+        # within the chunk against the pool; padding query slots masked out
+        allow = (pos <= (length - q_len + qi)) & (qi < q_len)
+        s = jnp.where(allow, s, NEG_INF)                     # (QG, T)
+        _ragged_softmax_step(s, m_ref, l_ref, acc_ref, v)
+
+    @pl.when(p == last_p)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = out.astype(o_ref.dtype).reshape(o_ref.shape)
+
+
+def paged_attention_ragged_pallas(q, pool_k, pool_v, block_table, lengths,
+                                  q_lens, *, scale: float | None = None,
+                                  interpret: bool = False):
+    """Ragged-query single-layer entry: q (B, Qmax, H, D); pool_k/v
+    (P, T, K, D); block_table (B, MP); lengths/q_lens (B,)."""
+    B, Qm, H, D = q.shape
+    P, T, K, _ = pool_k.shape
+    MP = block_table.shape[1]
+    G = H // K
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    # (B, K, Qmax*G, D): one contiguous query block per (row, kv-head)
+    qg = q.reshape(B, Qm, K, G, D).transpose(0, 2, 1, 3, 4).reshape(
+        B, K, Qm * G, D)
+    table = jnp.clip(block_table, 0, P - 1).astype(jnp.int32)
+
+    kernel = functools.partial(_pa_ragged_kernel, scale=scale,
+                               page_tokens=T, group=G, batch_axis=0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, K, MP),
+        in_specs=[
+            pl.BlockSpec((1, 1, Qm * G, D),
+                         lambda b, k, p, tbl, ln, ql: (b, k, 0, 0)),
+            pl.BlockSpec((1, T, 1, D),
+                         lambda b, k, p, tbl, ln, ql: (tbl[b, p], 0, k, 0)),
+            pl.BlockSpec((1, T, 1, D),
+                         lambda b, k, p, tbl, ln, ql: (tbl[b, p], 0, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Qm * G, D),
+                               lambda b, k, p, tbl, ln, ql: (b, k, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Qm * G, 1), jnp.float32),
+            pltpu.VMEM((Qm * G, 1), jnp.float32),
+            pltpu.VMEM((Qm * G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, Qm * G, D), q.dtype),
+        interpret=interpret,
+    )(table, lengths.astype(jnp.int32), q_lens.astype(jnp.int32),
+      qg, pool_k, pool_v)
+    return out.reshape(B, K, Qm, G, D).transpose(0, 2, 1, 3, 4).reshape(
+        B, Qm, H, D)
+
+
+def paged_attention_layers_ragged_pallas(q, pool_k, pool_v, block_table,
+                                         lengths, q_lens, *,
+                                         scale: float | None = None,
+                                         interpret: bool = False):
+    """Ragged-query batched multi-layer entry — the fused mixed-batch tick:
+    q (L, B, Qmax, H, D); pool_k/v (L, P, T, K, D); block_table (B, MP);
+    lengths/q_lens (B,) shared by every layer."""
+    L, B, Qm, H, D = q.shape
+    _, P, T, K, _ = pool_k.shape
+    MP = block_table.shape[1]
+    G = H // K
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(L, B, Qm, K, G, D).transpose(0, 1, 3, 2, 4, 5).reshape(
+        L, B, K, Qm * G, D)
+    table = jnp.clip(block_table, 0, P - 1).astype(jnp.int32)
+
+    kernel = functools.partial(_pa_ragged_kernel, scale=scale,
+                               page_tokens=T, group=G, batch_axis=1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(L, B, K, MP),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Qm * G, D),
+                         lambda l, b, k, p, tbl, ln, ql: (l, b, k, 0, 0)),
+            pl.BlockSpec((1, 1, T, 1, D),
+                         lambda l, b, k, p, tbl, ln, ql:
+                         (l, tbl[b, p], 0, k, 0)),
+            pl.BlockSpec((1, 1, T, 1, D),
+                         lambda l, b, k, p, tbl, ln, ql:
+                         (l, tbl[b, p], 0, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, Qm * G, D),
+                               lambda l, b, k, p, tbl, ln, ql:
+                               (l, b, k, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Qm * G, 1), jnp.float32),
+            pltpu.VMEM((Qm * G, 1), jnp.float32),
+            pltpu.VMEM((Qm * G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((L, B, K, Qm * G, D), q.dtype),
+        interpret=interpret,
+    )(table, lengths.astype(jnp.int32), q_lens.astype(jnp.int32),
+      qg, pool_k, pool_v)
+    return out.reshape(L, B, K, Qm, G, D).transpose(0, 1, 3, 2, 4, 5).reshape(
+        L, B, Qm, H, D)

@@ -4,6 +4,12 @@
 the serving stack's batched multi-layer entry point (one device-resident
 ``(L, P, T, K, D)`` pool, one ``(B, MP)`` block table shared across layers,
 ragged ``(B,)`` lengths) used by the mirror-free pooled decode path.
+
+``paged_attention_ragged`` / ``paged_attention_layers_ragged`` extend the
+same entries from one query token per row to a ragged ``(B, Qmax, H, D)``
+query block with per-row ``q_lens`` — the fused mixed-batch tick: decode
+rows (``q_len == 1``) and prefill-chunk rows share one kernel launch, with
+causal masking *within* the chunk against the page pool.
 """
 from __future__ import annotations
 
@@ -12,9 +18,11 @@ from functools import partial
 import jax
 
 from repro.kernels.paged_attention.kernel import (
-    paged_attention_layers_pallas, paged_attention_pallas)
+    paged_attention_layers_pallas, paged_attention_layers_ragged_pallas,
+    paged_attention_pallas, paged_attention_ragged_pallas)
 from repro.kernels.paged_attention.ref import (
-    paged_attention_layers_ref, paged_attention_ref)
+    paged_attention_layers_ragged_ref, paged_attention_layers_ref,
+    paged_attention_ragged_ref, paged_attention_ref)
 
 
 @partial(jax.jit, static_argnames=("scale", "force_pallas"))
@@ -48,3 +56,42 @@ def paged_attention_layers(q, pool_k, pool_v, block_table, lengths, *,
                                              interpret=True)
     return paged_attention_layers_ref(q, pool_k, pool_v, block_table,
                                       lengths, scale=scale)
+
+
+@partial(jax.jit, static_argnames=("scale", "force_pallas"))
+def paged_attention_ragged(q, pool_k, pool_v, block_table, lengths, q_lens,
+                           *, scale=None, force_pallas: bool = False):
+    """Ragged-query decode attention over a paged KV pool.
+
+    q: (B, Qmax, H, D); pool_k/v: (P, T, K, D); block_table: (B, MP);
+    lengths: (B,) valid pool tokens including the chunk; q_lens: (B,) valid
+    queries per row. Padding query slots and ``q_lens == 0`` rows return
+    exactly zero; ``q_lens == 1`` reduces to ``paged_attention``.
+    """
+    if jax.default_backend() == "tpu":
+        return paged_attention_ragged_pallas(q, pool_k, pool_v, block_table,
+                                             lengths, q_lens, scale=scale)
+    if force_pallas:
+        return paged_attention_ragged_pallas(q, pool_k, pool_v, block_table,
+                                             lengths, q_lens, scale=scale,
+                                             interpret=True)
+    return paged_attention_ragged_ref(q, pool_k, pool_v, block_table,
+                                      lengths, q_lens, scale=scale)
+
+
+@partial(jax.jit, static_argnames=("scale", "force_pallas"))
+def paged_attention_layers_ragged(q, pool_k, pool_v, block_table, lengths,
+                                  q_lens, *, scale=None,
+                                  force_pallas: bool = False):
+    """Batched multi-layer ragged-query attention — the fused mixed-batch
+    tick's one kernel launch. q: (L, B, Qmax, H, D); pool_k/v:
+    (L, P, T, K, D); block_table: (B, MP); lengths/q_lens: (B,)."""
+    if jax.default_backend() == "tpu":
+        return paged_attention_layers_ragged_pallas(
+            q, pool_k, pool_v, block_table, lengths, q_lens, scale=scale)
+    if force_pallas:
+        return paged_attention_layers_ragged_pallas(
+            q, pool_k, pool_v, block_table, lengths, q_lens, scale=scale,
+            interpret=True)
+    return paged_attention_layers_ragged_ref(q, pool_k, pool_v, block_table,
+                                             lengths, q_lens, scale=scale)

@@ -44,3 +44,51 @@ def paged_attention_layers_ref(q, pool_k, pool_v, block_table, lengths, *,
         return paged_attention_ref(ql, pkl, pvl, block_table, lengths,
                                    scale=scale)
     return jax.vmap(one_layer)(q, pool_k, pool_v)
+
+
+def paged_attention_ragged_ref(q, pool_k, pool_v, block_table, lengths,
+                               q_lens, *, scale: float | None = None):
+    """Ragged-query oracle (fused mixed-batch ticks).
+
+    q:           (B, Qmax, H, D)     up to Qmax new-token queries per row
+    pool_k/v:    (P, T, K, D)        physical pages of T tokens
+    block_table: (B, MaxPages) int32 logical→physical page mapping
+    lengths:     (B,) int32          valid pool tokens INCLUDING the chunk
+    q_lens:      (B,) int32          valid queries per row (decode: 1)
+    Query ``i`` of row ``b`` sits at absolute position
+    ``lengths[b] - q_lens[b] + i`` and attends causally to pool positions
+    at or before it. Slots at or past ``q_lens[b]`` (and whole rows with
+    ``q_lens[b] == 0``) return exactly zero. Returns (B, Qmax, H, D).
+    """
+    B, Qm, H, D = q.shape
+    P, T, K, _ = pool_k.shape
+    G = H // K
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    table = jnp.clip(block_table, 0, P - 1)
+    k = pool_k[table].reshape(B, -1, K, D)
+    v = pool_v[table].reshape(B, -1, K, D)
+    S = k.shape[1]
+    qg = q.reshape(B, Qm, K, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k.astype(jnp.float32)) * scale
+    qpos = (lengths - q_lens)[:, None] + jnp.arange(Qm)[None, :]   # (B, Qm)
+    qvalid = jnp.arange(Qm)[None, :] < q_lens[:, None]             # (B, Qm)
+    allow = (jnp.arange(S)[None, None, :] <= qpos[:, :, None]) \
+        & qvalid[:, :, None]
+    s = jnp.where(allow[:, None, None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p, v.astype(jnp.float32))
+    out = jnp.where((qvalid & (lengths > 0)[:, None])
+                    [:, :, None, None, None], out, 0.0)
+    return out.reshape(B, Qm, H, D).astype(q.dtype)
+
+
+def paged_attention_layers_ragged_ref(q, pool_k, pool_v, block_table,
+                                      lengths, q_lens, *,
+                                      scale: float | None = None):
+    """Multi-layer ragged oracle: q (L,B,Qmax,H,D); pool_k/v (L,P,T,K,D);
+    one block table + lengths + q_lens shared by every layer."""
+    def one_layer(ql, pkl, pvl):
+        return paged_attention_ragged_ref(ql, pkl, pvl, block_table,
+                                          lengths, q_lens, scale=scale)
+    return jax.vmap(one_layer)(q, pool_k, pool_v)

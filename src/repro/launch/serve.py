@@ -62,6 +62,10 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk-tokens", type=int, default=None,
                     help="split prompts longer than this across ticks "
                          "(default: max-batch-tokens)")
+    ap.add_argument("--no-fuse", dest="fuse_ticks", action="store_false",
+                    help="disable fused mixed-batch ticks: prefill chunks "
+                         "run at batch=1 through the decode path (the "
+                         "pre-fusion baseline)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -78,7 +82,8 @@ def main(argv=None):
         max_batch_seqs=args.max_batch_seqs,
         max_batch_tokens=args.max_batch_tokens,
         paged_decode=args.paged_decode,
-        prefill_chunk_tokens=args.prefill_chunk_tokens))
+        prefill_chunk_tokens=args.prefill_chunk_tokens,
+        fuse_ticks=args.fuse_ticks))
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(rid=i,
@@ -94,7 +99,8 @@ def main(argv=None):
         print(f"req {r.rid}: generated {len(r.generated)} tokens "
               f"{r.generated[:8]}...")
     mode = ("sequential" if args.sequential else
-            "batched+pooled" if engine.pooled else "batched+mirror")
+            ("batched+pooled" if engine.pooled else "batched+mirror")
+            + ("+fused" if engine.fused else ""))
     print(f"tiered-kv[{args.design}] ({mode}) stats: {engine.stats()}")
 
 

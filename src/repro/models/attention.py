@@ -307,6 +307,38 @@ def attn_decode(params, cfg, x, cache_k, cache_v, positions):
     return out, cache_k, cache_v
 
 
+def attn_decode_ragged(params, cfg, x, cache_k, cache_v, ctx_lens, q_lens):
+    """Ragged multi-token decode over the dense cache (the fused mixed
+    -batch tick's mirrored twin). x: (B, Qmax, d); row ``b`` appends
+    ``q_lens[b]`` new tokens at positions ``ctx_lens[b] + i`` and each
+    attends causally to everything at or before it. Padding slots
+    (``i >= q_lens[b]``) write nothing (scatter-dropped) and their outputs
+    are garbage the caller must ignore. With ``q_len == 1`` everywhere this
+    is ``attn_decode`` exactly (same masks, same einsums).
+
+    Returns (out, new_cache_k, new_cache_v).
+    """
+    B, Qm, _ = x.shape
+    K, H, D = cfg.num_kv_heads, cfg.num_heads, cfg.head_dim
+    positions = ctx_lens[:, None] + jnp.arange(Qm, dtype=jnp.int32)[None, :]
+    q, k, v = _project_qkv(params, cfg, x, positions, rope=True)
+    T = cache_k.shape[1]
+    valid = jnp.arange(Qm)[None, :] < q_lens[:, None]
+    # padding slots scatter out of bounds and are dropped
+    write_pos = jnp.where(valid, positions, T)
+    b_idx = jnp.arange(B)[:, None]
+    cache_k = cache_k.at[b_idx, write_pos].set(
+        k.astype(cache_k.dtype), mode="drop")
+    cache_v = cache_v.at[b_idx, write_pos].set(
+        v.astype(cache_v.dtype), mode="drop")
+    kv_pos = jnp.arange(T, dtype=jnp.int32)
+    out = full_attention(q, cache_k, cache_v, scale=1.0 / math.sqrt(D),
+                         q_positions=positions, kv_positions=kv_pos,
+                         causal=True)
+    out = out.reshape(B, Qm, H * D) @ params["wo"]
+    return out, cache_k, cache_v
+
+
 def attn_decode_paged(params, cfg, x, pool_k, pool_v, block_table,
                       positions):
     """Single-step decode directly over a paged KV pool (mirror-free path).
@@ -337,6 +369,43 @@ def attn_decode_paged(params, cfg, x, pool_k, pool_v, block_table,
     out = paged_attention(q.reshape(B, H, D), pool_k, pool_v, block_table,
                           positions + 1, scale=1.0 / math.sqrt(D))
     out = out.reshape(B, 1, H * D) @ params["wo"]
+    return out, pool_k, pool_v
+
+
+def attn_step_paged_ragged(params, cfg, x, pool_k, pool_v, block_table,
+                           ctx_lens, q_lens):
+    """Ragged multi-token step over one layer's slice of the paged KV pool
+    — the fused mixed-batch tick's attention: decode rows (``q_len == 1``)
+    and prefill-chunk rows (``q_len ≤ chunk``) share one launch.
+
+    x: (B, Qmax, d_model); ctx_lens: (B,) tokens already in the pool (the
+    chunk's start position); q_lens: (B,) valid new tokens per row. Each
+    row's new K/V is scattered into its page slots on device (padding
+    slots, including whole ``q_len == 0`` bucket-ladder rows, target an
+    out-of-range page and are dropped — they can never touch another
+    sequence's pages) and attention runs the ``paged_attention_ragged``
+    kernel with intra-chunk causal masking against the pool.
+
+    Returns (out, new_pool_k, new_pool_v).
+    """
+    from repro.kernels.paged_attention import paged_attention_ragged
+
+    B, Qm, _ = x.shape
+    K, H, D = cfg.num_kv_heads, cfg.num_heads, cfg.head_dim
+    positions = ctx_lens[:, None] + jnp.arange(Qm, dtype=jnp.int32)[None, :]
+    q, k, v = _project_qkv(params, cfg, x, positions, rope=True)
+    P, T = pool_k.shape[0], pool_k.shape[1]
+    valid = jnp.arange(Qm)[None, :] < q_lens[:, None]
+    logical = jnp.clip(positions // T, 0, block_table.shape[1] - 1)
+    phys = jnp.take_along_axis(block_table, logical, axis=1)       # (B, Qm)
+    phys = jnp.where(valid, phys, P)               # out of range → dropped
+    slot = positions % T
+    pool_k = pool_k.at[phys, slot].set(k.astype(pool_k.dtype), mode="drop")
+    pool_v = pool_v.at[phys, slot].set(v.astype(pool_v.dtype), mode="drop")
+    out = paged_attention_ragged(
+        q.reshape(B, Qm, H, D), pool_k, pool_v, block_table,
+        ctx_lens + q_lens, q_lens, scale=1.0 / math.sqrt(D))
+    out = out.reshape(B, Qm, H * D) @ params["wo"]
     return out, pool_k, pool_v
 
 

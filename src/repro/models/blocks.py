@@ -104,6 +104,34 @@ def decode_paged_block(params, cfg, h, pool_k, pool_v, block_table,
     return h + rs * f, (pool_k, pool_v)
 
 
+def step_paged_ragged_block(params, cfg, h, pool_k, pool_v, block_table,
+                            ctx_lens, q_lens):
+    """Ragged multi-token block over one layer's pool slice (the fused
+    mixed-batch tick; dense GQA attention only)."""
+    rs = cfg.residual_scale
+    x = rmsnorm(params["ln_attn"], h, cfg.norm_eps)
+    a, pool_k, pool_v = attn_mod.attn_step_paged_ragged(
+        params["attn"], cfg, x, pool_k, pool_v, block_table, ctx_lens,
+        q_lens)
+    h = h + rs * a
+    x = rmsnorm(params["ln_ffn"], h, cfg.norm_eps)
+    f = apply_ffn(params["ffn"], x, cfg.ffn_activation)
+    return h + rs * f, (pool_k, pool_v)
+
+
+def step_ragged_block(params, cfg, h, cache, ctx_lens, q_lens):
+    """Ragged multi-token block over the dense cache (the fused tick's
+    mirrored twin). cache: (cache_k, cache_v) for this layer."""
+    rs = cfg.residual_scale
+    x = rmsnorm(params["ln_attn"], h, cfg.norm_eps)
+    a, c0, c1 = attn_mod.attn_decode_ragged(params["attn"], cfg, x, cache[0],
+                                            cache[1], ctx_lens, q_lens)
+    h = h + rs * a
+    x = rmsnorm(params["ln_ffn"], h, cfg.norm_eps)
+    f = apply_ffn(params["ffn"], x, cfg.ffn_activation)
+    return h + rs * f, (c0, c1)
+
+
 # ---------------------------------------------------------------------------
 # Encoder block (bidirectional) and enc-dec decoder block (w/ cross-attn)
 # ---------------------------------------------------------------------------

@@ -456,6 +456,87 @@ class LM:
         logits = self._logits(params, h)
         return logits, new_cache
 
+    # ----------------------------------------------- fused ragged step (I5)
+    def supports_ragged_step(self) -> bool:
+        """True when this model can run a fused mixed-batch tick: a ragged
+        multi-token step where decode rows (1 new token) and prefill-chunk
+        rows (several) share one forward. Same gate as paged decode — the
+        dense-GQA stack with a plain (k, v) cache; other families keep the
+        per-chunk batch=1 fallback."""
+        return self.supports_paged_decode()
+
+    def step_paged_ragged(self, params, cache, tokens, ctx_lens, q_lens):
+        """One fused mixed-batch step over the device-resident paged pool.
+
+        tokens: (B, Qmax) int32 — row ``b``'s ``q_lens[b]`` new tokens
+        (decode rows hold 1, prefill-chunk rows up to the chunk budget),
+        padded to the bucketing ladder's Qmax; ctx_lens: (B,) tokens already
+        in the pool per row; q_lens: (B,) with 0 marking batch-width padding
+        rows (they scatter nothing and their outputs are garbage to
+        discard). cache: ``pool_k``/``pool_v`` ``(L, P, T, K, D)`` +
+        ``block_table (B, MP)``. Returns logits for every query slot
+        ``(B, Qmax, V)`` — callers read slot ``q_lens[b] - 1`` — and the
+        updated pool cache with ``pos = ctx_lens + q_lens``.
+        """
+        if not self.supports_ragged_step():
+            raise ValueError(
+                f"ragged paged step supports the dense-GQA family only; got "
+                f"family={self.cfg.family!r} mla={self.cfg.mla is not None} "
+                f"kv_cache_dtype={self.kv_cache_dtype!r}")
+        cfg = self.cfg
+        params = jax.tree.map(
+            lambda a: a.astype(self.compute_dtype)
+            if a.dtype in (jnp.float32, jnp.bfloat16) and a.ndim >= 1 else a,
+            params)
+        h = self._embed_tokens(params, tokens)
+        table = cache["block_table"]
+
+        def body(carry, xs):
+            lp, pk, pv = xs
+            hh, (npk, npv) = B.step_paged_ragged_block(
+                lp, cfg, carry, pk, pv, table, ctx_lens, q_lens)
+            return hh, (npk, npv)
+        h, (npk, npv) = jax.lax.scan(
+            body, h, (params["blocks"], cache["pool_k"], cache["pool_v"]),
+            unroll=self.scan_unroll)
+        new_cache = {"pos": ctx_lens + q_lens, "pool_k": npk, "pool_v": npv,
+                     "block_table": table}
+        h = rmsnorm(params["final_ln"], h, cfg.norm_eps)
+        logits = self._logits(params, h)
+        return logits, new_cache
+
+    def step_ragged(self, params, cache, tokens, ctx_lens, q_lens):
+        """The fused mixed-batch step's mirrored twin: a ragged multi-token
+        step over the dense padded cache (``k``/``v`` ``(L, B, T, K, D)``).
+        Same contract as :meth:`step_paged_ragged`; with every
+        ``q_len == 1`` this is ``decode_step`` exactly."""
+        if not self.supports_ragged_step():
+            raise ValueError(
+                f"ragged step supports the dense-GQA family only; got "
+                f"family={self.cfg.family!r} mla={self.cfg.mla is not None} "
+                f"kv_cache_dtype={self.kv_cache_dtype!r}")
+        cfg = self.cfg
+        params = jax.tree.map(
+            lambda a: a.astype(self.compute_dtype)
+            if a.dtype in (jnp.float32, jnp.bfloat16) and a.ndim >= 1 else a,
+            params)
+        h = self._embed_tokens(params, tokens)
+
+        def body(carry, xs):
+            lp, k_, v_ = xs
+            hh, (nk, nv) = B.step_ragged_block(lp, cfg, carry, (k_, v_),
+                                               ctx_lens, q_lens)
+            return hh, (nk, nv)
+        h, (nk, nv) = jax.lax.scan(
+            body, h, (params["blocks"], cache["k"], cache["v"]),
+            unroll=self.scan_unroll)
+        new_cache = dict(cache)
+        new_cache["pos"] = ctx_lens + q_lens
+        new_cache["k"], new_cache["v"] = nk, nv
+        h = rmsnorm(params["final_ln"], h, cfg.norm_eps)
+        logits = self._logits(params, h)
+        return logits, new_cache
+
     # ---------------------------------------------------------- decode step
     def decode_step(self, params, cache, tokens, positions):
         """tokens: (B, 1) int32; positions: (B,) int32 write/query index."""

@@ -71,6 +71,18 @@ def row_to_device(row: dict) -> dict:
     return {k: jnp.asarray(v) for k, v in row.items()}
 
 
+def bucket_pow2(n: int) -> int:
+    """Smallest power of two ≥ n — the jit-shape ladder (pad + mask).
+
+    The serving engine pads batch width and Qmax up to this ladder before
+    every fused/batched step so the jitted model entries see a small fixed
+    set of shapes instead of recompiling per width; padding rows carry
+    ``q_len = 0`` (masked by the kernels) or are dummy dense rows whose
+    outputs are discarded.
+    """
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
 def gather_new_kv(cache_k, cache_v, positions):
     """On-device gather of the tokens a decode step just wrote.
 
@@ -85,6 +97,26 @@ def gather_new_kv(cache_k, cache_v, positions):
     v = cache_v[:, b_idx, positions]
     return jnp.stack([k, v], axis=2).transpose(1, 0, 2, 3, 4).astype(
         jnp.float16)                          # (B, L, 2, K, D)
+
+
+def gather_new_kv_ragged(cache_k, cache_v, ctx_lens, qmax: int):
+    """On-device gather of the tokens a fused ragged step just wrote.
+
+    cache_k/cache_v: ``(L, B, T, K, D)``; ctx_lens: ``(B,)`` — each row's
+    chunk started there, so its new tokens sit at ``ctx_lens[b] + i`` for
+    ``i < qmax`` (slots past the row's ``q_len`` hold padding the caller
+    slices off host-side). Returns ``(B, qmax, L, 2, K, D)`` float16, still
+    on device: one transfer mirrors a whole mixed tick — decode rows and
+    prefill-chunk rows alike.
+    """
+    B = ctx_lens.shape[0]
+    pos = ctx_lens[:, None] + jnp.arange(qmax, dtype=jnp.int32)[None, :]
+    pos = jnp.minimum(pos, cache_k.shape[2] - 1)     # clamp padding slots
+    b_idx = jnp.arange(B)[:, None]
+    k = cache_k[:, b_idx, pos]                       # (L, B, qmax, K, D)
+    v = cache_v[:, b_idx, pos]
+    return jnp.stack([k, v], axis=2).transpose(1, 3, 0, 2, 4, 5).astype(
+        jnp.float16)                                 # (B, qmax, L, 2, K, D)
 
 
 def gather_prefill_kv(cache_k, cache_v, n: int):

@@ -35,6 +35,22 @@ device→host copy at all: ``mirror_d2h_bytes`` stays **zero** on this path
 (pinned by test). Engines without a pool (``log``, ``kvhybrid``) and model
 families without a plain (k, v) cache fall back to the mirrored path
 transparently; ``ServeConfig.paged_decode`` forces either path.
+
+**Fused mixed-batch ticks (ISSUE 5).** The paper's batched-submission
+lesson, applied to the tick itself: instead of one batched decode launch
+plus N batch=1 prefill-chunk launches, every scheduler tick is exactly ONE
+ragged forward (:meth:`ServingEngine.step_batch`) — decode rows contribute
+one new token (``q_len = 1``), mid-prefill rows contribute their next
+chunk (``q_len ≤ chunk_tokens``), and the ``paged_attention_ragged``
+kernel (pooled) or the ragged dense step (mirrored) attends them all in
+the same launch with intra-chunk causal masking. Batch width and Qmax pad
+up a power-of-two bucketing ladder (padding rows carry ``q_len = 0`` and
+are masked end to end, including their pool scatters), so the jitted steps
+stop recompiling per width — ``step_compiles``/``step_cache_hits`` in
+``stats()`` pin it. ``ServeConfig.fuse_ticks=False`` keeps the
+batch=1-per-chunk baseline (``kvcache_bench``'s fused gate measures the
+gap), and model families without a ragged step (SSM/MLA/int8/MoE caches)
+fall back to it transparently.
 """
 from __future__ import annotations
 
@@ -74,6 +90,15 @@ class ServeConfig:
     # chunked prefill: prompts longer than this admit chunk by chunk across
     # ticks (None → max_batch_tokens; chunking off when both are None)
     prefill_chunk_tokens: Optional[int] = None
+    # fused mixed-batch ticks (ISSUE 5): every scheduler tick is ONE ragged
+    # forward over decode rows AND prefill-chunk rows together. False keeps
+    # the batch=1-per-chunk baseline (the --no-fuse comparison in
+    # kvcache_bench); models without a ragged step fall back automatically.
+    fuse_ticks: bool = True
+    # forward-progress guard: a row present in the running batch must
+    # advance (≥1 token or chunk) within this many consecutive running
+    # ticks, else the scheduler raises — the chunk-row starvation pin
+    progress_tick_limit: int = 4
 
     def resolved_spec(self) -> EngineSpec:
         """One EngineSpec no matter which knobs the caller used.
@@ -138,6 +163,22 @@ class ServingEngine:
                                         static_argnums=(2, 3))
         self.mirror_d2h_bytes = 0      # device→host mirror traffic (exact)
         self.sched_stats: dict = {}    # last generate()'s scheduler counters
+        # ---------------------------------------------- fused mixed-batch tick
+        # one ragged forward per tick (decode rows + prefill-chunk rows in
+        # the same launch); models without a ragged step (SSM/MLA/int8/MoE
+        # caches) keep the batch=1-per-chunk fallback transparently
+        self.fused = bool(cfg.fuse_ticks) and model.supports_ragged_step()
+        if self.fused:
+            self._step_ragged = jax.jit(model.step_ragged)
+            self._gather_new_kv_ragged = jax.jit(
+                batching.gather_new_kv_ragged, static_argnums=3)
+        # jit-shape ladder bookkeeping: every batched/fused step buckets its
+        # (path, batch-width, Qmax) to powers of two (pad + mask), and these
+        # counters pin that the jits stop recompiling per width
+        self.jit_stats = {"prefill_calls": 0, "step_calls": 0,
+                          "fused_steps": 0, "step_compiles": 0,
+                          "step_cache_hits": 0}
+        self._step_shapes: set = set()
         # ------------------------------------------- mirror-free pooled path
         self.max_pages = -(-cfg.max_len // cfg.page_tokens)
         pool_dtype = np.dtype(model.compute_dtype)
@@ -169,6 +210,7 @@ class ServingEngine:
             # path so pooled decode is numerically identical to it
             self.tiered.init_pool(dtype=pool_dtype)
             self._decode_paged = jax.jit(model.decode_step_paged)
+            self._step_paged_ragged = jax.jit(model.step_paged_ragged)
             self._scatter_prefill = jax.jit(batching.scatter_prefill_pages,
                                             static_argnums=5)
 
@@ -190,14 +232,48 @@ class ServingEngine:
     def mirror_decode_batch(self, rids: list, cache, positions) -> None:
         """Mirror one decode step's tokens for a whole running batch: one
         on-device gather, ONE device→host transfer of ``(B, L, 2, K, D)``
-        fp16, one batched ``append_many`` into the tiered engine."""
+        fp16, one batched ``append_many`` into the tiered engine. Bucket
+        -ladder padding rows (``positions`` may be longer than ``rids``)
+        are sliced off ON DEVICE before the transfer, so the byte
+        accounting stays exact: one fp16 token per real sequence."""
         if "k" not in cache or not rids:
             return
-        toks = np.asarray(self._gather_new_kv(
-            cache["k"], cache["v"], jnp.asarray(positions, jnp.int32)))
+        toks_dev = self._gather_new_kv(
+            cache["k"], cache["v"], jnp.asarray(positions, jnp.int32))
+        toks = np.asarray(toks_dev[:len(rids)])
         self.mirror_d2h_bytes += toks.nbytes
         self.tiered.append_many(
             [(rid, toks[i]) for i, rid in enumerate(rids)])
+
+    def _mirror_step_ragged(self, rids: list, cache, ctx, q_lens,
+                            qmax: int) -> None:
+        """Mirror one fused mixed tick's new tokens: ONE on-device ragged
+        gather, then at most TWO device→host transfers — the decode rows
+        (``q_len == 1``) as exactly one fp16 token each (the PR 3 byte
+        accounting, unchanged), and the chunk rows as one
+        ``(n_chunk, Qmax, ...)`` block whose only padding is each chunk's
+        own Qmax remainder. Per-row appends follow — a chunk row lands as
+        one multi-token append, so ``kvhybrid`` still routes it by size."""
+        if "k" not in cache or not rids:
+            return
+        toks_dev = self._gather_new_kv_ragged(
+            cache["k"], cache["v"], jnp.asarray(ctx, jnp.int32), qmax)
+        dec = [i for i, m in enumerate(q_lens) if m == 1]
+        chk = [i for i, m in enumerate(q_lens) if m > 1]
+        items = []
+        if dec:
+            toks1 = np.asarray(toks_dev[jnp.asarray(dec), 0])
+            self.mirror_d2h_bytes += toks1.nbytes  # (n_dec, L, 2, K, D)
+            items += [(rids[i], toks1[j]) for j, i in enumerate(dec)]
+        if chk:
+            toksn = np.asarray(toks_dev[jnp.asarray(chk)])
+            self.mirror_d2h_bytes += toksn.nbytes  # (n_chk, qmax, L, 2, K, D)
+            items += [(rids[i], toksn[j, :q_lens[i]].transpose(1, 2, 0, 3, 4))
+                      for j, i in enumerate(chk)]
+        # append in original row order (FIFO drain order is per-seq, but
+        # keep the schedule deterministic)
+        items.sort(key=lambda kv: rids.index(kv[0]))
+        self.tiered.append_many(items)
 
     def _mirror_prefill(self, rid: int, cache, n: int):
         """Mirror the whole prompt's KV as one batched append (sliced to the
@@ -217,6 +293,7 @@ class ServingEngine:
         row) for the scheduler to admit."""
         toks = req.prompt if n is None else req.prompt[:n]
         batch = {"tokens": jnp.asarray(toks[None, :])}
+        self.jit_stats["prefill_calls"] += 1
         logits, cache = self._prefill(self.params, batch)
         if self.pooled:
             cache = self._pool_admit(req.rid, cache, toks.shape[0])
@@ -238,49 +315,130 @@ class ServingEngine:
         self.tiered.commit_prefill(pool_k, pool_v, rid, n)
         return {"pos": cache["pos"]}
 
+    def _count_step(self, path: str, width: int, qmax: int) -> None:
+        """Track jitted-step shape reuse. The power-of-two bucketing ladder
+        makes ``(path, width, qmax)`` a small fixed set, so after warmup
+        every step is a cache hit — ``step_compiles`` stops growing with
+        batch width / chunk size (pinned by tests/test_scheduler.py)."""
+        self.jit_stats["step_calls"] += 1
+        key = (path, width, qmax)
+        if key in self._step_shapes:
+            self.jit_stats["step_cache_hits"] += 1
+        else:
+            self._step_shapes.add(key)
+            self.jit_stats["step_compiles"] += 1
+
     def decode_batch(self, rids: list, caches: list, tokens: list,
                      mirrored: bool):
-        """One batched decode step over per-sequence cache rows.
+        """One batched single-token decode step over per-sequence cache
+        rows (the unfused baseline's batched launch, and the only batched
+        path for model families without a ragged step).
 
         Mirror path: dense batched ``decode_step`` + one device→host token
-        transfer per sequence. Pooled path: ``decode_step_paged`` directly
-        over the engine's device page pool (block-table indirection inside
-        the kernel) — the engine's page accounting advances through
-        ``prepare_decode``/``commit_decode`` and nothing crosses the
-        device→host link. Returns (logits, new cache rows).
+        transfer per sequence, width-bucketed with dummy rows so
+        ``_decode`` stops recompiling per batch width. Pooled path: the
+        ragged step at ``q_len = 1`` — its masked scatter is what lets
+        bucket-ladder padding rows exist without ever touching the shared
+        device pool. Returns (logits, new cache rows).
         """
-        batch = batching.concat_rows(caches)
-        positions = batch["pos"]
-        tok_arr = jnp.asarray(tokens, jnp.int32)[:, None]
         if self.pooled:
-            tbl, lens = self.tiered.prepare_decode(rids, self.max_pages)
-            if not np.array_equal(lens, np.asarray(positions)):
+            logit_rows, rows = self.step_batch(
+                rids, caches, [np.asarray([t], np.int32) for t in tokens],
+                mirrored, fused=False)
+            return jnp.concatenate(logit_rows, axis=0), rows
+        B = len(caches)
+        pad = batching.bucket_pow2(B) - B
+        batch = batching.concat_rows(caches + [caches[0]] * pad)
+        positions = batch["pos"]
+        tok_arr = jnp.asarray(list(tokens) + [0] * pad, jnp.int32)[:, None]
+        self._count_step("decode", B + pad, 1)
+        logits, batch = self._decode(self.params, batch, tok_arr, positions)
+        self.mirror_decode_batch(rids if mirrored else [], batch,
+                                 np.asarray(positions))
+        return logits[:B], [batching.split_row(batch, i) for i in range(B)]
+
+    def can_step_fused(self, rids: list, n_tokens: list) -> bool:
+        """Can this tick's mixed batch be placed in one fused step?
+        Pooled engines answer through :meth:`KVCacheEngine.can_place_step`
+        (prepare_step pins the whole batch, so a tight pool may need a
+        preemption first — the scheduler's pre-step guard); the mirrored
+        path always fits."""
+        if not self.pooled:
+            return True
+        return self.tiered.can_place_step(rids, n_tokens)
+
+    def step_batch(self, rids: list, caches: list, tok_rows: list,
+                   mirrored: bool, fused: bool = True):
+        """ONE fused forward over a mixed ragged batch — the tentpole
+        launch: decode rows carry 1 new token, prefill-chunk rows up to
+        ``chunk_tokens``, and all of them attend in the same jitted step
+        (``model.step_paged_ragged`` over the device pool, or
+        ``model.step_ragged`` over the dense mirror). Batch width and Qmax
+        pad up the power-of-two ladder; padding rows ride with
+        ``q_len = 0`` and are masked end to end.
+
+        Returns (per-row logits at each row's LAST VALID slot — ``(1, 1,
+        V)`` each, what the next tick's argmax reads — and the new per-row
+        caches).
+        """
+        B = len(rids)
+        q_lens = [len(t) for t in tok_rows]
+        Bb = batching.bucket_pow2(B)
+        Qb = batching.bucket_pow2(max(q_lens))
+        tokens = np.zeros((Bb, Qb), np.int32)
+        for i, t in enumerate(tok_rows):
+            tokens[i, :len(t)] = t
+        qarr = np.zeros(Bb, np.int32)
+        qarr[:B] = q_lens
+        tok_j = jnp.asarray(tokens)
+        qlen_j = jnp.asarray(qarr)
+        if fused:       # the unfused pooled decode reuses this entry at
+            self.jit_stats["fused_steps"] += 1   # q_len=1; don't count it
+
+        if self.pooled:
+            tbl, ctx = self.tiered.prepare_step(rids, q_lens, self.max_pages)
+            model_pos = np.concatenate([np.asarray(c["pos"])
+                                        for c in caches])
+            if not np.array_equal(ctx, model_pos):
                 raise RuntimeError(
-                    f"pool/table drift: engine lengths {lens.tolist()} != "
-                    f"model positions {np.asarray(positions).tolist()}")
+                    f"pool/table drift: engine lengths {ctx.tolist()} != "
+                    f"model positions {model_pos.tolist()}")
+            tbl_p = np.zeros((Bb, self.max_pages), np.int32)
+            tbl_p[:B] = tbl
+            ctx_p = np.zeros(Bb, np.int32)
+            ctx_p[:B] = ctx
             pool_k, pool_v = self.tiered.pool_views()
-            cache = {"pos": positions, "pool_k": pool_k, "pool_v": pool_v,
-                     "block_table": jnp.asarray(tbl)}
-            logits, out = self._decode_paged(self.params, cache, tok_arr,
-                                             positions)
-            self.tiered.commit_decode(out["pool_k"], out["pool_v"], rids)
-            batch = {"pos": out["pos"]}
+            cache = {"pool_k": pool_k, "pool_v": pool_v,
+                     "block_table": jnp.asarray(tbl_p)}
+            self._count_step("pool", Bb, Qb)
+            logits, out = self._step_paged_ragged(
+                self.params, cache, tok_j, jnp.asarray(ctx_p), qlen_j)
+            self.tiered.commit_step(out["pool_k"], out["pool_v"], rids,
+                                    q_lens)
+            new_rows = [{"pos": out["pos"][i:i + 1]} for i in range(B)]
         else:
-            logits, batch = self._decode(self.params, batch, tok_arr,
-                                         positions)
-            self.mirror_decode_batch(rids if mirrored else [], batch,
-                                     np.asarray(positions))
-        return logits, [batching.split_row(batch, i)
-                        for i in range(len(caches))]
+            batch = batching.concat_rows(caches + [caches[0]] * (Bb - B))
+            ctx = batch["pos"]
+            self._count_step("mirror", Bb, Qb)
+            logits, nbatch = self._step_ragged(self.params, batch, tok_j,
+                                               ctx, qlen_j)
+            if mirrored:
+                self._mirror_step_ragged(rids, nbatch, ctx, q_lens, Qb)
+            new_rows = [batching.split_row(nbatch, i) for i in range(B)]
+        last = logits[jnp.arange(Bb), jnp.maximum(qlen_j - 1, 0)]  # (Bb, V)
+        return [last[i:i + 1, None, :] for i in range(B)], new_rows
 
     def extend_one(self, rid: int, cache, toks: np.ndarray, start: int,
                    mirrored: bool):
-        """Process ``toks`` additional prompt tokens for one admitted row
-        (chunked prefill): each token runs through the decode path at
-        batch=1, and the chunk's KV lands in the tiered engine as ONE
-        batched append (mirror path) or directly in its pool pages (pooled
-        path — per-token page allocation, still zero device→host bytes).
-        Returns (logits, cache) positioned after the chunk."""
+        """UNFUSED fallback (``fuse_ticks=False`` or a family without a
+        ragged step): process ``toks`` additional prompt tokens for one
+        admitted row, each token through the decode path at batch=1; the
+        chunk's KV lands in the tiered engine as ONE batched append
+        (mirror path) or directly in its pool pages (pooled path —
+        per-token page allocation, still zero device→host bytes). The
+        fused path replaces all of this with the chunk riding inside
+        :meth:`step_batch`. Returns (logits, cache) positioned after the
+        chunk."""
         logits = None
         if self.pooled:
             for t in toks:
@@ -288,6 +446,7 @@ class ServingEngine:
                 pc = {"pos": cache["pos"],
                       "block_table": jnp.asarray(tbl)}
                 pc["pool_k"], pc["pool_v"] = self.tiered.pool_views()
+                self._count_step("pool-chunk1", 1, 1)
                 logits, out = self._decode_paged(
                     self.params, pc, jnp.asarray([[int(t)]], jnp.int32),
                     cache["pos"])
@@ -296,6 +455,7 @@ class ServingEngine:
                 cache = {"pos": out["pos"]}
             return logits, cache
         for t in toks:
+            self._count_step("mirror-chunk1", 1, 1)
             logits, cache = self._decode(
                 self.params, cache, jnp.asarray([[int(t)]], jnp.int32),
                 cache["pos"])
@@ -338,4 +498,4 @@ class ServingEngine:
     def stats(self) -> dict:
         return {"sim_time_s": self.clock.now,
                 "mirror_d2h_bytes": self.mirror_d2h_bytes,
-                **self.sched_stats, **self.tiered.stats}
+                **self.jit_stats, **self.sched_stats, **self.tiered.stats}

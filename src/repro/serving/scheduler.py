@@ -5,10 +5,11 @@ appear under *concurrent mixed* load, so the engine must actually run
 concurrent mixed load. The scheduler keeps three queues:
 
 * **waiting** — submitted, not yet prefetched (FIFO by submission order);
-* **running** — sequences decoding together; every tick steps ALL of them
-  through a single batched ``decode_step`` and mirrors each new token into
-  the tiered :class:`~repro.core.engines.kv.KVCacheEngine` in one
-  ``append_many`` batch;
+* **running** — sequences decoding (or still prefilling in chunks)
+  together; every tick steps ALL of them through a single fused ragged
+  forward (see below) and mirrors the new tokens into the tiered
+  :class:`~repro.core.engines.kv.KVCacheEngine` in one ``append_many``
+  batch;
 * **preempted** — spilled under HBM pressure: the model cache row lives in
   host memory (exact numpy round-trip), the tiered KV on the disk tier via
   ``KVCacheEngine.preempt``; re-admission restores both.
@@ -33,11 +34,22 @@ deadlocks with work queued.
 the chunk budget (``prefill_chunk_tokens``, defaulting to
 ``max_batch_tokens``) admit with only their first chunk prefilled; the rest
 of the prompt rides along as the row's ``pending`` tail and is processed
-one chunk per tick — through the decode path at batch=1, its KV appended
-to the tiered engine per chunk (one batched append, or pool pages on the
-mirror-free path) — before the row joins batched decoding. Chunked rows
+one chunk per tick before the row joins batched decoding. Chunked rows
 preempt/restore like any other row, and the result is token-identical to
 one-shot prefill (locked down by test).
+
+**Fused mixed-batch ticks** (ISSUE 5): on ragged-capable models (the
+default) every tick is exactly ONE forward — decode rows argmax their
+pending logits and contribute one token, mid-prefill rows contribute their
+next chunk, and :meth:`ServingEngine.step_batch` runs them all in the same
+ragged launch (chunk rows no longer sit out the batched step or run at
+batch=1). A forward-progress guard backs this up: any row that sits in the
+running batch without advancing a token or chunk for
+``progress_tick_limit`` consecutive ticks raises — the chunk-row
+starvation class is a hard error, not a slowdown. ``fuse_ticks=False`` (or
+a model family without a ragged step) keeps the old structure: one chunk
+per mid-prefill row at batch=1 (``extend_one``), then one batched decode
+step over the fully-prefilled rows.
 
 **Preemption** triggers when ``KVCacheEngine.pressure()`` reaches 1.0 (the
 engine's HBM accounting has hit its budget). The victim comes from
@@ -80,6 +92,7 @@ class _Running:
     mirrored: bool                     # has KV in the tiered engine
     admitted_tick: int                 # last admission/restore tick (LRU)
     pending: Optional[np.ndarray] = None   # unprocessed prompt tail (chunked)
+    stalled_ticks: int = 0             # consecutive running ticks w/o advance
 
 
 @dataclass
@@ -92,6 +105,7 @@ class _Preempted:
     length: int
     mirrored: bool
     pending: Optional[np.ndarray] = None
+    stalled_ticks: int = 0
 
 
 @dataclass
@@ -103,7 +117,9 @@ class SchedulerStats:
     preempts: int = 0
     restores: int = 0
     peak_running: int = 0
-    prefill_chunks: int = 0            # chunk-continuation steps run
+    prefill_chunks: int = 0            # chunk-continuation rows stepped
+    fused_ticks: int = 0               # ticks run as ONE mixed ragged step
+    stalled_row_ticks: int = 0         # running rows that missed a tick (0!)
 
     def as_dict(self) -> dict:
         return {f"sched_{k}": v for k, v in self.__dict__.items()}
@@ -120,6 +136,8 @@ class Scheduler:
         self.chunk_tokens: Optional[int] = (cfg.prefill_chunk_tokens
                                             or cfg.max_batch_tokens)
         self.min_running = max(cfg.min_running, 1)
+        self.progress_tick_limit = max(getattr(cfg, "progress_tick_limit", 4),
+                                       1)
         self.waiting: deque["Request"] = deque(requests)
         self.running: list[_Running] = []
         self.preempted: deque[_Preempted] = deque()
@@ -152,8 +170,16 @@ class Scheduler:
 
     def _admit(self) -> None:
         # preempted sequences re-admit ahead of new arrivals (starvation
-        # guard: FIFO, and nothing can overtake them)
-        while self.preempted and self._has_room(self.preempted[0].length + 1):
+        # guard: FIFO, and nothing can overtake them). A row mid-prefill
+        # re-admits against its NEXT CHUNK, not one token — restoring a
+        # row whose chunk cannot be placed would bounce it straight back
+        # through the fused tick's tight-pool guard (restore/preempt churn
+        # with no progress)
+        while self.preempted and self._has_room(
+                self.preempted[0].length + (
+                    self._chunk_len(self.preempted[0].pending)
+                    if self.preempted[0].pending is not None
+                    and len(self.preempted[0].pending) else 1)):
             pre = self.preempted.popleft()
             if pre.mirrored:
                 self.engine.tiered.restore(pre.req.rid)
@@ -161,7 +187,7 @@ class Scheduler:
                 req=pre.req, cache=batching.row_to_device(pre.cache),
                 logits=jnp.asarray(pre.logits), length=pre.length,
                 mirrored=pre.mirrored, admitted_tick=self.stats.ticks,
-                pending=pre.pending))
+                pending=pre.pending, stalled_ticks=pre.stalled_ticks))
             self.stats.restores += 1
         while self.waiting and self._has_room(
                 self._first_chunk(len(self.waiting[0].prompt)) + 1):
@@ -178,17 +204,21 @@ class Scheduler:
                                       len(self.running))
 
     # ------------------------------------------------------------------ step
+    def _chunk_len(self, pending) -> int:
+        if self.chunk_tokens is None:
+            return len(pending)
+        return min(max(self.chunk_tokens, 1), len(pending))
+
     def _prefill_chunks(self) -> None:
-        """Advance every mid-prefill row by one chunk (through the decode
-        path at batch=1). Rows still holding a pending tail sit out the
-        batched decode step — their logits only become meaningful once the
-        whole prompt has been processed."""
+        """UNFUSED fallback: advance every mid-prefill row by one chunk
+        (through the decode path at batch=1). Rows still holding a pending
+        tail sit out the batched decode step — their logits only become
+        meaningful once the whole prompt has been processed."""
         for r in self.running:
             if r.pending is None or not len(r.pending):
                 r.pending = None
                 continue
-            m = (len(r.pending) if self.chunk_tokens is None
-                 else min(max(self.chunk_tokens, 1), len(r.pending)))
+            m = self._chunk_len(r.pending)
             r.logits, r.cache = self.engine.extend_one(
                 r.req.rid, r.cache, r.pending[:m], r.length, r.mirrored)
             r.length += m
@@ -196,10 +226,10 @@ class Scheduler:
             self.stats.prefill_chunks += 1
 
     def _step(self) -> None:
-        """One batched decode step over every fully-prefilled running
-        sequence: argmax each row's pending logits, decode all rows at once
-        through :meth:`ServingEngine.decode_batch` (dense mirror or pooled
-        paged-attention path), split the rows back out."""
+        """UNFUSED fallback: one batched decode step over every
+        fully-prefilled running sequence — argmax each row's pending
+        logits, decode all rows at once through
+        :meth:`ServingEngine.decode_batch`, split the rows back out."""
         rows = [r for r in self.running if r.pending is None]
         if not rows:
             return
@@ -216,6 +246,82 @@ class Scheduler:
             r.cache = caches[i]
             r.logits = logits[i:i + 1]
             r.length += 1
+
+    def _fused_step(self) -> None:
+        """The tentpole: ONE fused forward over the whole running batch —
+        decode rows argmax their pending logits and contribute 1 token,
+        mid-prefill rows contribute their next chunk (no more batch=1 chunk
+        launches), and everyone advances in the same ragged launch through
+        :meth:`ServingEngine.step_batch`. A chunk row whose tail empties
+        this tick comes out holding its prompt-final logits, exactly as
+        one-shot prefill would have left it."""
+        for r in self.running:
+            if r.pending is not None and not len(r.pending):
+                r.pending = None
+        # tight-pool guard: prepare_step pins every batch row while it
+        # allocates chunk pages, so a pool that cannot place this tick's
+        # chunks with the whole batch pinned must shed a row FIRST —
+        # graceful preemption instead of the pool-exhausted hard error.
+        # Placement beats the min_running floor here (an unplaceable step
+        # makes no progress at all); the liveness floor guarantees a lone
+        # row always places, so shedding to one row always terminates.
+        while len(self.running) > 1 and \
+                not self.engine.can_step_fused(
+                    [r.req.rid for r in self.running],
+                    [self._chunk_len(r.pending) if r.pending is not None
+                     else 1 for r in self.running]):
+            self._preempt_one()
+        rows, toks = [], []
+        for r in self.running:
+            if r.pending is not None:
+                m = self._chunk_len(r.pending)
+                rows.append(r)
+                toks.append(np.asarray(r.pending[:m], np.int32))
+                self.stats.prefill_chunks += 1
+            else:
+                nxt = int(jnp.argmax(r.logits[:, -1], -1)[0])
+                r.req.generated.append(nxt)
+                rows.append(r)
+                toks.append(np.asarray([nxt], np.int32))
+        logits, caches = self.engine.step_batch(
+            [r.req.rid for r in rows], [r.cache for r in rows], toks,
+            rows[0].mirrored)
+        self.stats.fused_ticks += 1
+        for i, r in enumerate(rows):
+            r.cache = caches[i]
+            r.logits = logits[i]
+            m = len(toks[i])
+            r.length += m
+            if r.pending is not None:
+                r.pending = r.pending[m:] if m < len(r.pending) else None
+
+    def _check_progress(self, lengths_before: dict) -> None:
+        """Forward-progress guard (the chunk-row starvation pin): every row
+        that sat in the running batch this tick must have advanced by at
+        least one token or chunk within ``progress_tick_limit`` consecutive
+        such ticks — a row holding a pending prefill tail must never
+        silently sit out ticks while pressure churns. Rows the tick
+        preempted BEFORE they could step (the tight-pool guard) count too:
+        restore→preempt churn without progress is the same starvation in a
+        different queue."""
+        def observe(row, rid, pending):
+            if row.length > lengths_before.get(rid, -1):
+                row.stalled_ticks = 0
+                return
+            row.stalled_ticks += 1
+            self.stats.stalled_row_ticks += 1
+            if row.stalled_ticks >= self.progress_tick_limit:
+                raise RuntimeError(
+                    f"scheduler starvation: request {rid} sat in the "
+                    f"running batch for {row.stalled_ticks} ticks without "
+                    f"advancing a token or prefill chunk (pending tail: "
+                    f"{0 if pending is None else len(pending)} tokens)")
+
+        for r in self.running:
+            observe(r, r.req.rid, r.pending)
+        for p in self.preempted:
+            if p.req.rid in lengths_before:    # was running at tick start
+                observe(p, p.req.rid, p.pending)
 
     def _finish_done(self) -> None:
         still = []
@@ -250,33 +356,46 @@ class Scheduler:
         return (self.max_batch_tokens is not None
                 and self._batch_tokens() > self.max_batch_tokens)
 
+    def _preempt_one(self) -> None:
+        victim = self._pick_victim()
+        self.running.remove(victim)
+        if victim.mirrored:
+            self.engine.tiered.preempt(victim.req.rid)
+        self.preempted.append(_Preempted(
+            req=victim.req, cache=batching.row_to_host(victim.cache),
+            logits=np.asarray(victim.logits), length=victim.length,
+            mirrored=victim.mirrored, pending=victim.pending,
+            stalled_ticks=victim.stalled_ticks))
+        self.stats.preempts += 1
+
     def _preempt_under_pressure(self) -> None:
         while self._over_budget() and \
                 len(self.running) > self.min_running:
-            victim = self._pick_victim()
-            self.running.remove(victim)
-            if victim.mirrored:
-                self.engine.tiered.preempt(victim.req.rid)
-            self.preempted.append(_Preempted(
-                req=victim.req, cache=batching.row_to_host(victim.cache),
-                logits=np.asarray(victim.logits), length=victim.length,
-                mirrored=victim.mirrored, pending=victim.pending))
-            self.stats.preempts += 1
+            self._preempt_one()
 
     # ------------------------------------------------------------------- run
     def tick(self) -> bool:
-        """One scheduling round: admit → prefill chunks → batched step →
-        retire finished → preempt under pressure. Returns False when all
-        work is done."""
+        """One scheduling round: admit → step → retire finished → preempt
+        under pressure → progress check. On the fused path (the default for
+        ragged-capable models) the step is ONE mixed ragged forward over
+        decode rows and prefill-chunk rows together; the unfused fallback
+        (``fuse_ticks=False`` or a family without a ragged step) keeps the
+        chunk-at-batch-1 then batched-decode structure. Returns False when
+        all work is done."""
         self._admit()
         self._finish_done()    # max_new=0 rows retire without decoding
         if not self.running:
             return bool(self.waiting or self.preempted)
         self.stats.ticks += 1
-        self._prefill_chunks()
-        self._step()
+        lengths_before = {r.req.rid: r.length for r in self.running}
+        if self.engine.fused:
+            self._fused_step()
+        else:
+            self._prefill_chunks()
+            self._step()
         self._finish_done()
         self._preempt_under_pressure()
+        self._check_progress(lengths_before)
         return bool(self.waiting or self.running or self.preempted)
 
     def run(self) -> None:

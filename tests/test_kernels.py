@@ -14,11 +14,14 @@ except ModuleNotFoundError:          # the shape/dtype sweeps always run
     given = None
 
 from repro.kernels import (flash_attention, log_patch, paged_attention,
-                           paged_attention_layers)
+                           paged_attention_layers,
+                           paged_attention_layers_ragged,
+                           paged_attention_ragged)
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.log_patch.ref import log_patch_ref
-from repro.kernels.paged_attention.ref import (paged_attention_layers_ref,
-                                               paged_attention_ref)
+from repro.kernels.paged_attention.ref import (
+    paged_attention_layers_ragged_ref, paged_attention_layers_ref,
+    paged_attention_ragged_ref, paged_attention_ref)
 
 _RTOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
@@ -135,6 +138,139 @@ def test_paged_attention_contract_edges(entry):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=1e-5, rtol=2e-5)
     assert np.all(empty == 0.0), "empty rows must produce exactly zero"
+
+
+# ----------------------------------------------------- ragged-query entries
+RAGGED_CASES = [
+    # (L, B, Qmax, H, K, D, page_tokens, pool_pages, max_pages)
+    (2, 3, 4, 8, 4, 64, 16, 24, 6),
+    (1, 1, 8, 4, 4, 128, 8, 8, 4),      # one long chunk row
+    (3, 2, 2, 16, 2, 64, 32, 10, 4),    # large GQA group
+    (2, 4, 1, 8, 8, 256, 16, 40, 4),    # Qmax=1 degenerate (pure decode)
+]
+
+
+def _ragged_inputs(case, dtype, seed=12):
+    L, B, Qm, H, K, D, T, P, MP = case
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((L, B, Qm, H, D)), dtype)
+    pk = jnp.asarray(rng.standard_normal((L, P, T, K, D)), dtype)
+    pv = jnp.asarray(rng.standard_normal((L, P, T, K, D)), dtype)
+    tbl = jnp.asarray(rng.integers(0, P, (B, MP)), jnp.int32)
+    qls = rng.integers(1, Qm + 1, B).astype(np.int32)
+    lens = (rng.integers(0, T * MP - Qm, B) + qls).astype(np.int32)
+    return q, pk, pv, tbl, jnp.asarray(lens), jnp.asarray(qls)
+
+
+@pytest.mark.parametrize("case", RAGGED_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_ragged_matches_oracle(case, dtype):
+    q, pk, pv, tbl, lens, qls = _ragged_inputs(case, dtype)
+    out = paged_attention_ragged(q[0], pk[0], pv[0], tbl, lens, qls,
+                                 force_pallas=True)
+    ref = paged_attention_ragged_ref(q[0], pk[0], pv[0], tbl, lens, qls)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=5 * _tol(dtype), rtol=2 * _tol(dtype))
+
+
+@pytest.mark.parametrize("case", RAGGED_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_layers_ragged_matches_oracle(case, dtype):
+    q, pk, pv, tbl, lens, qls = _ragged_inputs(case, dtype)
+    out = paged_attention_layers_ragged(q, pk, pv, tbl, lens, qls,
+                                        force_pallas=True)
+    ref = paged_attention_layers_ragged_ref(q, pk, pv, tbl, lens, qls)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=5 * _tol(dtype), rtol=2 * _tol(dtype))
+
+
+def test_ragged_qlen1_is_bitwise_decode_kernel():
+    """The fused entries at q_len=1 must be the plain decode entries BIT
+    FOR BIT — the contract that lets the batched decode launch route
+    through the ragged step without a numerics audit."""
+    L, B, H, K, D, T, P, MP = 2, 4, 8, 4, 64, 8, 24, 4
+    rng = np.random.default_rng(13)
+    q = jnp.asarray(rng.standard_normal((L, B, 1, H, D)), jnp.float32)
+    pk = jnp.asarray(rng.standard_normal((L, P, T, K, D)), jnp.float32)
+    pv = jnp.asarray(rng.standard_normal((L, P, T, K, D)), jnp.float32)
+    tbl = jnp.asarray(rng.integers(0, P, (B, MP)), jnp.int32)
+    lens = jnp.asarray([1, 7, T, T * MP - 2], jnp.int32)
+    qls = jnp.ones(B, jnp.int32)
+    r1 = paged_attention_ragged(q[0], pk[0], pv[0], tbl, lens, qls,
+                                force_pallas=True)
+    d1 = paged_attention(q[0, :, 0], pk[0], pv[0], tbl, lens,
+                         force_pallas=True)
+    assert np.array_equal(np.asarray(r1[:, 0]), np.asarray(d1))
+    rl = paged_attention_layers_ragged(q, pk, pv, tbl, lens, qls,
+                                       force_pallas=True)
+    dl = paged_attention_layers(q[:, :, 0], pk, pv, tbl, lens,
+                                force_pallas=True)
+    assert np.array_equal(np.asarray(rl[:, :, 0]), np.asarray(dl))
+
+
+@pytest.mark.parametrize("entry", ["single", "layers"])
+def test_ragged_contract_edges(entry):
+    """Ragged contract edges in one batch: a q_len=0 padding row (exactly
+    zero even with a nonzero length), a decode row, a chunk ending exactly
+    on a page boundary, and a ragged mid-page chunk — plus exact zeros in
+    every padding query slot."""
+    L, B, Qm, H, K, D, T, P, MP = 2, 4, 4, 8, 4, 64, 8, 24, 4
+    rng = np.random.default_rng(14)
+    q = jnp.asarray(rng.standard_normal((L, B, Qm, H, D)), jnp.float32)
+    pk = jnp.asarray(rng.standard_normal((L, P, T, K, D)), jnp.float32)
+    pv = jnp.asarray(rng.standard_normal((L, P, T, K, D)), jnp.float32)
+    tbl = jnp.asarray(rng.integers(0, P, (B, MP)), jnp.int32)
+    lens = jnp.asarray([6, 5, 2 * T, T * MP - 3], jnp.int32)
+    qls = jnp.asarray([0, 1, T // 2, 3], jnp.int32)
+    if entry == "single":
+        out = paged_attention_ragged(q[0], pk[0], pv[0], tbl, lens, qls,
+                                     force_pallas=True)
+        ref = paged_attention_ragged_ref(q[0], pk[0], pv[0], tbl, lens, qls)
+        o = np.asarray(out)[None]
+    else:
+        out = paged_attention_layers_ragged(q, pk, pv, tbl, lens, qls,
+                                            force_pallas=True)
+        ref = paged_attention_layers_ragged_ref(q, pk, pv, tbl, lens, qls)
+        o = np.asarray(out)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=2e-5)
+    for b in range(B):
+        assert np.all(o[:, b, int(qls[b]):] == 0.0), b
+
+
+def test_ragged_ignores_dead_pages():
+    """Poisoning pages and slots past each row's length must not change the
+    ragged output — per-query masking against the pool is exact."""
+    L, B, Qm, H, K, D, T, MP = 2, 2, 4, 4, 2, 64, 16, 4
+    P = B * MP
+    rng = np.random.default_rng(15)
+    lens = [7, 39]
+    qls = jnp.asarray([2, 4], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((L, B, Qm, H, D)), jnp.float32)
+    pk = np.asarray(rng.standard_normal((L, P, T, K, D)), np.float32)
+    pv = np.asarray(rng.standard_normal((L, P, T, K, D)), np.float32)
+    tbl = np.arange(P, dtype=np.int32).reshape(B, MP)
+    lens_arr = jnp.asarray(lens, jnp.int32)
+    out1 = paged_attention_layers_ragged(q, jnp.asarray(pk), jnp.asarray(pv),
+                                         jnp.asarray(tbl), lens_arr, qls,
+                                         force_pallas=True)
+    pk2, pv2 = pk.copy(), pv.copy()
+    for b in range(B):
+        for lp in range(MP):
+            phys = tbl[b, lp]
+            start = lp * T
+            if start >= lens[b]:
+                pk2[:, phys] = 1e6
+                pv2[:, phys] = -1e6
+            elif start + T > lens[b]:
+                pk2[:, phys, lens[b] - start:] = 1e6
+                pv2[:, phys, lens[b] - start:] = -1e6
+    out2 = paged_attention_layers_ragged(q, jnp.asarray(pk2),
+                                         jnp.asarray(pv2), jnp.asarray(tbl),
+                                         lens_arr, qls, force_pallas=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-5)
 
 
 def test_paged_attention_layers_ignores_dead_pages():

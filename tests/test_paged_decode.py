@@ -62,14 +62,16 @@ def _requests(cfg, seed=0, max_new=MAX_NEW):
 
 
 def _engine(lm, engine, *, hbm_bytes=64 << 20, paged_decode=None,
-            max_batch_tokens=None, chunk=None, max_batch_seqs=4):
+            max_batch_tokens=None, chunk=None, max_batch_seqs=4,
+            fuse=True):
     cfg, model, params = lm
     return ServingEngine(model, params, ServeConfig(
         max_len=MAX_LEN, page_tokens=PAGE_TOKENS,
         engine_spec=EngineSpec(engine=engine, kv_hbm_bytes=hbm_bytes,
                                kv_hot_window=8, drain_shards=2),
         max_batch_seqs=max_batch_seqs, max_batch_tokens=max_batch_tokens,
-        paged_decode=paged_decode, prefill_chunk_tokens=chunk))
+        paged_decode=paged_decode, prefill_chunk_tokens=chunk,
+        fuse_ticks=fuse))
 
 
 @pytest.fixture(scope="module")
@@ -207,6 +209,105 @@ def test_chunked_prefill_mirrors_one_append_per_chunk(lm):
     assert eng.sched_stats["sched_prefill_chunks"] == 2
 
 
+# ------------------------------------------------------ fused mixed-batch ticks
+@pytest.mark.parametrize("engine_name", list_kv_engines())
+@pytest.mark.parametrize("chunk", (None, 3, 5))
+def test_fused_ticks_match_sequential_per_engine(lm, reference, engine_name,
+                                                 chunk):
+    """The tentpole's acceptance sweep: fused mixed-batch ticks (decode
+    rows + prefill-chunk rows in ONE forward) are token-identical to the
+    sequential mirrored reference for every registered engine × chunk
+    schedule."""
+    cfg, _, _ = lm
+    reqs = _requests(cfg)
+    eng = _engine(lm, engine_name, chunk=chunk, max_batch_seqs=3)
+    eng.generate(reqs)
+    assert eng.fused
+    for r in reqs:
+        assert r.generated == reference[r.rid], (engine_name, chunk)
+    if chunk is not None:
+        assert eng.sched_stats["sched_prefill_chunks"] >= 1
+
+
+def test_one_fused_forward_per_tick_on_pooled_path(lm, reference):
+    """THE launch pin: with chunked prefill active on the pooled path,
+    every tick is exactly ONE model step — no batch=1 chunk launches ride
+    along (step_calls == ticks == fused_ticks)."""
+    cfg, _, _ = lm
+    reqs = _requests(cfg)
+    eng = _engine(lm, "paged", chunk=5)
+    assert eng.pooled and eng.fused
+    eng.generate(reqs)
+    s = eng.stats()
+    assert s["sched_prefill_chunks"] >= 2          # chunking really happened
+    assert s["step_calls"] == s["sched_ticks"] == s["sched_fused_ticks"]
+    assert s["mirror_d2h_bytes"] == 0
+    for r in reqs:
+        assert r.generated == reference[r.rid]
+
+
+def test_unfused_baseline_matches_and_launches_more(lm, reference):
+    """fuse_ticks=False keeps the batch=1-per-chunk baseline: same tokens,
+    strictly more model launches per tick (what kvcache_bench's fused gate
+    measures)."""
+    cfg, _, _ = lm
+    fused_calls = {}
+    for fuse in (True, False):
+        reqs = _requests(cfg)
+        eng = _engine(lm, "paged", chunk=3, fuse=fuse)
+        eng.generate(reqs)
+        fused_calls[fuse] = eng.stats()["step_calls"]
+        assert eng.fused is fuse
+        for r in reqs:
+            assert r.generated == reference[r.rid], fuse
+    assert fused_calls[False] > fused_calls[True]
+
+
+def test_fused_mirror_gathers_once_per_tick(lm, reference):
+    """On the mirrored fused path a chunked tick still moves its tokens in
+    ONE device→host transfer (the ragged gather), and the engine sees each
+    chunk as one multi-token append."""
+    cfg, _, _ = lm
+    reqs = [_requests(cfg)[1]]                    # the 12-token prompt
+    eng = _engine(lm, "log", chunk=5, max_batch_seqs=1)
+    eng.generate(reqs)
+    s = eng.stats()
+    assert s["sched_prefill_chunks"] == 2
+    assert s["step_calls"] == s["sched_ticks"]
+    assert reqs[0].generated == reference[1]
+
+
+def test_fused_tick_survives_tight_pool_with_chunks(lm):
+    """Review regression: prepare_step pins the WHOLE batch while
+    allocating chunk pages, so a pool at the liveness floor could hit the
+    'paged pool exhausted' hard error where the unfused path survived by
+    thrashing. The scheduler's pre-step guard must preempt a row and
+    continue — graceful, token-identical, no crash."""
+    cfg, model, _ = lm
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab_size, 14, dtype=np.int32)
+               for _ in range(2)]
+
+    def reqs():
+        return [Request(rid=i, prompt=p.copy(), max_new=6)
+                for i, p in enumerate(prompts)]
+
+    ref = reqs()
+    _engine(lm, "log", paged_decode=False).generate_sequential(ref)
+    want = [list(r.generated) for r in ref]
+    # 7 pool pages = the exact liveness floor (max_pages + 1): two admitted
+    # 14-token prompts chunking at 8 need 4 new pages on the first fused
+    # tick with only 3 free and every resident page pinned
+    eng = _engine(lm, "paged", hbm_bytes=7 * _group_bytes(model.cfg),
+                  chunk=8)
+    assert eng.pooled and eng.fused
+    rs = reqs()
+    eng.generate(rs)                    # must not raise pool-exhausted
+    assert [list(r.generated) for r in rs] == want
+    assert eng.stats()["preempts"] >= 1
+    assert eng.stats()["mirror_d2h_bytes"] == 0
+
+
 # ------------------------------------------------------- pooled engine surface
 def _pooled_kv(pages, *, page_tokens=4):
     kvspec = KVSpec(num_layers=2, kv_heads=2, head_dim=8,
@@ -273,6 +374,31 @@ def test_pooled_victim_hint_prefers_most_pages():
     assert kv.victim_hint([0, 1]) == 0
     assert kv.victim_hint([1]) == 1
     assert kv.victim_hint([]) is None
+
+
+def test_pooled_prepare_commit_step_multi_token():
+    """The fused tick's engine surface: prepare_step allocates pages
+    covering each sequence's WHOLE chunk (not just the next token),
+    returns pre-step lengths, and commit_step advances them by the chunk;
+    prepare_decode/commit_decode remain the n=1 special case."""
+    kv, kvspec = _pooled_kv(pages=8)
+    rng = np.random.default_rng(5)
+    burst = rng.standard_normal((2, 2, 3, 2, 8)).astype(np.float32)
+    kv.append(0, burst)                       # seq 0: 3 tokens (1 page)
+    kv.append(1, burst[:, :, 0])              # seq 1: 1 token
+    tbl, ctx = kv.prepare_step([0, 1], [6, 1], max_pages=4)
+    assert ctx.tolist() == [3, 1]
+    # seq 0 needs ceil((3+6)/4)=3 pages, seq 1 ceil((1+1)/4)=1 page
+    assert len(kv.block_table[0]) == 3
+    assert len(kv.block_table[1]) == 1
+    pk, pv = kv.pool_views()
+    kv.commit_step(pk, pv, [0, 1], [6, 1])
+    assert kv.seq_len[0] == 9 and kv.seq_len[1] == 2
+    # the single-token wrappers stay equivalent
+    tbl2, ctx2 = kv.prepare_decode([1], max_pages=4)
+    assert ctx2.tolist() == [2]
+    kv.commit_decode(pk, pv, [1])
+    assert kv.seq_len[1] == 3
 
 
 def test_pooled_can_admit_tokens_counts_free_pages():

@@ -52,13 +52,14 @@ def _requests(cfg, seed=0, max_new=MAX_NEW):
 
 
 def _engine(lm, engine, *, hbm_bytes=64 << 20, max_batch_seqs=4,
-            max_batch_tokens=None):
+            max_batch_tokens=None, chunk=None, fuse=True):
     cfg, model, params = lm
     return ServingEngine(model, params, ServeConfig(
         max_len=MAX_LEN, page_tokens=4,
         engine_spec=EngineSpec(engine=engine, kv_hbm_bytes=hbm_bytes,
                                kv_hot_window=8, drain_shards=2),
-        max_batch_seqs=max_batch_seqs, max_batch_tokens=max_batch_tokens))
+        max_batch_seqs=max_batch_seqs, max_batch_tokens=max_batch_tokens,
+        prefill_chunk_tokens=chunk, fuse_ticks=fuse))
 
 
 @pytest.fixture(scope="module")
@@ -190,7 +191,71 @@ def test_pressure_surface_is_scheduler_sufficient(lm):
     assert eng.tiered.hbm_limit_bytes() > 0
 
 
+# --------------------------------------------------- jit-shape bucketing pins
+@pytest.mark.parametrize("engine", ("paged", "log"))
+def test_jit_bucketing_pins_compile_counts(lm, reference, engine):
+    """The recompile pin: batch width and Qmax bucket to the power-of-two
+    ladder, so a run over chunked prompts compiles a handful of step shapes
+    — and a SECOND schedule with a different batch width (4 vs 3, same
+    bucket) plus the same chunking adds ZERO new compiles, only cache
+    hits."""
+    cfg, _, _ = lm
+    reqs = _requests(cfg)
+    eng = _engine(lm, engine, chunk=5)
+    eng.generate(reqs)                    # widths 3→bucket 4; chunks 5/2/1
+    s1 = eng.stats()
+    assert s1["step_compiles"] <= 4, s1["step_compiles"]
+    for r in reqs:
+        assert r.generated == reference[r.rid]
+    rng = np.random.default_rng(3)
+    reqs4 = [Request(rid=i,
+                     prompt=rng.integers(0, cfg.vocab_size, 12,
+                                         dtype=np.int32), max_new=MAX_NEW)
+             for i in range(4)]
+    eng.generate(reqs4)                   # width 4 → the same bucket
+    s2 = eng.stats()
+    assert s2["step_compiles"] == s1["step_compiles"], (
+        "a new batch width inside an existing bucket must not recompile")
+    assert s2["step_cache_hits"] > s1["step_cache_hits"]
+
+
+def test_jit_bucketing_across_chunk_sizes(lm, reference):
+    """Chunk budgets that bucket to the same Qmax share compiles: chunk 5
+    and chunk 7 both pad to Qmax 8, so the second engine-warm run of either
+    adds no shapes the first didn't."""
+    cfg, _, _ = lm
+    eng = _engine(lm, "log", chunk=7)
+    eng.generate(_requests(cfg))
+    base = eng.stats()["step_compiles"]
+    # rerun with the same engine: everything is warm
+    reqs = _requests(cfg)
+    eng.generate(reqs)
+    assert eng.stats()["step_compiles"] == base
+    for r in reqs:
+        assert r.generated == reference[r.rid]
+
+
 # --------------------------------------------------------- starvation guard
+@pytest.mark.parametrize("engine", KV_ENGINES)
+def test_chunk_rows_progress_under_preemption_churn(lm, reference, engine):
+    """The chunk-row starvation pin (ISSUE 5 satellite): chunked prompts
+    under a budget that preempts constantly — every row that sits in the
+    running batch must advance ≥1 chunk or token per tick (the scheduler's
+    forward-progress guard raises otherwise), every request finishes, and
+    no token moves."""
+    cfg, model, _ = lm
+    reqs = _requests(cfg)
+    eng = _engine(lm, engine, hbm_bytes=10 * _token_bytes(model.cfg),
+                  chunk=3)
+    eng.generate(reqs)                    # must not trip the progress guard
+    s = eng.stats()
+    assert s["preempts"] >= 1, engine
+    assert s["sched_prefill_chunks"] >= 2
+    assert s["sched_stalled_row_ticks"] == 0
+    for r in reqs:
+        assert r.done and r.generated == reference[r.rid], engine
+
+
 @pytest.mark.slow
 @pytest.mark.parametrize("engine", KV_ENGINES)
 def test_every_admitted_request_finishes(lm, engine):
