@@ -161,17 +161,55 @@ class ServeWorkload:
     max_batch_seqs: int = 4
     gather_every: int = 16                  # full-history read cadence
     seed: int = 0
+    # cross-request prefix sharing (ISSUE 6): > 0 makes prompts share hot
+    # prefix families sampled by Zipf rank (most requests reuse the few
+    # hottest system/few-shot prefixes); run_serve_workload then drives a
+    # PrefixCache over the pooled engine — cache-hit admissions splice the
+    # shared pages and append only the uncovered tail
+    hot_prefixes: int = 0
+    prefix_tokens: tuple = ()      # family prefix lengths (pick these NOT
+                                   # page-aligned so boundary pages are
+                                   # shared mid-page and COW is exercised)
+    tail_tokens: tuple = ()        # per-request private tail lengths
+    zipf_exponent: float = 1.1     # family popularity ~ 1/(rank+1)^s
+    prefix_cache_tokens: int = 4096
+    # fraction of requests that repeat a family's canonical FULL prompt
+    # (retries/regenerations): a duplicate splices up to len-1 — mid-page —
+    # so concurrent duplicates alias the boundary page and its first decode
+    # write exercises copy-on-write (random-tail requests diverge at a page
+    # boundary and never hit it)
+    dup_frac: float = 0.0
+    # sharing-aware pool floor for the bench (pages). With a prefix cache
+    # the steady working set depends on the realized family draw (Zipf
+    # popularity + dup mask), not just the shape maxima, so each preset
+    # pins a floor tuned to its draw: small enough that decode growth
+    # crosses the budget (the preemption gate), large enough that spills
+    # don't thrash the shared index away (the hit-rate gate)
+    pool_floor_pages: int = 0
 
     def smoke(self) -> "ServeWorkload":
         """CI-sized variant: small enough to finish in seconds, tight
         enough (relative to the bench's HBM budget) to still preempt. The
-        prefill-heavy mix keeps its prompt ≫ decode ratio."""
+        prefill-heavy mix keeps its prompt ≫ decode ratio; the
+        shared-prefix mix keeps enough same-family concurrency that both
+        splices and boundary-page COWs still fire."""
         import dataclasses
         if self.name == "prefill_heavy":
             return dataclasses.replace(self, requests=6,
                                        prompt_tokens=(48, 96),
                                        decode_tokens=(4, 8),
                                        max_batch_seqs=3, gather_every=8)
+        if self.name == "shared_prefix":
+            # decode tails long enough that private-page growth still
+            # crosses the pool budget: sharing shrinks the prompt
+            # footprint, so preemption pressure must come from decode
+            return dataclasses.replace(self, requests=10, hot_prefixes=2,
+                                       prompt_tokens=(64,),
+                                       prefix_tokens=(38, 54),
+                                       tail_tokens=(6, 14),
+                                       decode_tokens=(24, 48),
+                                       dup_frac=0.8, gather_every=8,
+                                       pool_floor_pages=16)
         return dataclasses.replace(self, requests=6, prompt_tokens=(8, 24),
                                    decode_tokens=(12, 24), max_batch_seqs=3,
                                    gather_every=8)
@@ -194,24 +232,78 @@ def prefill_heavy_workload(seed: int = 0) -> ServeWorkload:
                          gather_every=16, seed=seed)
 
 
+def shared_prefix_workload(seed: int = 0) -> ServeWorkload:
+    """The ISSUE 6 regime: Zipf prompt reuse — most arrivals repeat one of
+    a few hot prefix families (the millions-of-users system/few-shot
+    pattern), each with a short private tail. On a sharing-enabled pooled
+    engine the prefix cache turns the hot admissions into block-table
+    splices; the reported ``prefix_hit_rate`` and prefill-tokens-saved
+    fraction land in BENCH_serve.json. Prefix lengths sit mid-page on
+    purpose so concurrent same-family rows hit the boundary-page COW
+    path."""
+    return ServeWorkload(name="shared_prefix", requests=32,
+                         mean_interarrival_tokens=6.0,
+                         prompt_tokens=(96,),         # budget sizing bound
+                         prefix_tokens=(38, 54, 70),  # % 16 = 6: mid-page
+                         tail_tokens=(10, 26),
+                         decode_tokens=(16, 48), max_batch_seqs=4,
+                         gather_every=16, hot_prefixes=4, dup_frac=0.5,
+                         pool_floor_pages=26, seed=seed)
+
+
 def serve_workloads() -> dict:
     """Name → serve-workload preset (the arrival-process benchmarks)."""
     return {"serve": ServeWorkload(),
-            "prefill_heavy": prefill_heavy_workload()}
+            "prefill_heavy": prefill_heavy_workload(),
+            "shared_prefix": shared_prefix_workload()}
 
 
 def run_serve_workload(kv, kvspec, wl: ServeWorkload, clock) -> dict:
     """Drive the arrival process; returns throughput / latency-percentile /
     preemption metrics. ``kv`` is any KVCacheEngine; victim selection uses
     ``victim_hint`` with an admission-order LRU fallback — the same policy
-    as the serving scheduler."""
+    as the serving scheduler.
+
+    When ``wl.hot_prefixes > 0`` and ``kv`` supports prefix sharing
+    (pooled ``paged``), admissions go through a
+    :class:`repro.serving.prefix_cache.PrefixCache`: a cache-hit prompt
+    splices the shared pages and appends KV only for its uncovered tail —
+    the covered tokens cost no prefill append at all. Engines without
+    sharing run the same Zipf prompt mix with full prefills (the
+    comparison baseline)."""
     from repro.core.kvcache import HOST_LINK
     rng = np.random.default_rng(wl.seed)
     per_token = kvspec.token_bytes * kvspec.num_layers
     token_time = HOST_LINK.write_latency + per_token / HOST_LINK.write_bw
     arrivals = np.cumsum(rng.exponential(
         wl.mean_interarrival_tokens * token_time, wl.requests))
-    prompt = rng.choice(wl.prompt_tokens, wl.requests)
+    share = None
+    prompt_ids: list = []
+    if wl.hot_prefixes:
+        # Zipf-rank family popularity: family k drawn ∝ 1/(k+1)^s
+        weights = 1.0 / (np.arange(wl.hot_prefixes) + 1) ** wl.zipf_exponent
+        weights /= weights.sum()
+        fam_len = rng.choice(wl.prefix_tokens, wl.hot_prefixes)
+        families = [rng.integers(0, 1 << 15, int(n), dtype=np.int32)
+                    for n in fam_len]
+        canon_tail = [rng.integers(0, 1 << 15,
+                                   int(rng.choice(wl.tail_tokens)),
+                                   dtype=np.int32)
+                      for _ in range(wl.hot_prefixes)]
+        fam_of = rng.choice(wl.hot_prefixes, wl.requests, p=weights)
+        dup = rng.random(wl.requests) < wl.dup_frac
+        tails = rng.choice(wl.tail_tokens, wl.requests)
+        prompt_ids = [np.concatenate([
+            families[int(f)],
+            canon_tail[int(f)] if d else
+            rng.integers(0, 1 << 15, int(t), dtype=np.int32)])
+            for f, d, t in zip(fam_of, dup, tails)]
+        prompt = np.asarray([len(p) for p in prompt_ids])
+        if getattr(kv, "supports_sharing", lambda: False)():
+            from repro.serving.prefix_cache import PrefixCache
+            share = PrefixCache(kv, capacity_tokens=wl.prefix_cache_tokens)
+    else:
+        prompt = rng.choice(wl.prompt_tokens, wl.requests)
     decode = rng.choice(wl.decode_tokens, wl.requests)
 
     shape = (kvspec.num_layers, 2, kvspec.kv_heads, kvspec.head_dim)
@@ -223,13 +315,26 @@ def run_serve_workload(kv, kvspec, wl: ServeWorkload, clock) -> dict:
     step = 0
 
     def admit(entry, *, restore):
+        nonlocal total_tokens
         if restore:
             kv.restore(entry["rid"])
         else:
-            burst = rng.standard_normal(
-                (kvspec.num_layers, 2, int(prompt[entry["rid"]]),
-                 kvspec.kv_heads, kvspec.head_dim)).astype(kvspec.dtype)
-            kv.append(entry["rid"], burst)
+            rid = entry["rid"]
+            covered = 0
+            if share is not None:
+                covered = share.match_and_splice(rid, prompt_ids[rid])
+            # only the uncovered tail is ever appended — spliced tokens
+            # cost nothing, which is the entire point; appended_tokens
+            # stays the honest write-amplification denominator
+            n = int(prompt[rid]) - covered
+            if n > 0:
+                burst = rng.standard_normal(
+                    (kvspec.num_layers, 2, n,
+                     kvspec.kv_heads, kvspec.head_dim)).astype(kvspec.dtype)
+                kv.append(rid, burst)
+            total_tokens += n
+            if share is not None:
+                share.insert(rid, prompt_ids[rid])
         entry["admitted_at"] = step
         running.append(entry)
 
@@ -245,7 +350,6 @@ def run_serve_workload(kv, kvspec, wl: ServeWorkload, clock) -> dict:
         while (next_req < wl.requests and arrivals[next_req] <= clock.now
                and has_room()):
             entry = {"rid": next_req, "decoded": 0}
-            total_tokens += int(prompt[next_req])
             next_req += 1
             admit(entry, restore=False)
         if not running:
@@ -287,10 +391,22 @@ def run_serve_workload(kv, kvspec, wl: ServeWorkload, clock) -> dict:
             preempted.append(victim)
 
     lat = np.sort(np.asarray(latencies)) if latencies else np.zeros(1)
-    return {
+    out = {
         "requests": wl.requests,
         "appended_tokens": total_tokens,
         "throughput_tok_per_s": total_tokens / max(clock.now, 1e-12),
         "p50_latency_s": float(np.percentile(lat, 50)),
         "p99_latency_s": float(np.percentile(lat, 99)),
     }
+    if wl.hot_prefixes:
+        prompt_mass = int(np.sum(prompt))
+        reused = kv.stats.get("prefix_tokens_reused", 0)
+        out["prefix_hit_rate"] = (kv.stats.get("prefix_hits", 0)
+                                  / wl.requests)
+        # per-token prefill FLOPs are ~constant at these lengths (MLP
+        # -dominated; the quadratic attention term is second-order), so the
+        # FLOPs-saved fraction is the covered-token fraction of the prompt
+        # mass — the tokens splices never prefilled
+        out["prefill_flops_saved_frac"] = reused / max(prompt_mass, 1)
+        out["cow_copies"] = kv.stats.get("cow_copies", 0)
+    return out

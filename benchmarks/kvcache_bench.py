@@ -87,10 +87,18 @@ def bench(engine: str, *, layers=8, kv_heads=8, head_dim=128, tokens=512,
             # the preemption path is exercised), but a pool smaller than
             # the steady working set would measure page thrash, not the
             # design
-            max_seq = max(wl.prompt_tokens) + max(wl.decode_tokens)
-            seq_pages = -(-max_seq // kvspec.page_tokens)
-            min_pages = (max(wl.max_batch_seqs - 1, 2) * seq_pages
-                         + wl.max_batch_seqs)
+            if wl.hot_prefixes:
+                # prefix sharing shrinks the steady working set — the hot
+                # prompt mass is resident ONCE — so the full-prompt-per-row
+                # floor below would leave the pool so roomy the preemption
+                # path never fires; use the preset-tuned sharing floor
+                # instead (see ServeWorkload.pool_floor_pages)
+                min_pages = wl.pool_floor_pages
+            else:
+                max_seq = max(wl.prompt_tokens) + max(wl.decode_tokens)
+                seq_pages = -(-max_seq // kvspec.page_tokens)
+                min_pages = (max(wl.max_batch_seqs - 1, 2) * seq_pages
+                             + wl.max_batch_seqs)
             budget_pages = spec.kv_hbm_bytes // (kvspec.page_bytes * layers)
             kv.init_pool(pages=max(budget_pages, min_pages))
             pooled = True
@@ -228,6 +236,11 @@ def main(argv=None):
     ap.add_argument("--fused-gate", action="store_true",
                     help="CI: exit nonzero unless the fused mixed-batch "
                          "tick beats the batch=1-per-chunk baseline")
+    ap.add_argument("--prefix-gate", action="store_true",
+                    help="CI: exit nonzero unless the shared_prefix "
+                         "workload actually shared — prefix hit rate > 0 "
+                         "and at least one boundary-page copy-on-write on "
+                         "the pooled engine")
     ap.add_argument("--out", default="artifacts/kvcache_bench.json")
     ap.add_argument("--serve-out", default="BENCH_serve.json",
                     help="repo-root serving perf record (written whenever "
@@ -274,13 +287,47 @@ def main(argv=None):
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(rows, indent=1))
     if serve_rows:
-        Path(args.serve_out).write_text(json.dumps(
-            {"engines": serve_rows, "fused_vs_unfused": fused},
+        # merge into the existing record so separate CI steps (the
+        # serve/prefill_heavy smoke, then the shared_prefix smoke) compose
+        # instead of clobbering each other: this run's rows replace entries
+        # with the same (design, workload); a prior fused comparison is
+        # kept when this run skipped it
+        serve_path = Path(args.serve_out)
+        prior = {}
+        if serve_path.exists():
+            try:
+                prior = json.loads(serve_path.read_text())
+            except (ValueError, OSError):
+                prior = {}
+        fresh = {(r["design"], r["workload"]) for r in serve_rows}
+        keep = [r for r in prior.get("engines", [])
+                if (r.get("design"), r.get("workload")) not in fresh]
+        serve_path.write_text(json.dumps(
+            {"engines": keep + serve_rows,
+             "fused_vs_unfused": (prior.get("fused_vs_unfused")
+                                  if fused is None else fused)},
             indent=1, sort_keys=True))
     if any(r["workload"] in serve_workloads() and not r["preempts"]
            for r in rows):
         raise SystemExit("serve workload never crossed the HBM budget — "
                          "preemption path not exercised")
+    if args.prefix_gate:
+        shared = [r for r in rows
+                  if r["workload"] == "shared_prefix" and r["pooled"]]
+        if not shared:
+            raise SystemExit("--prefix-gate needs the shared_prefix "
+                             "workload on a pool-capable engine")
+        for r in shared:
+            if not r.get("prefix_hit_rate"):
+                raise SystemExit(
+                    f"prefix cache never hit on {r['design']} "
+                    f"(hit rate {r.get('prefix_hit_rate')}) — the sharing "
+                    f"path is dead")
+            if not r.get("cow_copies"):
+                raise SystemExit(
+                    f"boundary-page copy-on-write never fired on "
+                    f"{r['design']} — divergence over shared pages is not "
+                    f"being exercised")
     if args.fused_gate:
         if fused is None:
             raise SystemExit("--fused-gate needs a serve-style workload "

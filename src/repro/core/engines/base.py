@@ -47,6 +47,10 @@ class EngineSpec:
     # live here so serving configs and FS configs share one object)
     kv_hbm_bytes: int = 64 << 20
     kv_hot_window: int = 128
+    # cross-request prefix cache (ISSUE 6): token capacity of the radix
+    # index over shared pool pages; 0 disables sharing entirely (pooled
+    # engines behave exactly as before)
+    prefix_cache_tokens: int = 0
 
 
 class CacheEngine(abc.ABC):

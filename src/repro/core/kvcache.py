@@ -85,7 +85,12 @@ class _TieredKV(KVCacheEngine):
         self.seq_len: dict[int, int] = {}
         self._preempted: dict[int, np.ndarray] = {}   # seq → (L, 2, T, K, D)
         self.stats: dict = {"preempts": 0, "restores": 0, "releases": 0,
-                            "preempt_out_bytes": 0, "restore_in_bytes": 0}
+                            "preempt_out_bytes": 0, "restore_in_bytes": 0,
+                            # prefix-sharing counters (ISSUE 6) — zero on
+                            # engines without sharing so the stats key set
+                            # stays identical across every registered engine
+                            "prefix_hits": 0, "prefix_tokens_reused": 0,
+                            "cow_copies": 0, "shared_pages": 0}
 
     # hooks -----------------------------------------------------------------
     def _append_tokens(self, seq: int, toks: list[np.ndarray]) -> None:
@@ -153,6 +158,12 @@ class _TieredKV(KVCacheEngine):
             # under kvhybrid a long cold sequence lands on the page side
             self._append_tokens(seq, toks)
 
+    def _on_release(self, seq: int) -> None:
+        """Hook: per-sequence policy-state cleanup on release (adaptive
+        routers forget their reuse histograms here). Runs on BOTH release
+        branches — active and preempted — so every engine forgets
+        consistently (the kvhybrid-only forget was a leak)."""
+
     def release(self, seq: int) -> None:
         """Finished request: drop the sequence from every tier. A preempted
         sequence just drops its disk blob; an active one drops host/HBM
@@ -161,6 +172,7 @@ class _TieredKV(KVCacheEngine):
             self._drop_seq(seq)
             self.seq_len.pop(seq, None)
         self.stats["releases"] += 1
+        self._on_release(seq)
 
 
 @register_kv_engine("paged")
@@ -193,6 +205,7 @@ class PagedKVCache(_TieredKV):
         self.hbm_capacity = max(hbm_budget_bytes // spec.page_bytes, 1)
         self.next_phys = 0
         self._pooled = False
+        self._share_index = None       # prefix index (set_share_index)
         self.stats.update({"hbm_hits": 0, "hbm_misses": 0, "dma_up_bytes": 0,
                            "host_writes": 0, "redo_bytes": 0})
 
@@ -230,7 +243,11 @@ class PagedKVCache(_TieredKV):
         self.dev_v = jnp.zeros(shape, self.pool_dtype)
         self.free_pages: list[int] = list(range(self.pool_pages - 1, -1, -1))
         self.pool_lru = LRUList()                    # resident phys pages
-        self.phys_owner: dict[int, tuple[int, int]] = {}  # phys → (seq, log)
+        # refcounted page users: phys → {seq: logical}. A page may appear in
+        # several sequences' block tables at once (prefix sharing); it is
+        # freed only when its user dict empties AND no index pin remains.
+        self.page_users: dict[int, dict[int, int]] = {}
+        self.trie_refs: set[int] = set()             # index-pinned pages
         self.host_pages: dict[tuple[int, int], np.ndarray] = {}  # spilled
         self._in_restore = False
         self._pooled = True
@@ -256,17 +273,31 @@ class PagedKVCache(_TieredKV):
             [self.dev_k[:, phys], self.dev_v[:, phys]], axis=1))
 
     def _spill_lru_page(self, pinned: set) -> int:
-        """Evict the least-recently-used resident page of a non-pinned
-        sequence to the host tier (page-granular spill); returns the freed
-        physical index."""
-        for phys in self.pool_lru.lru_order():
-            seq, logical = self.phys_owner[phys]
+        """Evict the least-recently-used spillable resident page to the
+        host tier (page-granular spill); returns the freed physical index.
+
+        Refcount-aware (ISSUE 6): only a page with exactly ONE live user —
+        and that user outside the pinned batch — can spill coherently;
+        pages aliased by several sequences never spill (the scheduler
+        preempts whole sequences instead). A single-user page the prefix
+        index also pins is forgotten from the index first: the cache
+        re-prefills on a future miss, no sequence loses data."""
+        for phys in list(self.pool_lru.lru_order()):
+            users = self.page_users.get(phys)
+            if not users or len(users) > 1:
+                continue               # index-only (reclaimed, not spilled)
+                                       # or shared between live sequences
+            (seq, logical), = users.items()
             if seq in pinned:
                 continue
+            if phys in self.trie_refs:
+                if self._share_index is None:
+                    continue
+                self._share_index.forget_phys(phys)
             page = self._page_np(phys)
             self.host_pages[(seq, logical)] = page
             self.block_table[seq][logical] = -1
-            self.phys_owner.pop(phys)
+            self.page_users.pop(phys)
             self.pool_lru.remove(phys)
             self.clock.charge(HOST_LINK, "write", page.nbytes,
                               random_access=True)          # D2H page out
@@ -274,18 +305,25 @@ class PagedKVCache(_TieredKV):
             self.stats["pool_d2h_bytes"] += page.nbytes
             return phys
         raise RuntimeError(
-            "paged pool exhausted: every resident page belongs to a pinned "
-            "sequence — the HBM budget is too small for the running batch")
+            "paged pool exhausted: every resident page is pinned, shared, "
+            "or index-held — the HBM budget is too small for the running "
+            "batch")
 
     def _alloc_page(self, pinned: set) -> int:
         if self.free_pages:
+            return self.free_pages.pop()
+        # reclaim before spilling: an idle index-held page (no live user)
+        # frees without any D2H traffic — dropping cached prefix KV is
+        # cheaper than spilling a live sequence's page
+        if self._share_index is not None and \
+                self._share_index.reclaim_one() is not None:
             return self.free_pages.pop()
         return self._spill_lru_page(pinned)
 
     def _extend_table(self, seq: int, pinned: set) -> None:
         table = self.block_table.setdefault(seq, [])
         phys = self._alloc_page(pinned)
-        self.phys_owner[phys] = (seq, len(table))
+        self.page_users[phys] = {seq: len(table)}
         table.append(phys)
         self.pool_lru.touch(phys)
 
@@ -298,7 +336,7 @@ class PagedKVCache(_TieredKV):
         self.dev_v = self.dev_v.at[:, phys].set(
             jnp.asarray(page[:, 1], self.pool_dtype))
         self.block_table[seq][logical] = phys
-        self.phys_owner[phys] = (seq, logical)
+        self.page_users[phys] = {seq: logical}
         self.pool_lru.touch(phys)
         self.clock.charge(HOST_LINK, "read", page.nbytes,
                           random_access=True)            # H2D fault-in
@@ -324,6 +362,10 @@ class PagedKVCache(_TieredKV):
         for seq, n in zip(seqs, n_tokens):
             self._check_active(seq)
             self._ensure_seq_resident(seq, pinned)
+            # the kernel is about to scatter this row's tokens: if the
+            # boundary page is aliased by other sequences, give this writer
+            # its own copy first (copy-on-write divergence)
+            self._maybe_cow_boundary(seq, pinned)
             table = self.block_table.setdefault(seq, [])
             end = self.seq_len.get(seq, 0) + max(int(n), 1)
             for _ in range(-(-end // T) - len(table)):
@@ -358,6 +400,8 @@ class PagedKVCache(_TieredKV):
         pinned = {seq}
         self._check_active(seq)
         self._ensure_seq_resident(seq, pinned)
+        if n_tokens > 0:
+            self._maybe_cow_boundary(seq, pinned)
         table = self.block_table.setdefault(seq, [])
         end = self.seq_len.get(seq, 0) + n_tokens
         need = -(-end // self.spec.page_tokens) - len(table)
@@ -375,19 +419,29 @@ class PagedKVCache(_TieredKV):
         self.clock.charge(HBM, "write", n_tokens * self._token_group_bytes())
         self.stats["pool_appends"] += n_tokens
 
+    def _idle_index_pages(self) -> int:
+        """Index-pinned pages with no live user: reclaimable on demand
+        (dropping cached prefix KV costs nothing but a future re-prefill),
+        so the pressure surface treats them as available."""
+        return sum(1 for p in self.trie_refs if not self.page_users.get(p))
+
     def can_admit_tokens(self, n_tokens: int) -> bool:
         if not self._pooled:
             return True
         pages_needed = -(-n_tokens // self.spec.page_tokens)
-        return pages_needed + self._reserve_pages() <= len(self.free_pages)
+        return (pages_needed + self._reserve_pages()
+                <= len(self.free_pages) + self._idle_index_pages())
 
     def can_place_step(self, seqs: Sequence[int],
                        n_tokens: Sequence[int]) -> bool:
         """Conservative placement check for one fused step: every page the
         batch will hold afterwards (chunk growth + faulting back any
-        spilled page of a batch sequence) must be coverable by free pages
-        plus pages spillable from sequences OUTSIDE the batch — because
-        ``prepare_step`` pins the whole batch while allocating."""
+        spilled page of a batch sequence, plus a possible boundary COW per
+        row) must be coverable by free pages plus pages spillable from
+        sequences OUTSIDE the batch — because ``prepare_step`` pins the
+        whole batch while allocating. Shared pages (several live users)
+        never spill, so they don't count; idle index-held pages reclaim
+        for free, so they do."""
         if not self._pooled:
             return True
         T = self.spec.page_tokens
@@ -398,9 +452,17 @@ class PagedKVCache(_TieredKV):
             resident = sum(1 for p in table if p >= 0)
             target = -(-(self.seq_len.get(seq, 0) + max(int(n), 1)) // T)
             needed += max(target, len(table)) - resident
-        spillable = sum(1 for owner, _ in self.phys_owner.values()
-                        if owner not in batch)
-        return needed <= len(self.free_pages) + spillable
+            pos = self.seq_len.get(seq, 0)
+            if pos % T:
+                logical = pos // T
+                if logical < len(table) and \
+                        len(self.page_users.get(table[logical], ())) > 1:
+                    needed += 1        # boundary copy-on-write page
+        spillable = sum(
+            1 for phys, users in self.page_users.items()
+            if len(users) == 1 and next(iter(users)) not in batch)
+        return needed <= (len(self.free_pages) + self._idle_index_pages()
+                          + spillable)
 
     def _reserve_pages(self) -> int:
         """Pages the next decode step will claim: one per active sequence
@@ -409,6 +471,110 @@ class PagedKVCache(_TieredKV):
         return sum(1 for seq, n in self.seq_len.items()
                    if seq not in self._preempted
                    and n >= T * len(self.block_table.get(seq, ())))
+
+    # ------------------------------------------------------- prefix sharing
+    def supports_sharing(self) -> bool:
+        return self._pooled
+
+    def set_share_index(self, index) -> None:
+        if not self._pooled:
+            raise RuntimeError("prefix sharing requires pooled mode; call "
+                               "init_pool() first")
+        self._share_index = index
+
+    def page_refs(self, phys: int) -> int:
+        if not self._pooled:
+            return 0
+        return (len(self.page_users.get(phys, ()))
+                + (1 if phys in self.trie_refs else 0))
+
+    def adopt_pages(self, seq: int, pages: Sequence[int],
+                    covered_tokens: int) -> None:
+        """Splice-on-admit: alias ``seq``'s block table onto shared pool
+        pages covering its first ``covered_tokens`` prompt tokens. Pure
+        metadata — page refcounts go up, zero KV moves, zero compute."""
+        if not self._pooled:
+            raise RuntimeError("adopt_pages() requires pooled mode")
+        self._check_active(seq)
+        if self.block_table.get(seq) or self.seq_len.get(seq):
+            raise RuntimeError(
+                f"sequence {seq} already holds pages; prefix splice is "
+                f"admission-only")
+        if len(pages) != -(-covered_tokens // self.spec.page_tokens):
+            raise ValueError(
+                f"{len(pages)} pages cannot cover {covered_tokens} tokens "
+                f"at {self.spec.page_tokens} tokens/page")
+        table = self.block_table[seq] = []
+        for logical, phys in enumerate(pages):
+            users = self.page_users.setdefault(phys, {})
+            if len(users) == 1:
+                self.stats["shared_pages"] += 1   # gained a 2nd live user
+            users[seq] = logical
+            table.append(phys)
+            self.pool_lru.touch(phys)
+        self.seq_len[seq] = covered_tokens
+        self.stats["prefix_hits"] += 1
+        self.stats["prefix_tokens_reused"] += covered_tokens
+
+    def pin_page(self, phys: int) -> None:
+        if phys in self.trie_refs:
+            return
+        if self.page_users.get(phys):
+            self.stats["shared_pages"] += 1       # index + live user(s)
+        self.trie_refs.add(phys)
+
+    def unpin_page(self, phys: int) -> None:
+        self.trie_refs.discard(phys)
+        if not self.page_users.get(phys):
+            # the index was the last referent: free the page
+            self.page_users.pop(phys, None)
+            if phys in self.pool_lru:
+                self.pool_lru.remove(phys)
+                self.free_pages.append(phys)
+
+    def _maybe_cow_boundary(self, seq: int, pinned: set) -> None:
+        """Copy-on-write before a write lands mid-page: the next token slot
+        of ``seq`` falls inside an existing page — if that page is aliased
+        by OTHER live sequences, the writer gets a private copy first and
+        readers keep the original. A page whose only other referent is the
+        prefix index needs no copy: splicers trust only the first
+        ``covered`` slots (the kernel masks beyond each row's length), and
+        those slots are never rewritten with different values."""
+        T = self.spec.page_tokens
+        pos = self.seq_len.get(seq, 0)
+        if pos % T == 0:
+            return                     # next write starts a fresh page
+        logical = pos // T
+        table = self.block_table.get(seq, ())
+        if logical >= len(table):
+            return
+        phys = table[logical]
+        if phys < 0 or len(self.page_users.get(phys, ())) <= 1:
+            return
+        self._cow_page(seq, logical, pinned)
+
+    def _cow_page(self, seq: int, logical: int, pinned: set) -> None:
+        """Duplicate ``seq``'s view of a shared page into a fresh physical
+        page (one on-device page copy) and retarget its block table; every
+        other referent — sequences and the prefix index — keeps the
+        original."""
+        # lazy import: repro.serving.batching owns the device-pool helpers
+        # and importing it at module scope would cycle through the serving
+        # package
+        from repro.serving.batching import copy_pool_page
+        phys = self.block_table[seq][logical]
+        new = self._alloc_page(set(pinned) | {seq})
+        self.dev_k, self.dev_v = copy_pool_page(
+            self.dev_k, self.dev_v, phys, new)
+        self.page_users[phys].pop(seq, None)
+        self.page_users[new] = {seq: logical}
+        self.block_table[seq][logical] = new
+        self.pool_lru.touch(new)
+        self.clock.charge(HBM, "read", self._group_bytes)
+        self.clock.charge(HBM, "write", self._group_bytes)
+        self.stats["cow_copies"] += 1
+        if self._share_index is not None:
+            self._share_index.on_cow(seq, phys)
 
     # pooled data paths ------------------------------------------------------
     def _append_tokens_pooled(self, seq: int, toks: list[np.ndarray]) -> None:
@@ -420,6 +586,8 @@ class PagedKVCache(_TieredKV):
         spec = self.spec
         pinned = {seq}
         self._ensure_seq_resident(seq, pinned)
+        if toks:
+            self._maybe_cow_boundary(seq, pinned)
         table = self.block_table.setdefault(seq, [])
         start = self.seq_len.get(seq, 0)
         end = start + len(toks)
@@ -502,13 +670,22 @@ class PagedKVCache(_TieredKV):
         return blob
 
     def _drop_seq_pooled(self, seq: int) -> None:
+        """Release ``seq``'s pages: shared pages only lose this sequence's
+        refcount; a page returns to the free list when its last live user
+        leaves AND the prefix index does not pin it."""
         for logical, phys in enumerate(self.block_table.pop(seq, [])):
             if phys >= 0:
-                self.phys_owner.pop(phys, None)
-                self.pool_lru.remove(phys)
-                self.free_pages.append(phys)
+                users = self.page_users.get(phys, {})
+                users.pop(seq, None)
+                if not users:
+                    self.page_users.pop(phys, None)
+                    if phys not in self.trie_refs:
+                        self.pool_lru.remove(phys)
+                        self.free_pages.append(phys)
             else:
                 self.host_pages.pop((seq, logical), None)
+        if self._share_index is not None:
+            self._share_index.on_seq_dropped(seq)
 
     def _ensure_resident(self, layer: int, phys: int) -> None:
         key = (layer, phys)
@@ -622,8 +799,11 @@ class PagedKVCache(_TieredKV):
             return super().pressure()
         # count the pages the NEXT decode step will claim, so the scheduler
         # preempts one tick before allocation would have to spill pages of
-        # the running batch itself (page-granular early warning)
-        used = self.pool_pages - len(self.free_pages) + self._reserve_pages()
+        # the running batch itself (page-granular early warning); pages held
+        # only by the prefix index are reclaimable on demand, so they count
+        # as headroom rather than load
+        used = (self.pool_pages - len(self.free_pages)
+                - self._idle_index_pages() + self._reserve_pages())
         return min(used / self.pool_pages, 1.0)
 
     def resident_bytes(self, seq: int) -> int:
@@ -637,8 +817,11 @@ class PagedKVCache(_TieredKV):
 
     def victim_hint(self, candidates: Iterable[int]) -> Optional[int]:
         """Pooled mode answers at page granularity: preempt the candidate
-        whose eviction frees the most device pool pages (ties toward the
-        least recently appended). Host mode keeps the LRU fallback."""
+        whose eviction actually FREES the most device pool pages — a page
+        this sequence shares with other rows (or that the prefix index
+        pins) stays resident after the preempt, so only sole-user unpinned
+        pages count (ties toward the least recently appended). Host mode
+        keeps the LRU fallback."""
         if not self._pooled:
             return None
         cands = list(candidates)
@@ -648,9 +831,12 @@ class PagedKVCache(_TieredKV):
 
         def key(seq):
             pages = [p for p in self.block_table.get(seq, ()) if p >= 0]
+            freed = sum(1 for p in pages
+                        if len(self.page_users.get(p, ())) == 1
+                        and p not in self.trie_refs)
             coldest = min((order.get(p, len(order)) for p in pages),
                           default=len(order))
-            return (-len(pages), coldest)
+            return (-freed, coldest)
         return min(cands, key=key)
 
 
@@ -1175,6 +1361,5 @@ class HybridKVCache(_DrainingKV):
         super()._drop_seq(seq)
         self.page_owned.pop(seq, None)
 
-    def release(self, seq: int) -> None:
-        super().release(seq)
+    def _on_release(self, seq: int) -> None:
         self.router.forget_seq(seq)

@@ -49,6 +49,15 @@ and the pooled serving decode path):
   the engine spills least-recently-used *pool pages* to the host tier
   (page-granular), and the scheduler preempts whole sequences only when
   page spills cannot make room.
+* **Aliasing** — with the cross-request prefix cache
+  (``repro.serving.prefix_cache``) block tables may map logical pages of
+  DIFFERENT rows to the SAME physical page (a shared prompt prefix). The
+  read path needs no change: the kernels only gather through the table, and
+  every aliased slot holds the identical prefix KV by construction. Writes
+  are where aliasing matters — the engine copies a shared page before any
+  row writes inside it (copy-on-write), so the prefill/decode scatters
+  (``mode="drop"``, masked to the row's own slots) still touch only pages
+  the row exclusively owns past its covered prefix.
 
 Each package has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper + XLA fallback) and ref.py (pure-jnp oracle). Kernels are validated

@@ -66,19 +66,29 @@ def main(argv=None):
                     help="disable fused mixed-batch ticks: prefill chunks "
                          "run at batch=1 through the decode path (the "
                          "pre-fusion baseline)")
+    ap.add_argument("--prefix-cache-tokens", type=int, default=0,
+                    help="cross-request prefix cache capacity in tokens "
+                         "(0 = off): cache-hit admissions splice shared "
+                         "pool pages instead of prefilling (pooled path "
+                         "only)")
+    ap.add_argument("--shared-prefix-tokens", type=int, default=0,
+                    help="prepend this many identical tokens to every "
+                         "prompt (exercises the prefix cache)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.PRNGKey(args.seed))
-    max_len = args.prompt_len + args.max_new + 1
+    prompt_len = args.prompt_len + args.shared_prefix_tokens
+    max_len = prompt_len + args.max_new + 1
     max_len += -max_len % args.page_tokens     # pool wants page alignment
     engine = ServingEngine(model, params, ServeConfig(
         max_len=max_len, page_tokens=args.page_tokens,
         engine_spec=EngineSpec(engine=args.design,
                                drain_shards=args.drain_shards,
-                               kv_hbm_bytes=args.hbm_budget_bytes),
+                               kv_hbm_bytes=args.hbm_budget_bytes,
+                               prefix_cache_tokens=args.prefix_cache_tokens),
         max_batch_seqs=args.max_batch_seqs,
         max_batch_tokens=args.max_batch_tokens,
         paged_decode=args.paged_decode,
@@ -86,9 +96,13 @@ def main(argv=None):
         fuse_ticks=args.fuse_ticks))
 
     rng = np.random.default_rng(args.seed)
+    shared = rng.integers(0, cfg.vocab_size, args.shared_prefix_tokens,
+                          dtype=np.int32)
     reqs = [Request(rid=i,
-                    prompt=rng.integers(0, cfg.vocab_size, args.prompt_len,
-                                        dtype=np.int32),
+                    prompt=np.concatenate([
+                        shared,
+                        rng.integers(0, cfg.vocab_size, args.prompt_len,
+                                     dtype=np.int32)]),
                     max_new=args.max_new)
             for i in range(args.requests)]
     if args.sequential:

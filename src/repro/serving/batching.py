@@ -155,3 +155,11 @@ def scatter_prefill_pages(pool_k, pool_v, cache_k, cache_v, phys, n: int):
     v = cache_v[:, 0, :npages * T].reshape(L, npages, T, K, D)
     return (pool_k.at[:, phys].set(k.astype(pool_k.dtype)),
             pool_v.at[:, phys].set(v.astype(pool_v.dtype)))
+
+
+def copy_pool_page(pool_k, pool_v, src: int, dst: int):
+    """Duplicate one physical page group on device (prefix-sharing COW:
+    the writer takes the copy at ``dst``, readers keep ``src``). One HBM
+    read + write of a page group, zero host traffic."""
+    return (pool_k.at[:, dst].set(pool_k[:, src]),
+            pool_v.at[:, dst].set(pool_v[:, src]))

@@ -213,6 +213,17 @@ class ServingEngine:
             self._step_paged_ragged = jax.jit(model.step_paged_ragged)
             self._scatter_prefill = jax.jit(batching.scatter_prefill_pages,
                                             static_argnums=5)
+        # ------------------------------------------ cross-request prefix cache
+        # token-keyed radix index over shared pool pages (ISSUE 6): cache-hit
+        # admission splices the block table instead of prefilling. Requires
+        # the pooled path; engines without a pool keep sharing off (their
+        # admission behavior is unchanged, still token-identical)
+        self.prefix_cache = None
+        pc_tokens = cfg.resolved_spec().prefix_cache_tokens
+        if self.pooled and pc_tokens > 0:
+            from repro.serving.prefix_cache import PrefixCache
+            self.prefix_cache = PrefixCache(self.tiered,
+                                            capacity_tokens=pc_tokens)
 
     # -------------------------------------------------------------- mirroring
     def _mirror_kv(self, rid: int, cache, pos: int):
@@ -300,6 +311,26 @@ class ServingEngine:
         else:
             self._mirror_prefill(req.rid, cache, toks.shape[0])
         return logits, cache
+
+    def admit_prefix(self, req: Request):
+        """Try a prefix-cache splice for ``req``: on a hit the sequence
+        adopts the shared pool pages covering its longest cached prefix —
+        ZERO prefill compute for the covered tokens (no ``_prefill`` call,
+        no scatter) — and returns ``(cache_row, covered)``; the scheduler
+        prefills only ``prompt[covered:]``. None on a miss or when sharing
+        is off."""
+        if self.prefix_cache is None:
+            return None
+        covered = self.prefix_cache.match_and_splice(req.rid, req.prompt)
+        if covered <= 0:
+            return None
+        return {"pos": jnp.asarray([covered], jnp.int32)}, covered
+
+    def on_prompt_complete(self, rid: int, prompt: np.ndarray) -> None:
+        """A request's FULL prompt is now in the pool: publish its pages
+        into the prefix index so later admissions can splice them."""
+        if self.prefix_cache is not None:
+            self.prefix_cache.insert(rid, prompt)
 
     def _pool_admit(self, rid: int, cache, n: int) -> dict:
         """Move a fresh prompt's prefilled KV into the device pool (one

@@ -87,7 +87,9 @@ class _Running:
     logits its next token will be argmaxed from, and LRU bookkeeping."""
     req: "Request"
     cache: dict                        # device arrays, batch dim 1
-    logits: object                     # (1, 1, V) device array
+    logits: object                     # (1, 1, V) device array; None for a
+                                       # freshly spliced row (its first chunk
+                                       # pass produces the first logits)
     length: int                        # tokens in the cache row (pos)
     mirrored: bool                     # has KV in the tiered engine
     admitted_tick: int                 # last admission/restore tick (LRU)
@@ -120,6 +122,9 @@ class SchedulerStats:
     prefill_chunks: int = 0            # chunk-continuation rows stepped
     fused_ticks: int = 0               # ticks run as ONE mixed ragged step
     stalled_row_ticks: int = 0         # running rows that missed a tick (0!)
+    spliced: int = 0                   # admissions served from the prefix
+                                       # cache (block-table splice, zero
+                                       # prefill compute for the covered part)
 
     def as_dict(self) -> dict:
         return {f"sched_{k}": v for k, v in self.__dict__.items()}
@@ -185,13 +190,28 @@ class Scheduler:
                 self.engine.tiered.restore(pre.req.rid)
             self.running.append(_Running(
                 req=pre.req, cache=batching.row_to_device(pre.cache),
-                logits=jnp.asarray(pre.logits), length=pre.length,
+                logits=(None if pre.logits is None
+                        else jnp.asarray(pre.logits)), length=pre.length,
                 mirrored=pre.mirrored, admitted_tick=self.stats.ticks,
                 pending=pre.pending, stalled_ticks=pre.stalled_ticks))
             self.stats.restores += 1
         while self.waiting and self._has_room(
                 self._first_chunk(len(self.waiting[0].prompt)) + 1):
             req = self.waiting.popleft()
+            # prefix-cache splice (ISSUE 6): a cached prefix admits as a
+            # block-table alias — no prefill launch for the covered tokens;
+            # the uncovered tail rides as the row's pending chunk tail and
+            # its first chunk pass produces the row's first logits
+            spliced = self.engine.admit_prefix(req)
+            if spliced is not None:
+                cache, covered = spliced
+                self.running.append(_Running(
+                    req=req, cache=cache, logits=None, length=covered,
+                    mirrored=True, admitted_tick=self.stats.ticks,
+                    pending=req.prompt[covered:]))
+                self.stats.admitted += 1
+                self.stats.spliced += 1
+                continue
             first = self._first_chunk(len(req.prompt))
             logits, cache = self.engine.prefill_one(req, first)
             pending = req.prompt[first:] if first < len(req.prompt) else None
@@ -199,6 +219,8 @@ class Scheduler:
                 req=req, cache=cache, logits=logits, length=first,
                 mirrored="k" in cache or self.engine.pooled,
                 admitted_tick=self.stats.ticks, pending=pending))
+            if pending is None:
+                self.engine.on_prompt_complete(req.rid, req.prompt)
             self.stats.admitted += 1
         self.stats.peak_running = max(self.stats.peak_running,
                                       len(self.running))
@@ -223,6 +245,8 @@ class Scheduler:
                 r.req.rid, r.cache, r.pending[:m], r.length, r.mirrored)
             r.length += m
             r.pending = r.pending[m:] if m < len(r.pending) else None
+            if r.pending is None:
+                self.engine.on_prompt_complete(r.req.rid, r.req.prompt)
             self.stats.prefill_chunks += 1
 
     def _step(self) -> None:
@@ -294,6 +318,8 @@ class Scheduler:
             r.length += m
             if r.pending is not None:
                 r.pending = r.pending[m:] if m < len(r.pending) else None
+                if r.pending is None:
+                    self.engine.on_prompt_complete(r.req.rid, r.req.prompt)
 
     def _check_progress(self, lengths_before: dict) -> None:
         """Forward-progress guard (the chunk-row starvation pin): every row
@@ -363,7 +389,8 @@ class Scheduler:
             self.engine.tiered.preempt(victim.req.rid)
         self.preempted.append(_Preempted(
             req=victim.req, cache=batching.row_to_host(victim.cache),
-            logits=np.asarray(victim.logits), length=victim.length,
+            logits=(None if victim.logits is None
+                    else np.asarray(victim.logits)), length=victim.length,
             mirrored=victim.mirrored, pending=victim.pending,
             stalled_ticks=victim.stalled_ticks))
         self.stats.preempts += 1

@@ -229,6 +229,65 @@ def test_scheduler_matches_sequential_for_any_schedule(
             assert r.done and r.generated == want[r.rid], (name, r.rid)
 
 
+@pytest.mark.slow
+@settings(max_examples=5)
+@given(
+    arrival_perm=st.permutations(range(4)),
+    max_new=st.integers(1, 3),
+    max_batch_seqs=st.integers(2, 4),
+    pool_pages=st.sampled_from([5, 16]),
+    chunk=st.sampled_from([None, 5]),
+    seed=st.integers(0, 3),
+)
+def test_prefix_sharing_matches_sequential_for_any_schedule(
+        arrival_perm, max_new, max_batch_seqs, pool_pages, chunk, seed):
+    """ISSUE 6 invariant: Zipf-style prompt reuse (hot prefix families plus
+    exact duplicates) through the prefix cache is token-identical to the
+    sequential reference under ANY admission order, batch width, chunked
+    prefill, and a pool tight enough to force preemption and refcount-aware
+    spills — splices, COWs, and index evictions must all be invisible."""
+    from repro.serving import Request, ServeConfig, ServingEngine
+    cfg, model, params = _serve_model()
+    rng = np.random.default_rng(seed)
+    fam = rng.integers(0, cfg.vocab_size, 6, dtype=np.int32)  # hot family
+    dup = np.concatenate(
+        [fam, rng.integers(0, cfg.vocab_size, 3, dtype=np.int32)])
+    prompts = [dup.copy(), dup.copy(),     # exact duplicates (COW path)
+               np.concatenate([fam, rng.integers(0, cfg.vocab_size, 2,
+                                                 dtype=np.int32)]),
+               rng.integers(0, cfg.vocab_size, 7, dtype=np.int32)]
+    group_bytes = (model.cfg.num_layers * 2 * 4 * model.cfg.num_kv_heads
+                   * model.cfg.head_dim
+                   * np.dtype(model.compute_dtype).itemsize)
+
+    def mk_engine(share_tokens):
+        return ServingEngine(model, params, ServeConfig(
+            max_len=16, page_tokens=4,
+            engine_spec=EngineSpec(engine="paged",
+                                   kv_hbm_bytes=pool_pages * group_bytes,
+                                   kv_hot_window=4, drain_shards=2,
+                                   prefix_cache_tokens=share_tokens),
+            max_batch_seqs=max_batch_seqs, prefill_chunk_tokens=chunk))
+
+    ref = [Request(rid=i, prompt=p.copy(), max_new=max_new)
+           for i, p in enumerate(prompts)]
+    mk_engine(0).generate_sequential(ref)
+    want = {r.rid: list(r.generated) for r in ref}
+
+    eng = mk_engine(1 << 12)
+    assert eng.pooled and eng.prefix_cache is not None
+    reqs = [Request(rid=i, prompt=p.copy(), max_new=max_new)
+            for i, p in enumerate(prompts)]
+    eng.generate([reqs[i] for i in arrival_perm])
+    for r in reqs:
+        assert r.done and r.generated == want[r.rid], r.rid
+    # churn never strands a page: live user refs all released, the pool is
+    # exactly free + idle-index, monotone counters never ran backwards
+    kv = eng.tiered
+    assert not kv.page_users
+    assert len(kv.free_pages) + kv._idle_index_pages() == kv.pool_pages
+
+
 @settings(max_examples=15)
 @given(st.integers(2, 64))
 def test_monotone_capacity_no_data_loss(cache_pages):

@@ -360,7 +360,7 @@ def test_pooled_preempt_restore_frees_and_rebuilds_pages():
     kv.release(0)
     kv.release(1)
     assert len(kv.free_pages) == kv.pool_pages
-    assert not kv.phys_owner and not kv.host_pages
+    assert not kv.page_users and not kv.host_pages
 
 
 def test_pooled_victim_hint_prefers_most_pages():
