@@ -179,6 +179,13 @@ class ServeWorkload:
     # write exercises copy-on-write (random-tail requests diverge at a page
     # boundary and never hit it)
     dup_frac: float = 0.0
+    # speculative decode twin (ISSUE 7): > 0 makes each decode step commit
+    # 1 + a tokens per running row, a drawn uniformly from [0, k] — the
+    # accepted-run distribution of a draft-and-verify tick. Keeps the
+    # pool-pressure / preemption sizing honest for speculative serving
+    # without running a model here (the real acceptance metric comes from
+    # kvcache_bench's ServingEngine run)
+    speculate_k: int = 0
     # sharing-aware pool floor for the bench (pages). With a prefix cache
     # the steady working set depends on the realized family draw (Zipf
     # popularity + dup mask), not just the shape maxima, so each preset
@@ -360,13 +367,27 @@ def run_serve_workload(kv, kvspec, wl: ServeWorkload, clock) -> dict:
                 continue
             break
         step += 1
-        # one batched decode step: a token for every running sequence
-        kv.append_many([
-            (e["rid"], rng.standard_normal(shape).astype(kvspec.dtype))
-            for e in running])
-        total_tokens += len(running)
-        for e in running:
-            e["decoded"] += 1
+        # one batched decode step: a token for every running sequence —
+        # plus its accepted draft run when the workload speculates
+        if wl.speculate_k > 0:
+            accept = {e["rid"]: 1 + int(rng.integers(0, wl.speculate_k + 1))
+                      for e in running}
+            kv.append_many([
+                (e["rid"], rng.standard_normal(
+                    (kvspec.num_layers, 2, accept[e["rid"]],
+                     kvspec.kv_heads,
+                     kvspec.head_dim)).astype(kvspec.dtype))
+                for e in running])
+            for e in running:
+                total_tokens += accept[e["rid"]]
+                e["decoded"] += accept[e["rid"]]
+        else:
+            kv.append_many([
+                (e["rid"], rng.standard_normal(shape).astype(kvspec.dtype))
+                for e in running])
+            total_tokens += len(running)
+            for e in running:
+                e["decoded"] += 1
         if wl.gather_every and step % wl.gather_every == 0:
             for e in running:
                 kv.read(e["rid"], layer=step % kvspec.num_layers)

@@ -23,6 +23,15 @@ mixed-batch ticks vs the batch=1-per-chunk baseline) and writes everything
 to a stable ``BENCH_serve.json`` at the repo root so the serving perf
 trajectory is tracked across PRs. ``--fused-gate`` (CI) exits nonzero if
 the fused path is not faster than the ``fuse_ticks=False`` baseline.
+
+``--speculate-k K`` additionally runs the model-backed draft-and-verify
+comparison (ISSUE 7): the real ServingEngine on a decode-heavy request
+set with ``speculate_k=K`` vs speculation off, recorded under
+``speculative`` in BENCH_serve.json. ``--spec-gate`` (CI) exits nonzero
+unless the runs are token-identical AND more than one committed token
+rides each decode row-launch. The same flag makes the serve-workload
+twins commit ``1 + a ∈ [1, 1+K]`` tokens per decode step, keeping their
+pool-pressure sizing honest for speculative serving.
 """
 from __future__ import annotations
 
@@ -59,13 +68,14 @@ def _pool_hit_rate(stats: dict):
 
 def bench(engine: str, *, layers=8, kv_heads=8, head_dim=128, tokens=512,
           workload="decode", drain_shards=1, seed=0, smoke=False,
-          pool=True) -> dict:
+          pool=True, speculate_k=0) -> dict:
     kvspec = KVSpec(num_layers=layers, kv_heads=kv_heads, head_dim=head_dim,
                     page_tokens=16)
     clock = SimClock()
     budget = 2 << 20
     if workload in serve_workloads():
-        wl = dataclasses.replace(serve_workloads()[workload], seed=seed)
+        wl = dataclasses.replace(serve_workloads()[workload], seed=seed,
+                                 speculate_k=speculate_k)
         if smoke:
             wl = wl.smoke()
         # the budget must hold MORE than one worst-case prompt, or a single
@@ -103,6 +113,7 @@ def bench(engine: str, *, layers=8, kv_heads=8, head_dim=128, tokens=512,
             kv.init_pool(pages=max(budget_pages, min_pages))
             pooled = True
         serve = run_serve_workload(kv, kvspec, wl, clock)
+        serve["speculate_k"] = wl.speculate_k
         appended = serve.pop("appended_tokens")
         per_token = kvspec.token_bytes * layers
         serve["pool_hit_rate"] = _pool_hit_rate(kv.stats)
@@ -212,6 +223,90 @@ def bench_fused_ticks(*, smoke=False, arch="internlm2-1.8b-smoke", seed=0,
     return rows
 
 
+def bench_speculative(*, smoke=False, arch="internlm2-1.8b-smoke", seed=0,
+                      k=4) -> dict:
+    """Model-backed draft-and-verify comparison (ISSUE 7's acceptance
+    measurement): the real ServingEngine + Scheduler over the smoke model
+    on a decode-heavy request set — short prompts, long completions, the
+    regime speculation exists for — once with ``speculate_k=k`` and once
+    with speculation off. Both runs must produce identical tokens (greedy
+    draft-and-verify is exact); the win is structural: committed decode
+    tokens per decode row-launch, ``(decode_rows + spec_accepted) /
+    decode_rows`` — exactly 1.0 with speculation off, > 1.0 iff verified
+    drafts actually ride existing launches. Wall clock is recorded too,
+    but the CI gate (``--spec-gate``) reads only the deterministic ratio.
+
+    Each path runs twice on one engine and measures the second (warm-jit)
+    pass, same discipline as :func:`bench_fused_ticks`. The untrained
+    smoke model's greedy argmax falls into repetitive loops — which is
+    precisely the traffic the self-drafting n-gram proposer feeds on, so
+    acceptance here is deterministic, not a tuning accident.
+    """
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import Request, ServeConfig, ServingEngine
+
+    cfg = get_config(arch)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    n_req = 3 if smoke else 4
+    prompt_lens = [int(x) for x in rng.choice((8, 12), n_req)]
+    prompts = [rng.integers(0, cfg.vocab_size, n, dtype=np.int32)
+               for n in prompt_lens]
+    max_new = 24 if smoke else 48
+    max_len = max(prompt_lens) + max_new + 1
+    max_len += -max_len % 8
+
+    def run(kk: int) -> dict:
+        eng = ServingEngine(model, params, ServeConfig(
+            max_len=max_len, page_tokens=8,
+            engine_spec=EngineSpec(engine="paged", kv_hbm_bytes=256 << 20),
+            max_batch_seqs=4, speculate_k=kk))
+
+        def one_pass():
+            reqs = [Request(rid=i, prompt=prompts[i].copy(),
+                            max_new=max_new) for i in range(n_req)]
+            t0 = time.perf_counter()
+            eng.generate(reqs)
+            return time.perf_counter() - t0, [list(r.generated)
+                                              for r in reqs]
+
+        one_pass()                      # rep 0: compile every step shape
+        s0 = eng.stats()                # engine counters are cumulative;
+        wall, tokens = one_pass()       # scheduler counters are per-pass
+        s1 = eng.stats()
+        decode_rows = s1["sched_decode_rows"]
+        accepted = s1["spec_accepted"] - s0["spec_accepted"]
+        proposed = s1["spec_proposed"] - s0["spec_proposed"]
+        committed = sum(len(t) for t in tokens)
+        return {"speculate_k": kk, "wall_s": wall,
+                "generated_tokens": committed,
+                "ticks": s1["sched_ticks"],
+                "step_calls": s1["step_calls"] - s0["step_calls"],
+                "decode_rows": decode_rows,
+                "spec_proposed": proposed, "spec_accepted": accepted,
+                "acceptance_rate": accepted / max(proposed, 1),
+                "accepted_tokens_per_launch":
+                    (decode_rows + accepted) / max(decode_rows, 1),
+                "tokens_per_s": committed / max(wall, 1e-9),
+                "_tokens": tokens}
+
+    spec = run(k)
+    base = run(0)
+    rows = {"speculative": spec, "baseline": base,
+            "token_identical": spec.pop("_tokens") == base.pop("_tokens"),
+            "speedup_wall": (spec["tokens_per_s"]
+                             / max(base["tokens_per_s"], 1e-9)),
+            "launch_ratio": (base["step_calls"]
+                             / max(spec["step_calls"], 1)),
+            "config": {"arch": arch, "requests": n_req,
+                       "prompt_lens": prompt_lens, "max_new": max_new,
+                       "speculate_k": k, "smoke": smoke}}
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--tokens", type=int, default=512)
@@ -241,6 +336,16 @@ def main(argv=None):
                          "workload actually shared — prefix hit rate > 0 "
                          "and at least one boundary-page copy-on-write on "
                          "the pooled engine")
+    ap.add_argument("--speculate-k", type=int, default=0,
+                    help="run the model-backed draft-and-verify comparison "
+                         "at this k (0 = skip) and commit 1 + a∈[0,k] "
+                         "tokens per decode step in the serve-workload "
+                         "twins")
+    ap.add_argument("--spec-gate", action="store_true",
+                    help="CI: exit nonzero unless speculation commits more "
+                         "than one token per decode row-launch "
+                         "(accepted-tokens-per-launch > 1.0) with tokens "
+                         "identical to the non-speculative run")
     ap.add_argument("--out", default="artifacts/kvcache_bench.json")
     ap.add_argument("--serve-out", default="BENCH_serve.json",
                     help="repo-root serving perf record (written whenever "
@@ -252,12 +357,15 @@ def main(argv=None):
                 if args.workloads == "all" else args.workloads.split(","))
     rows = [bench(e, tokens=args.tokens, workload=w,
                   drain_shards=args.drain_shards, smoke=args.smoke,
-                  pool=args.pool)
+                  pool=args.pool, speculate_k=args.speculate_k)
             for w in wl_names for e in engines]
     serve_rows = [r for r in rows if r["workload"] in serve_workloads()]
     fused = None
     if serve_rows and args.fused_bench:
         fused = bench_fused_ticks(smoke=args.smoke)
+    spec = None
+    if args.speculate_k > 0:
+        spec = bench_speculative(smoke=args.smoke, k=args.speculate_k)
     print("design,workload,sim_time_s,write_amp,host_read_MB,"
           "tput_tok_s,p50_ms,p99_ms,preempts,pool_hit,d2h_saved_MB")
     for r in rows:
@@ -281,17 +389,28 @@ def main(argv=None):
               f"{fused['fused']['step_calls']} vs "
               f"{fused['unfused']['step_calls']} launches "
               f"(x{fused['launch_ratio']:.2f})")
+    if spec is not None:
+        sp = spec["speculative"]
+        print(f"speculative k={sp['speculate_k']}: "
+              f"{sp['accepted_tokens_per_launch']:.2f} accepted tokens "
+              f"per decode launch "
+              f"(acceptance {sp['acceptance_rate']:.2f}, "
+              f"{sp['step_calls']} vs "
+              f"{spec['baseline']['step_calls']} launches, "
+              f"x{spec['speedup_wall']:.2f} wall, "
+              f"token-identical={spec['token_identical']})")
     # write the artifacts BEFORE the gates so a failing CI run still leaves
     # the evidence of what regressed
     out = Path(args.out)
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(rows, indent=1))
-    if serve_rows:
+    if serve_rows or spec is not None:
         # merge into the existing record so separate CI steps (the
-        # serve/prefill_heavy smoke, then the shared_prefix smoke) compose
-        # instead of clobbering each other: this run's rows replace entries
-        # with the same (design, workload); a prior fused comparison is
-        # kept when this run skipped it
+        # serve/prefill_heavy smoke, the shared_prefix smoke, the
+        # speculative smoke) compose instead of clobbering each other:
+        # this run's rows replace entries with the same (design,
+        # workload); a prior fused/speculative comparison is kept when
+        # this run skipped it
         serve_path = Path(args.serve_out)
         prior = {}
         if serve_path.exists():
@@ -305,7 +424,9 @@ def main(argv=None):
         serve_path.write_text(json.dumps(
             {"engines": keep + serve_rows,
              "fused_vs_unfused": (prior.get("fused_vs_unfused")
-                                  if fused is None else fused)},
+                                  if fused is None else fused),
+             "speculative": (prior.get("speculative")
+                             if spec is None else spec)},
             indent=1, sort_keys=True))
     if any(r["workload"] in serve_workloads() and not r["preempts"]
            for r in rows):
@@ -348,6 +469,28 @@ def main(argv=None):
                   f"{fused['speedup_wall']:.2f} <= 1 on this runner "
                   f"(launch ratio x{fused['launch_ratio']:.2f} still "
                   f"holds)")
+    if args.spec_gate:
+        if spec is None:
+            raise SystemExit("--spec-gate needs --speculate-k > 0")
+        # correctness first: speculation is only legal because it is exact
+        if not spec["token_identical"]:
+            raise SystemExit(
+                "speculative run produced DIFFERENT tokens than the "
+                "non-speculative run — draft-and-verify is no longer exact")
+        # then the DETERMINISTIC structural win (committed decode tokens
+        # per decode row-launch), not wall clock — same reasoning as
+        # --fused-gate: a noisy runner must not flip the verdict
+        atpl = spec["speculative"]["accepted_tokens_per_launch"]
+        if atpl <= 1.0:
+            raise SystemExit(
+                f"speculation commits {atpl:.2f} tokens per decode "
+                f"row-launch (<= 1.0): no draft ever survived "
+                f"verification — the win this gate exists to prevent "
+                f"regressing")
+        if spec["speedup_wall"] <= 1.0:
+            print(f"WARNING: speculative wall speedup x"
+                  f"{spec['speedup_wall']:.2f} <= 1 on this runner "
+                  f"({atpl:.2f} accepted tokens per launch still holds)")
     return rows
 
 

@@ -220,10 +220,24 @@ class KVCacheEngine(abc.ABC):
             f"KV engine {self.engine_name!r} has no paged pool")
 
     def commit_step(self, pool_k, pool_v, seqs: Sequence[int],
-                    n_tokens: Sequence[int]) -> None:
-        """Accept updated pool arrays after the model scattered
-        ``n_tokens[i]`` new tokens for ``seqs[i]`` in one fused step;
-        advances ``seq_len`` and the resident-page accounting."""
+                    n_tokens: Sequence[int],
+                    prepared: Optional[Sequence[int]] = None) -> None:
+        """Accept updated pool arrays after the model scattered new tokens
+        for ``seqs[i]`` in one fused step; advances ``seq_len`` and the
+        resident-page accounting.
+
+        Partial commit (speculative decode): ``n_tokens[i]`` is the number
+        of tokens to COMMIT, which may be less than the ``prepared[i]``
+        tokens :meth:`prepare_step` was sized for when a speculative tail
+        was rejected. Pass the original ``prepare_step`` counts as
+        ``prepared`` to roll the tail back: ``seq_len`` advances by the
+        accepted count only and pages allocated solely for the rejected
+        tail are returned to the free list, so pool pressure never reflects
+        tokens that were never committed. Rejected KV left inside retained
+        pages is invisible (kernels mask at or past ``lengths``) and is
+        overwritten in place by the sequence's next committed tokens.
+        ``prepared=None`` (or ``prepared[i] == n_tokens[i]``) is the plain
+        full commit."""
         raise RuntimeError(
             f"KV engine {self.engine_name!r} has no paged pool")
 

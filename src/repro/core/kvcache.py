@@ -383,18 +383,52 @@ class PagedKVCache(_TieredKV):
         return tbl, lens
 
     def commit_step(self, pool_k, pool_v, seqs: Sequence[int],
-                    n_tokens: Sequence[int]) -> None:
+                    n_tokens: Sequence[int],
+                    prepared: Optional[Sequence[int]] = None) -> None:
+        """Commit ``n_tokens[i]`` tokens per sequence. With speculative
+        decode, ``n_tokens[i]`` may be SMALLER than the ``prepared[i]``
+        count :meth:`prepare_step` was sized for: the rejected tail's KV
+        was physically scattered (the HBM write is charged for every
+        prepared slot) but never becomes visible — ``seq_len`` advances by
+        the accepted count only, pages allocated solely for the tail go
+        back to the free list, and stale KV inside retained pages is
+        masked by the kernels (slots at or past ``lengths``) until the
+        next committed tokens overwrite it in place."""
         self.dev_k, self.dev_v = pool_k, pool_v
         per_tok = self._token_group_bytes()
         T = self.spec.page_tokens
-        for seq, n in zip(seqs, n_tokens):
+        for i, (seq, n) in enumerate(zip(seqs, n_tokens)):
             n = int(n)
+            prep = n if prepared is None else int(prepared[i])
             pos = self.seq_len.get(seq, 0)
             self.seq_len[seq] = pos + n
             for logical in range(pos // T, -(-(pos + n) // T)):
                 self.pool_lru.touch(self.block_table[seq][logical])
-            self.clock.charge(HBM, "write", n * per_tok)
+            self.clock.charge(HBM, "write", max(prep, n) * per_tok)
             self.stats["pool_appends"] += n
+            if prep > n:
+                self._rewind_step_pages(seq)
+
+    def _rewind_step_pages(self, seq: int) -> None:
+        """Speculative rollback: drop trailing block-table pages past the
+        committed length. Such pages are this step's fresh allocations —
+        sole-user, resident, unpinned (``_extend_table`` never hands out a
+        shared or index-held page) — so they return straight to the free
+        list; the guard stops at anything that doesn't match that shape."""
+        T = self.spec.page_tokens
+        keep = max(-(-self.seq_len.get(seq, 0) // T), 0)
+        table = self.block_table.get(seq, [])
+        while len(table) > keep:
+            phys = table[-1]
+            users = self.page_users.get(phys, {})
+            if phys < 0 or phys in self.trie_refs or users.keys() - {seq}:
+                break
+            table.pop()
+            users.pop(seq, None)
+            if not users:
+                self.page_users.pop(phys, None)
+                self.pool_lru.remove(phys)
+                self.free_pages.append(phys)
 
     def alloc_prefill(self, seq: int, n_tokens: int):
         pinned = {seq}

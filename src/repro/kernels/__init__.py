@@ -38,6 +38,20 @@ and the pooled serving decode path):
   (batch-width padding on the bucketing ladder) are skipped entirely and
   produce exactly zero. ``q_len == 1`` is bit-for-bit the plain decode
   entry (pinned by ``kernel_bench --smoke``).
+* **Speculative decode rows** (draft-and-verify, ISSUE 7) — a decode row
+  may carry ``q_len = 1 + k`` query slots: the committed next token plus
+  ``k`` unverified drafts, with their KV already scattered into the pool
+  and ``lengths[b]`` counting the whole block. No new kernel semantics:
+  slot ``i`` sits at ``lengths[b] - q_lens[b] + i`` exactly like a prefill
+  chunk, so verification (does slot ``i-1``'s argmax equal draft ``i``?)
+  falls out of the one fused launch. On rejection the engine rolls
+  ``lengths`` back to the committed count and frees now-empty trailing
+  pages; the rejected KV left inside retained pages and the stale table
+  tail are invisible to the next launch because ``lengths`` is the only
+  visibility authority — the same discipline that masks padding scatters
+  (``mode="drop"``). Pinned by ``tests/test_kernels.py``
+  (commit-one-more-slot launches are bit-for-bit prefixes of the block
+  launch; poisoned rolled-back slots change nothing).
 * **Bucketing ladder** — callers (the serving engine) pad batch width and
   ``Qmax`` up to a power-of-two ladder so the jitted entries stop
   recompiling per width; the padding rows/slots are masked by

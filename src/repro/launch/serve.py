@@ -74,6 +74,11 @@ def main(argv=None):
     ap.add_argument("--shared-prefix-tokens", type=int, default=0,
                     help="prepend this many identical tokens to every "
                          "prompt (exercises the prefix cache)")
+    ap.add_argument("--speculate-k", type=int, default=0,
+                    help="speculative decode: up to k self-drafted tokens "
+                         "per decode row per fused tick, verified in the "
+                         "same launch (0 = off; tokens are identical "
+                         "either way)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -93,7 +98,8 @@ def main(argv=None):
         max_batch_tokens=args.max_batch_tokens,
         paged_decode=args.paged_decode,
         prefill_chunk_tokens=args.prefill_chunk_tokens,
-        fuse_ticks=args.fuse_ticks))
+        fuse_ticks=args.fuse_ticks,
+        speculate_k=args.speculate_k))
 
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(0, cfg.vocab_size, args.shared_prefix_tokens,

@@ -2,5 +2,7 @@
 offload and preemption-under-HBM-pressure (paper's designs, serving tier)."""
 from repro.serving.engine import Request, ServeConfig, ServingEngine
 from repro.serving.scheduler import Scheduler
+from repro.serving.speculative import DraftProposer, NGramProposer
 
-__all__ = ["Request", "ServeConfig", "ServingEngine", "Scheduler"]
+__all__ = ["Request", "ServeConfig", "ServingEngine", "Scheduler",
+           "DraftProposer", "NGramProposer"]

@@ -99,6 +99,15 @@ class ServeConfig:
     # advance (≥1 token or chunk) within this many consecutive running
     # ticks, else the scheduler raises — the chunk-row starvation pin
     progress_tick_limit: int = 4
+    # speculative multi-token decode (ISSUE 7): each running decode row
+    # proposes up to k draft tokens per fused tick, verified by the same
+    # ragged forward; accepted runs commit, rejected tails roll back.
+    # 0 = off. Greedy outputs stay token-identical either way.
+    speculate_k: int = 0
+    # proposer override: any DraftProposer (serving/speculative.py) — e.g.
+    # a small draft model from repro/configs; None → the self-drafting
+    # NGramProposer
+    draft_proposer: Optional[object] = None
 
     def resolved_spec(self) -> EngineSpec:
         """One EngineSpec no matter which knobs the caller used.
@@ -213,6 +222,26 @@ class ServingEngine:
             self._step_paged_ragged = jax.jit(model.step_paged_ragged)
             self._scatter_prefill = jax.jit(batching.scatter_prefill_pages,
                                             static_argnums=5)
+        # ----------------------------------------- speculative decode (I7)
+        # draft-and-verify over the ragged entries: decode rows carry
+        # 1 + k query slots, the per-slot logits of the SAME fused forward
+        # verify the drafts, and rejected tails roll back (partial commit
+        # on the pooled path, truncated mirror transfer on the dense path)
+        self.speculate_k = max(int(cfg.speculate_k), 0)
+        if self.speculate_k and not self.fused:
+            raise ValueError(
+                f"speculate_k={self.speculate_k} needs fused ragged ticks "
+                f"(fuse_ticks=True and a model family with a ragged step); "
+                f"got fuse_ticks={cfg.fuse_ticks}, "
+                f"supports_ragged_step={model.supports_ragged_step()}")
+        self.proposer = None
+        if self.speculate_k:
+            if cfg.draft_proposer is not None:
+                self.proposer = cfg.draft_proposer
+            else:
+                from repro.serving.speculative import NGramProposer
+                self.proposer = NGramProposer()
+        self.spec_stats = {"spec_proposed": 0, "spec_accepted": 0}
         # ------------------------------------------ cross-request prefix cache
         # token-keyed radix index over shared pool pages (ISSUE 6): cache-hit
         # admission splices the block table instead of prefilling. Requires
@@ -257,20 +286,29 @@ class ServingEngine:
             [(rid, toks[i]) for i, rid in enumerate(rids)])
 
     def _mirror_step_ragged(self, rids: list, cache, ctx, q_lens,
-                            qmax: int) -> None:
+                            qmax: int, committed=None) -> None:
         """Mirror one fused mixed tick's new tokens: ONE on-device ragged
         gather, then at most TWO device→host transfers — the decode rows
         (``q_len == 1``) as exactly one fp16 token each (the PR 3 byte
         accounting, unchanged), and the chunk rows as one
         ``(n_chunk, Qmax, ...)`` block whose only padding is each chunk's
         own Qmax remainder. Per-row appends follow — a chunk row lands as
-        one multi-token append, so ``kvhybrid`` still routes it by size."""
+        one multi-token append, so ``kvhybrid`` still routes it by size.
+
+        ``committed`` (speculative decode) caps each row's transfer at its
+        accepted token count: a rejected draft tail is truncated ON DEVICE
+        before the block crosses the link, so it never reaches the mirror
+        and never inflates the byte accounting."""
         if "k" not in cache or not rids:
             return
+        committed = (list(q_lens) if committed is None
+                     else [int(c) for c in committed])
         toks_dev = self._gather_new_kv_ragged(
             cache["k"], cache["v"], jnp.asarray(ctx, jnp.int32), qmax)
-        dec = [i for i, m in enumerate(q_lens) if m == 1]
-        chk = [i for i, m in enumerate(q_lens) if m > 1]
+        dec = [i for i, m in enumerate(committed) if m == 1]
+        chk = [i for i, m in enumerate(committed)
+               if m > 1 and m == q_lens[i]]
+        part = [i for i, m in enumerate(committed) if 1 < m < q_lens[i]]
         items = []
         if dec:
             toks1 = np.asarray(toks_dev[jnp.asarray(dec), 0])
@@ -281,6 +319,10 @@ class ServingEngine:
             self.mirror_d2h_bytes += toksn.nbytes  # (n_chk, qmax, L, 2, K, D)
             items += [(rids[i], toksn[j, :q_lens[i]].transpose(1, 2, 0, 3, 4))
                       for j, i in enumerate(chk)]
+        for i in part:   # accepted run of a speculative row, tail dropped
+            tk = np.asarray(toks_dev[i, :committed[i]])
+            self.mirror_d2h_bytes += tk.nbytes     # (accepted, L, 2, K, D)
+            items.append((rids[i], tk.transpose(1, 2, 0, 3, 4)))
         # append in original row order (FIFO drain order is per-seq, but
         # keep the schedule deterministic)
         items.sort(key=lambda kv: rids.index(kv[0]))
@@ -373,7 +415,7 @@ class ServingEngine:
         device pool. Returns (logits, new cache rows).
         """
         if self.pooled:
-            logit_rows, rows = self.step_batch(
+            logit_rows, rows, _ = self.step_batch(
                 rids, caches, [np.asarray([t], np.int32) for t in tokens],
                 mirrored, fused=False)
             return jnp.concatenate(logit_rows, axis=0), rows
@@ -398,22 +440,61 @@ class ServingEngine:
             return True
         return self.tiered.can_place_step(rids, n_tokens)
 
+    def _verify_drafts(self, logits, tok_rows, q_lens, spec) -> list:
+        """Greedy draft verification against the SAME fused forward's
+        per-slot logits. Row ``i``'s tokens are ``[t0, d1..ds]``
+        (``s = spec[i]`` trailing drafts): slot ``j``'s argmax is the
+        greedy token after consuming token ``j``, so draft ``d_{j+1}`` is
+        accepted iff it equals ``argmax(slot j)`` AND every earlier draft
+        was — the longest accepted prefix is exactly the sequential greedy
+        run. Returns per-row committed counts (``1 + accepted``; chunk and
+        plain decode rows commit everything)."""
+        B = len(tok_rows)
+        committed = list(q_lens)
+        need = [i for i in range(B) if spec[i] > 0]
+        if not need:
+            return committed
+        args = np.asarray(jnp.argmax(logits[:B], axis=-1))   # (B, Qb)
+        for i in need:
+            q, s = q_lens[i], spec[i]
+            acc = 0
+            for j in range(s):
+                if int(tok_rows[i][q - s + j]) != int(args[i, q - s + j - 1]):
+                    break
+                acc += 1
+            committed[i] = q - s + acc
+            self.spec_stats["spec_proposed"] += s
+            self.spec_stats["spec_accepted"] += acc
+        return committed
+
     def step_batch(self, rids: list, caches: list, tok_rows: list,
-                   mirrored: bool, fused: bool = True):
+                   mirrored: bool, fused: bool = True,
+                   spec_lens: Optional[list] = None):
         """ONE fused forward over a mixed ragged batch — the tentpole
-        launch: decode rows carry 1 new token, prefill-chunk rows up to
+        launch: decode rows carry 1 new token (plus up to ``speculate_k``
+        draft tokens when speculation is on), prefill-chunk rows up to
         ``chunk_tokens``, and all of them attend in the same jitted step
         (``model.step_paged_ragged`` over the device pool, or
         ``model.step_ragged`` over the dense mirror). Batch width and Qmax
         pad up the power-of-two ladder; padding rows ride with
         ``q_len = 0`` and are masked end to end.
 
-        Returns (per-row logits at each row's LAST VALID slot — ``(1, 1,
-        V)`` each, what the next tick's argmax reads — and the new per-row
-        caches).
+        ``spec_lens[i]`` marks how many TRAILING tokens of ``tok_rows[i]``
+        are unverified drafts: they scatter speculatively (the same masked
+        ``mode="drop"`` discipline that protects padding), are verified
+        against this forward's own per-slot logits, and the rejected tail
+        rolls back before anything else sees it — partial ``commit_step``
+        on the pooled path, truncated mirror transfer + a rewound ``pos``
+        on the dense path.
+
+        Returns ``(logit_rows, new_rows, committed)``: per-row logits for
+        each row's committed slots (``(1, committed[i], V)`` — the LAST
+        slot is what the next tick's argmax reads), the new per-row
+        caches, and the per-row committed token counts.
         """
         B = len(rids)
         q_lens = [len(t) for t in tok_rows]
+        spec = [0] * B if spec_lens is None else [int(s) for s in spec_lens]
         Bb = batching.bucket_pow2(B)
         Qb = batching.bucket_pow2(max(q_lens))
         tokens = np.zeros((Bb, Qb), np.int32)
@@ -444,20 +525,35 @@ class ServingEngine:
             self._count_step("pool", Bb, Qb)
             logits, out = self._step_paged_ragged(
                 self.params, cache, tok_j, jnp.asarray(ctx_p), qlen_j)
+            committed = self._verify_drafts(logits, tok_rows, q_lens, spec)
             self.tiered.commit_step(out["pool_k"], out["pool_v"], rids,
-                                    q_lens)
-            new_rows = [{"pos": out["pos"][i:i + 1]} for i in range(B)]
+                                    committed, prepared=q_lens)
+            new_rows = [
+                {"pos": out["pos"][i:i + 1]} if committed[i] == q_lens[i]
+                else {"pos": jnp.asarray([int(ctx[i]) + committed[i]],
+                                         jnp.int32)}
+                for i in range(B)]
         else:
             batch = batching.concat_rows(caches + [caches[0]] * (Bb - B))
             ctx = batch["pos"]
             self._count_step("mirror", Bb, Qb)
             logits, nbatch = self._step_ragged(self.params, batch, tok_j,
                                                ctx, qlen_j)
+            committed = self._verify_drafts(logits, tok_rows, q_lens, spec)
             if mirrored:
-                self._mirror_step_ragged(rids, nbatch, ctx, q_lens, Qb)
+                self._mirror_step_ragged(rids, nbatch, ctx, q_lens, Qb,
+                                         committed)
             new_rows = [batching.split_row(nbatch, i) for i in range(B)]
-        last = logits[jnp.arange(Bb), jnp.maximum(qlen_j - 1, 0)]  # (Bb, V)
-        return [last[i:i + 1, None, :] for i in range(B)], new_rows
+            ctx_np = np.asarray(ctx)
+            for i in range(B):
+                if committed[i] != q_lens[i]:
+                    # rewind past the rejected tail: its dense-cache KV is
+                    # masked (kv_pos > pos) and overwritten in place by the
+                    # row's next committed tokens
+                    new_rows[i]["pos"] = jnp.asarray(
+                        [int(ctx_np[i]) + committed[i]], jnp.int32)
+        logit_rows = [logits[i:i + 1, :committed[i]] for i in range(B)]
+        return logit_rows, new_rows, committed
 
     def extend_one(self, rid: int, cache, toks: np.ndarray, start: int,
                    mirrored: bool):
@@ -529,4 +625,5 @@ class ServingEngine:
     def stats(self) -> dict:
         return {"sim_time_s": self.clock.now,
                 "mirror_d2h_bytes": self.mirror_d2h_bytes,
-                **self.jit_stats, **self.sched_stats, **self.tiered.stats}
+                **self.jit_stats, **self.spec_stats, **self.sched_stats,
+                **self.tiered.stats}

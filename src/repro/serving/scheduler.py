@@ -125,6 +125,11 @@ class SchedulerStats:
     spliced: int = 0                   # admissions served from the prefix
                                        # cache (block-table splice, zero
                                        # prefill compute for the covered part)
+    decode_rows: int = 0               # decode row-launches: one per decode
+                                       # row per tick; with speculation each
+                                       # commits 1 + accepted tokens, so
+                                       # committed/decode_rows > 1 is the
+                                       # accepted-tokens-per-launch win
 
     def as_dict(self) -> dict:
         return {f"sched_{k}": v for k, v in self.__dict__.items()}
@@ -262,6 +267,7 @@ class Scheduler:
             nxt = int(jnp.argmax(r.logits[:, -1], -1)[0])
             r.req.generated.append(nxt)
             tokens.append(nxt)
+            self.stats.decode_rows += 1
         # one batch = one model family, so either every row mirrors or none
         logits, caches = self.engine.decode_batch(
             [r.req.rid for r in rows], [r.cache for r in rows], tokens,
@@ -271,50 +277,91 @@ class Scheduler:
             r.logits = logits[i:i + 1]
             r.length += 1
 
+    def _plan_decode(self, r: _Running, k: int):
+        """Plan a decode row's tick: argmax its pending logits (the one
+        token sequential decode would emit — nothing is committed here, so
+        a row the tight-pool guard sheds re-plans identically later) and,
+        with speculation on, propose up to ``k`` drafts capped so the row
+        can neither outrun ``max_new`` nor its ``max_len`` cache/page span.
+        The proposer sees the full committed stream plus the argmaxed
+        token — all derivable state, so preemption needs no proposer
+        hooks."""
+        nxt = int(jnp.argmax(r.logits[:, -1], -1)[0])
+        drafts: list = []
+        if k:
+            room = min(self.engine.cfg.max_len - (r.length + 1),
+                       r.req.max_new - len(r.req.generated) - 1)
+            if room > 0:
+                hist = ([int(t) for t in r.req.prompt]
+                        + [int(t) for t in r.req.generated] + [nxt])
+                drafts = self.engine.proposer.propose(
+                    r.req.rid, hist, min(k, room))
+        return nxt, drafts
+
     def _fused_step(self) -> None:
         """The tentpole: ONE fused forward over the whole running batch —
-        decode rows argmax their pending logits and contribute 1 token,
-        mid-prefill rows contribute their next chunk (no more batch=1 chunk
-        launches), and everyone advances in the same ragged launch through
+        decode rows argmax their pending logits and contribute ``1 + k``
+        tokens (the next token plus up to ``speculate_k`` drafts, verified
+        by the same launch's per-slot logits), mid-prefill rows contribute
+        their next chunk (no more batch=1 chunk launches), and everyone
+        advances in the same ragged launch through
         :meth:`ServingEngine.step_batch`. A chunk row whose tail empties
         this tick comes out holding its prompt-final logits, exactly as
-        one-shot prefill would have left it."""
+        one-shot prefill would have left it; a speculative row comes out
+        holding its last ACCEPTED slot's logits, exactly as sequential
+        decode would after the same tokens."""
         for r in self.running:
             if r.pending is not None and not len(r.pending):
                 r.pending = None
+        # plan every decode row's tokens up front so the tight-pool guard
+        # below sheds against the true per-row slot counts (1 + drafts),
+        # not an assumed single token
+        k = self.engine.speculate_k
+        plan = {r.req.rid: self._plan_decode(r, k)
+                for r in self.running if r.pending is None}
         # tight-pool guard: prepare_step pins every batch row while it
         # allocates chunk pages, so a pool that cannot place this tick's
         # chunks with the whole batch pinned must shed a row FIRST —
         # graceful preemption instead of the pool-exhausted hard error.
         # Placement beats the min_running floor here (an unplaceable step
         # makes no progress at all); the liveness floor guarantees a lone
-        # row always places, so shedding to one row always terminates.
+        # row always places (the draft cap keeps even a speculative row
+        # inside one max_len page span), so shedding always terminates.
         while len(self.running) > 1 and \
                 not self.engine.can_step_fused(
                     [r.req.rid for r in self.running],
                     [self._chunk_len(r.pending) if r.pending is not None
-                     else 1 for r in self.running]):
+                     else 1 + len(plan[r.req.rid][1])
+                     for r in self.running]):
             self._preempt_one()
-        rows, toks = [], []
+        rows, toks, spec = [], [], []
         for r in self.running:
             if r.pending is not None:
                 m = self._chunk_len(r.pending)
                 rows.append(r)
                 toks.append(np.asarray(r.pending[:m], np.int32))
+                spec.append(0)
                 self.stats.prefill_chunks += 1
             else:
-                nxt = int(jnp.argmax(r.logits[:, -1], -1)[0])
+                nxt, drafts = plan[r.req.rid]
                 r.req.generated.append(nxt)
                 rows.append(r)
-                toks.append(np.asarray([nxt], np.int32))
-        logits, caches = self.engine.step_batch(
+                toks.append(np.asarray([nxt] + drafts, np.int32))
+                spec.append(len(drafts))
+                self.stats.decode_rows += 1
+        logits, caches, committed = self.engine.step_batch(
             [r.req.rid for r in rows], [r.cache for r in rows], toks,
-            rows[0].mirrored)
+            rows[0].mirrored, spec_lens=spec)
         self.stats.fused_ticks += 1
         for i, r in enumerate(rows):
             r.cache = caches[i]
             r.logits = logits[i]
-            m = len(toks[i])
+            m = committed[i]
+            if spec[i]:
+                # the argmaxed token is already in generated; the accepted
+                # drafts (tokens 1..m-1 of the row) extend it — the exact
+                # sequential greedy run, rejected tail already rolled back
+                r.req.generated.extend(int(t) for t in toks[i][1:m])
             r.length += m
             if r.pending is not None:
                 r.pending = r.pending[m:] if m < len(r.pending) else None
@@ -356,6 +403,8 @@ class Scheduler:
                 r.req.done = True
                 if r.mirrored:
                     self.engine.tiered.release(r.req.rid)
+                if self.engine.proposer is not None:
+                    self.engine.proposer.drop(r.req.rid)
                 self.stats.finished += 1
             else:
                 still.append(r)

@@ -189,15 +189,17 @@ def _serve_model():
     max_new=st.integers(1, 4),
     max_batch_seqs=st.integers(1, 3),
     budget_tokens=st.sampled_from([6, 12, 1 << 20]),
+    speculate_k=st.sampled_from([0, 1, 2, 4]),
     seed=st.integers(0, 3),
 )
 def test_scheduler_matches_sequential_for_any_schedule(
         n_requests, arrival_perm, max_new, max_batch_seqs, budget_tokens,
-        seed):
-    """Random arrival schedules × batch widths × HBM budgets: the
-    continuous-batching scheduler's greedy tokens equal the sequential
-    reference for every registered KV engine (tiny budgets force
-    preempt/restore cycles mid-decode; they must be invisible)."""
+        speculate_k, seed):
+    """Random arrival schedules × batch widths × HBM budgets × speculation
+    depths: the continuous-batching scheduler's greedy tokens equal the
+    sequential reference for every registered KV engine (tiny budgets
+    force preempt/restore cycles mid-decode; speculative drafts and their
+    rollbacks must be just as invisible)."""
     from repro.serving import Request, ServeConfig, ServingEngine
     cfg, model, params = _serve_model()
     rng = np.random.default_rng(seed)
@@ -213,7 +215,7 @@ def test_scheduler_matches_sequential_for_any_schedule(
             engine_spec=EngineSpec(engine=name,
                                    kv_hbm_bytes=budget_tokens * token_bytes,
                                    kv_hot_window=4, drain_shards=2),
-            max_batch_seqs=max_batch_seqs))
+            max_batch_seqs=max_batch_seqs, speculate_k=speculate_k))
 
     ref = [Request(rid=i, prompt=p.copy(), max_new=max_new)
            for i, p in enumerate(prompts)]
@@ -237,15 +239,19 @@ def test_scheduler_matches_sequential_for_any_schedule(
     max_batch_seqs=st.integers(2, 4),
     pool_pages=st.sampled_from([5, 16]),
     chunk=st.sampled_from([None, 5]),
+    speculate_k=st.sampled_from([0, 1, 2, 4]),
     seed=st.integers(0, 3),
 )
 def test_prefix_sharing_matches_sequential_for_any_schedule(
-        arrival_perm, max_new, max_batch_seqs, pool_pages, chunk, seed):
-    """ISSUE 6 invariant: Zipf-style prompt reuse (hot prefix families plus
-    exact duplicates) through the prefix cache is token-identical to the
-    sequential reference under ANY admission order, batch width, chunked
-    prefill, and a pool tight enough to force preemption and refcount-aware
-    spills — splices, COWs, and index evictions must all be invisible."""
+        arrival_perm, max_new, max_batch_seqs, pool_pages, chunk,
+        speculate_k, seed):
+    """ISSUE 6 invariant, extended with the ISSUE 7 axis: Zipf-style prompt
+    reuse (hot prefix families plus exact duplicates) through the prefix
+    cache is token-identical to the sequential reference under ANY
+    admission order, batch width, chunked prefill, speculation depth, and
+    a pool tight enough to force preemption and refcount-aware spills —
+    splices, COWs, index evictions, and speculative rollbacks must all be
+    invisible."""
     from repro.serving import Request, ServeConfig, ServingEngine
     cfg, model, params = _serve_model()
     rng = np.random.default_rng(seed)
@@ -267,7 +273,8 @@ def test_prefix_sharing_matches_sequential_for_any_schedule(
                                    kv_hbm_bytes=pool_pages * group_bytes,
                                    kv_hot_window=4, drain_shards=2,
                                    prefix_cache_tokens=share_tokens),
-            max_batch_seqs=max_batch_seqs, prefill_chunk_tokens=chunk))
+            max_batch_seqs=max_batch_seqs, prefill_chunk_tokens=chunk,
+            speculate_k=speculate_k))
 
     ref = [Request(rid=i, prompt=p.copy(), max_new=max_new)
            for i, p in enumerate(prompts)]

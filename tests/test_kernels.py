@@ -346,6 +346,96 @@ if given is not None:
         _dead_pages_body(lens)
 
 
+def test_ragged_speculative_block_bitwise_vs_sequential_decode():
+    """A speculative decode row — q_len = 1 + k query slots over KV that
+    was already scattered for the whole block — must equal 1 + k
+    SUCCESSIVE commit-one-more-slot launches bit for bit: the launch with
+    ``lengths = base + i + 1, q_lens = i + 1`` (what a sequential tick
+    sequence sees after committing ``i`` tokens) reproduces slots
+    ``0..i`` of the full block exactly. The successive launches keep the
+    padded query shape fixed — crossing shapes changes the score-matmul
+    reduction order by a ulp, which is why the shape-crossing pin lives
+    at q_len=1 (``test_ragged_qlen1_is_bitwise_decode_kernel``). Against
+    the plain decode entry, slot ``i`` at position ``lengths - q_len + i``
+    matches a decode of length ``base + i + 1`` to float32 tolerance."""
+    L, B, H, K, D, T, P, MP = 2, 3, 8, 4, 64, 8, 24, 4
+    S = 4                                       # 1 real + 3 draft slots
+    rng = np.random.default_rng(21)
+    q = jnp.asarray(rng.standard_normal((L, B, S, H, D)), jnp.float32)
+    pk = jnp.asarray(rng.standard_normal((L, P, T, K, D)), jnp.float32)
+    pv = jnp.asarray(rng.standard_normal((L, P, T, K, D)), jnp.float32)
+    tbl = jnp.asarray(rng.integers(0, P, (B, MP)), jnp.int32)
+    base = np.asarray([3, T - 1, 2 * T + 5], np.int32)  # pre-block lengths
+    out = paged_attention_ragged(q[0], pk[0], pv[0], tbl,
+                                 jnp.asarray(base + S),
+                                 jnp.full(B, S, jnp.int32),
+                                 force_pallas=True)
+    outl = paged_attention_layers_ragged(q, pk, pv, tbl,
+                                         jnp.asarray(base + S),
+                                         jnp.full(B, S, jnp.int32),
+                                         force_pallas=True)
+    for i in range(S):
+        li = jnp.asarray(base + i + 1)
+        qi = jnp.full(B, i + 1, jnp.int32)
+        oi = paged_attention_ragged(q[0], pk[0], pv[0], tbl, li, qi,
+                                    force_pallas=True)
+        assert np.array_equal(np.asarray(out[:, :i + 1]),
+                              np.asarray(oi[:, :i + 1])), i
+        oli = paged_attention_layers_ragged(q, pk, pv, tbl, li, qi,
+                                            force_pallas=True)
+        assert np.array_equal(np.asarray(outl[:, :, :i + 1]),
+                              np.asarray(oli[:, :, :i + 1])), i
+        d = paged_attention(q[0, :, i], pk[0], pv[0], tbl, li,
+                            force_pallas=True)
+        np.testing.assert_allclose(np.asarray(out[:, i]), np.asarray(d),
+                                   atol=1e-6, rtol=1e-6)
+        dl = paged_attention_layers(q[:, :, i], pk, pv, tbl, li,
+                                    force_pallas=True)
+        np.testing.assert_allclose(np.asarray(outl[:, :, i]),
+                                   np.asarray(dl), atol=1e-6, rtol=1e-6)
+
+
+def test_ragged_rolled_back_draft_slots_are_invisible():
+    """Rollback leaves rejected draft KV inside retained pool pages and
+    stale block-table tail entries pointing at freed pages — the next
+    launch must see neither. Poisoning every slot at or past the
+    committed length, every fully dead page, AND repointing the stale
+    table tail at a garbage page changes nothing (lengths is the only
+    visibility authority, same discipline as padding scatter)."""
+    L, B, Qm, H, K, D, T, MP = 2, 2, 4, 4, 2, 64, 8, 4
+    P = B * MP + 1                 # disjoint tables + one garbage page
+    rng = np.random.default_rng(22)
+    cl = [9, 19]                   # committed lengths after rollback
+    qls = jnp.asarray([1, 3], jnp.int32)      # next tick speculates again
+    q = jnp.asarray(rng.standard_normal((L, B, Qm, H, D)), jnp.float32)
+    pk = np.asarray(rng.standard_normal((L, P, T, K, D)), np.float32)
+    pv = np.asarray(rng.standard_normal((L, P, T, K, D)), np.float32)
+    tbl = np.arange(B * MP, dtype=np.int32).reshape(B, MP)
+    lens_arr = jnp.asarray(cl, jnp.int32)
+    out1 = paged_attention_layers_ragged(q, jnp.asarray(pk), jnp.asarray(pv),
+                                         jnp.asarray(tbl), lens_arr, qls,
+                                         force_pallas=True)
+    pk2, pv2 = pk.copy(), pv.copy()
+    tbl2 = tbl.copy()
+    pk2[:, P - 1] = 1e6            # the garbage page stale entries hit
+    pv2[:, P - 1] = -1e6
+    for b in range(B):
+        for lp in range(MP):
+            phys = tbl[b, lp]
+            start = lp * T
+            if start >= cl[b]:                 # page freed by the rewind
+                pk2[:, phys] = 1e6
+                pv2[:, phys] = -1e6
+                tbl2[b, lp] = P - 1            # stale table tail entry
+            elif start + T > cl[b]:            # rejected tail in a kept page
+                pk2[:, phys, cl[b] - start:] = 1e6
+                pv2[:, phys, cl[b] - start:] = -1e6
+    out2 = paged_attention_layers_ragged(q, jnp.asarray(pk2),
+                                         jnp.asarray(pv2), jnp.asarray(tbl2),
+                                         lens_arr, qls, force_pallas=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-5)
+
+
 # ------------------------------------------------------------------ log patch
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("P,T,C,N", [(5, 8, 16, 20), (3, 16, 128, 64),

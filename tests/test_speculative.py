@@ -1,0 +1,294 @@
+"""Speculative multi-token decode: the draft-and-verify battery (ISSUE 7).
+
+Five suites lock the tentpole down:
+
+* **acceptance edges** — scripted proposers force 0 accepted, all-k
+  accepted, and mid-run rejection per tick; the committed stream equals
+  the sequential reference in every case (a proposer can only change
+  speed, never tokens) and the ``spec_proposed``/``spec_accepted``
+  counters land exactly where the script says;
+* **rollback accounting** — a pool run under an always-wrong proposer
+  rewinds every speculative page allocation: the PR 6 churn invariant
+  (``pool == free + idle-index`` pages, no stranded users) holds after
+  heavy rejection churn;
+* **composition** — speculation × preemption round-trips and speculation
+  × prefix-cache splices change no tokens;
+* **stats** — ``spec_proposed``/``spec_accepted`` are monotone tick by
+  tick and never cross;
+* **launch economy** — a fused tick with speculation is still exactly ONE
+  launch (``step_calls == ticks``), and an all-accepting proposer commits
+  more than one token per decode row-launch.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.core.engines import EngineSpec
+from repro.models import build_model
+from repro.serving import (NGramProposer, Request, Scheduler, ServeConfig,
+                           ServingEngine)
+
+ARCH = "internlm2-1.8b-smoke"
+KV_ENGINES = ("paged", "log", "kvhybrid")
+MAX_LEN = 48
+PROMPT_LENS = (8, 12, 8)
+MAX_NEW = 6
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_config(ARCH)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _token_bytes(mcfg) -> int:
+    return mcfg.num_layers * 2 * mcfg.num_kv_heads * mcfg.head_dim * 2
+
+
+def _group_bytes(model) -> int:
+    """One 4-token pool page group, all layers (pool sizing)."""
+    mcfg = model.cfg
+    return (mcfg.num_layers * 2 * 4 * mcfg.num_kv_heads * mcfg.head_dim
+            * np.dtype(model.compute_dtype).itemsize)
+
+
+def _requests(cfg, seed=0, max_new=MAX_NEW):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, n, dtype=np.int32),
+                    max_new=max_new)
+            for i, n in enumerate(PROMPT_LENS)]
+
+
+def _engine(lm, engine, *, k=4, proposer=None, hbm_bytes=64 << 20,
+            max_batch_seqs=4, chunk=None, prefix_tokens=0):
+    cfg, model, params = lm
+    return ServingEngine(model, params, ServeConfig(
+        max_len=MAX_LEN, page_tokens=4,
+        engine_spec=EngineSpec(engine=engine, kv_hbm_bytes=hbm_bytes,
+                               kv_hot_window=8, drain_shards=2,
+                               prefix_cache_tokens=prefix_tokens),
+        max_batch_seqs=max_batch_seqs, prefill_chunk_tokens=chunk,
+        speculate_k=k, draft_proposer=proposer))
+
+
+@pytest.fixture(scope="module")
+def reference(lm):
+    cfg, _, _ = lm
+    reqs = _requests(cfg)
+    ServingEngine(lm[1], lm[2], ServeConfig(
+        max_len=MAX_LEN, page_tokens=4,
+        engine_spec=EngineSpec(engine="log", kv_hbm_bytes=64 << 20,
+                               kv_hot_window=8, drain_shards=2),
+    )).generate_sequential(reqs)
+    return {r.rid: list(r.generated) for r in reqs}
+
+
+class OracleProposer:
+    """Scripted drafts derived from the known greedy continuation: proposes
+    the TRUE next tokens, corrupting every draft at or past ``wrong_at``
+    (None = never). ``wrong_at=0`` rejects every draft, ``wrong_at=j``
+    forces a mid-run rejection after exactly ``j`` accepted drafts."""
+
+    def __init__(self, truth: dict, vocab: int, wrong_at=None):
+        self.truth = truth             # rid -> prompt + sequential tokens
+        self.vocab = vocab
+        self.wrong_at = wrong_at
+
+    def propose(self, seq, tokens, k):
+        full = self.truth[seq]
+        pos = len(tokens)
+        out = []
+        for j in range(k):
+            if pos + j >= len(full):
+                break
+            t = int(full[pos + j])
+            if self.wrong_at is not None and j >= self.wrong_at:
+                t = (t + 1) % self.vocab
+            out.append(t)
+        return out
+
+    def drop(self, seq):
+        pass
+
+
+def _truth(cfg, reference):
+    reqs = _requests(cfg)
+    return {r.rid: [int(t) for t in r.prompt] + reference[r.rid]
+            for r in reqs}
+
+
+# ---------------------------------------------------------- acceptance edges
+@pytest.mark.parametrize("engine", ("paged", "log"))
+@pytest.mark.parametrize("wrong_at,expect", [
+    (0, "none"),        # every draft rejected: rollback every tick
+    (1, "partial"),     # mid-run rejection: accept 1, roll the tail back
+    (None, "all"),      # every draft accepted: full multi-token commits
+])
+def test_acceptance_edges_token_identical(lm, reference, engine, wrong_at,
+                                          expect):
+    cfg, _, _ = lm
+    prop = OracleProposer(_truth(cfg, reference), cfg.vocab_size,
+                          wrong_at=wrong_at)
+    reqs = _requests(cfg)
+    eng = _engine(lm, engine, k=4, proposer=prop)
+    eng.generate(reqs)
+    for r in reqs:
+        assert r.done and r.generated == reference[r.rid], (engine, wrong_at,
+                                                            r.rid)
+    s = eng.stats()
+    assert s["spec_proposed"] > 0
+    if expect == "none":
+        assert s["spec_accepted"] == 0
+    elif expect == "partial":
+        assert 0 < s["spec_accepted"] < s["spec_proposed"]
+    else:
+        # the oracle only ever proposes true greedy tokens
+        assert s["spec_accepted"] == s["spec_proposed"]
+        # launch economy: multi-token commits finish rows in fewer
+        # decode row-launches than tokens generated
+        assert s["sched_decode_rows"] < sum(
+            len(reference[r.rid]) for r in reqs)
+
+
+def test_rejected_tail_never_reaches_the_mirror(lm, reference):
+    """Mirrored rollback is byte-exact: an always-wrong proposer moves
+    exactly the same device→host mirror traffic as no speculation at all
+    (the rejected tail is truncated ON DEVICE, before the transfer)."""
+    cfg, _, _ = lm
+    base = _engine(lm, "log", k=0)
+    base.generate(_requests(cfg))
+    prop = OracleProposer(_truth(cfg, reference), cfg.vocab_size, wrong_at=0)
+    spec = _engine(lm, "log", k=4, proposer=prop)
+    reqs = _requests(cfg)
+    spec.generate(reqs)
+    assert spec.mirror_d2h_bytes == base.mirror_d2h_bytes
+    for r in reqs:
+        assert r.generated == reference[r.rid]
+
+
+# --------------------------------------------------------- rollback invariant
+@pytest.mark.parametrize("wrong_at", [0, 2, None])
+def test_rollback_preserves_pool_churn_invariant(lm, reference, wrong_at):
+    """The PR 6 churn invariant survives speculative rollback: a tight pool
+    run whose every tick allocates draft pages and (for wrong_at != None)
+    rewinds them leaves zero stranded page users and pool == free +
+    idle-index pages."""
+    cfg, model, _ = lm
+    prop = OracleProposer(_truth(cfg, reference), cfg.vocab_size,
+                          wrong_at=wrong_at)
+    eng = _engine(lm, "paged", k=4, proposer=prop,
+                  hbm_bytes=(MAX_LEN // 4 + 3) * _group_bytes(model))
+    assert eng.pooled
+    reqs = _requests(cfg)
+    eng.generate(reqs)
+    for r in reqs:
+        assert r.generated == reference[r.rid], (wrong_at, r.rid)
+    kv = eng.tiered
+    assert not kv.page_users
+    assert len(kv.free_pages) + kv._idle_index_pages() == kv.pool_pages
+
+
+# -------------------------------------------------------------- composition
+@pytest.mark.parametrize("engine", KV_ENGINES)
+def test_speculation_preemption_roundtrip(lm, reference, engine):
+    """Preemption mid-draft: a tiny budget forces preempt/restore cycles
+    while every decode row is speculating; the n-gram proposer's state is
+    derived from the committed stream, so restores change nothing."""
+    cfg, model, _ = lm
+    reqs = _requests(cfg)
+    eng = _engine(lm, engine, k=4, hbm_bytes=10 * _token_bytes(model.cfg))
+    eng.generate(reqs)
+    s = eng.stats()
+    assert s["preempts"] >= 1 and s["restores"] >= 1, engine
+    for r in reqs:
+        assert r.done and r.generated == reference[r.rid], (engine, r.rid)
+
+
+def test_speculation_prefix_splice(lm):
+    """Speculation over spliced admissions: duplicate prompts adopt shared
+    pool pages (zero prefill for the covered prefix) and then speculate —
+    tokens must equal the sequential reference and at least one admission
+    must actually have spliced."""
+    cfg, _, _ = lm
+    rng = np.random.default_rng(11)
+    base = rng.integers(0, cfg.vocab_size, 9, dtype=np.int32)
+    prompts = [base.copy(), base.copy(),
+               np.concatenate([base[:6], rng.integers(0, cfg.vocab_size, 2,
+                                                      dtype=np.int32)])]
+    ref = [Request(rid=i, prompt=p.copy(), max_new=MAX_NEW)
+           for i, p in enumerate(prompts)]
+    _engine(lm, "paged", k=0, prefix_tokens=0).generate_sequential(ref)
+    want = {r.rid: list(r.generated) for r in ref}
+
+    eng = _engine(lm, "paged", k=4, prefix_tokens=1 << 12)
+    assert eng.pooled and eng.prefix_cache is not None
+    reqs = [Request(rid=i, prompt=p.copy(), max_new=MAX_NEW)
+            for i, p in enumerate(prompts)]
+    eng.generate(reqs)
+    s = eng.stats()
+    assert s["sched_spliced"] >= 1
+    assert s["spec_proposed"] > 0
+    for r in reqs:
+        assert r.done and r.generated == want[r.rid], r.rid
+
+
+# -------------------------------------------------------------------- stats
+def test_spec_stats_monotone_and_ordered(lm):
+    """spec_proposed/spec_accepted never run backwards tick by tick, never
+    cross (accepted ≤ proposed), and show up — zeroed — on every engine
+    even with speculation off (uniform stats key set)."""
+    cfg, _, _ = lm
+    eng = _engine(lm, "paged", k=4)
+    sched = Scheduler(eng, _requests(cfg))
+    prev = eng.stats()
+    while sched.tick():
+        cur = eng.stats()
+        assert cur["spec_proposed"] >= prev["spec_proposed"]
+        assert cur["spec_accepted"] >= prev["spec_accepted"]
+        assert cur["spec_accepted"] <= cur["spec_proposed"]
+        prev = cur
+    assert eng.stats()["spec_proposed"] > 0
+    for engine in KV_ENGINES:
+        off = _engine(lm, engine, k=0)
+        off.generate(_requests(cfg))
+        s = off.stats()
+        assert s["spec_proposed"] == 0 and s["spec_accepted"] == 0, engine
+
+
+# ------------------------------------------------------------ launch economy
+@pytest.mark.parametrize("engine", ("paged", "log"))
+def test_fused_tick_with_speculation_is_one_launch(lm, reference, engine):
+    """The PR 5 pin extended: speculation rides INSIDE the fused tick —
+    drafts and their verification add zero extra launches, so
+    ``step_calls == ticks`` exactly (admission prefills are counted
+    separately in ``prefill_calls``)."""
+    cfg, _, _ = lm
+    reqs = _requests(cfg)
+    eng = _engine(lm, engine, k=4)
+    eng.generate(reqs)
+    s = eng.stats()
+    assert s["step_calls"] == s["sched_ticks"], engine
+    assert s["fused_steps"] == s["sched_ticks"], engine
+    for r in reqs:
+        assert r.generated == reference[r.rid]
+
+
+def test_ngram_proposer_suffix_order_and_reset():
+    """Unit pins for the self-drafting proposer: longest-suffix context
+    wins, proposals extend recursively, unknown contexts stop early, and
+    drop() forgets the sequence."""
+    p = NGramProposer(max_n=3)
+    # stream with a repeating 1,2,3 cycle: suffix (1,2,3)->1, (2,3,1)->2 ...
+    assert p.propose(0, [1, 2, 3, 1, 2, 3], 4) == [1, 2, 3, 1]
+    # extending the stream with a surprise token leaves every ladder rung
+    # unseen for the new suffix: nothing to propose
+    assert p.propose(0, [1, 2, 3, 1, 2, 3, 1, 2, 9], 1) == []
+    # most recent continuation wins: (1,2) was followed by 7, then by 8
+    assert p.propose(1, [1, 2, 7, 1, 2, 8, 1, 2], 1) == [8]
+    p.drop(0)
+    assert p.propose(0, [7], 2) == []       # fresh history, nothing learned
