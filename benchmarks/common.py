@@ -410,7 +410,13 @@ def run_serve_workload(kv, kvspec, wl: ServeWorkload, clock) -> dict:
             running.remove(victim)
             kv.preempt(victim["rid"])
             preempted.append(victim)
+        # lookahead publication (ISSUE 8): next step runs exactly the
+        # surviving batch, so an async-tiering engine can start H2D
+        # fault-ins for their spilled pages now; no-op on sync engines
+        kv.prefetch([e["rid"] for e in running])
 
+    kv.flush_transfers()   # drain in-flight tails into the clock before
+    # throughput is read — async must not look faster by hiding debt
     lat = np.sort(np.asarray(latencies)) if latencies else np.zeros(1)
     out = {
         "requests": wl.requests,

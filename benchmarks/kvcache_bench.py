@@ -32,6 +32,17 @@ unless the runs are token-identical AND more than one committed token
 rides each decode row-launch. The same flag makes the serve-workload
 twins commit ``1 + a ∈ [1, 1+K]`` tokens per decode step, keeping their
 pool-pressure sizing honest for speculative serving.
+
+``--async-tiering`` runs the sync-vs-async transfer-pipeline comparison
+(ISSUE 8): the serve-workload twin on a deliberately tight page pool —
+steady spill/fault traffic — once with synchronous transfers and once
+with the background pipeline + lookahead prefetch, plus a model-backed
+token-identity check (async scheduling must not change a single output
+token, and its fault-conservation invariant must hold exactly). Recorded
+under ``tiering`` in BENCH_serve.json. ``--tiering-gate`` (CI) exits
+nonzero unless async beats sync on *simulated* throughput (deterministic,
+like every hard gate here) with ``prefetch_hits > 0`` and
+``stall_ticks_saved > 0``.
 """
 from __future__ import annotations
 
@@ -307,6 +318,122 @@ def bench_speculative(*, smoke=False, arch="internlm2-1.8b-smoke", seed=0,
     return rows
 
 
+def bench_async_tiering(*, smoke=False, arch="internlm2-1.8b-smoke",
+                        seed=0) -> dict:
+    """Sync-vs-async tier-transfer comparison (ISSUE 8's acceptance
+    measurement), in two parts.
+
+    **Twin part** (the gated numbers): the model-free serve twin on a page
+    pool sized well below the batch working set, so every step spills and
+    every gather faults. Sync charges each D2H/H2D on the foreground
+    clock; async drains them through the background pipeline with the
+    scheduler's lookahead prefetch hiding fault latency. Both runs move
+    the same tokens, so the simulated-throughput ratio isolates exactly
+    the transfer stalls — a deterministic quantity, unlike wall clock.
+
+    **Model part** (the safety check): the real ServingEngine + Scheduler
+    on a tight pool with speculation on, async vs sync. The pipeline is
+    timing-only by design — allocation and spill decisions are identical
+    in both modes — so the runs must be token-identical and must satisfy
+    the exact conservation law ``prefetch_hits + pool_faults ==
+    sync pool_faults`` (Scheduler admission is clock-free, unlike the
+    twin's Poisson arrivals, which is why conservation is only asserted
+    here)."""
+    kvspec = KVSpec(num_layers=8, kv_heads=8, head_dim=128, page_tokens=16)
+    wl = ServeWorkload(name="tiering", requests=6 if smoke else 12,
+                       mean_interarrival_tokens=8.0,
+                       prompt_tokens=(32, 48), decode_tokens=(24, 48),
+                       max_batch_seqs=4, gather_every=4, seed=seed)
+    max_seq = max(wl.prompt_tokens) + max(wl.decode_tokens)
+    seq_pages = -(-max_seq // kvspec.page_tokens)
+    # tight on purpose: far below the serve floor (batch working set is
+    # ~max_batch_seqs * seq_pages), so spill/fault traffic is steady — this
+    # measures the transfer pipeline, the serve rows measure the design
+    pages = 2 * seq_pages + wl.max_batch_seqs
+
+    def twin(async_tiering: bool) -> dict:
+        clock = SimClock()
+        spec = EngineSpec(engine="paged",
+                          kv_hbm_bytes=pages * kvspec.page_bytes
+                          * kvspec.num_layers,
+                          async_tiering=async_tiering)
+        kv = create_kv_engine(spec, kvspec, clock)
+        kv.init_pool(pages=pages)
+        out = run_serve_workload(kv, kvspec, wl, clock)
+        out["async_tiering"] = async_tiering
+        out["sim_time_s"] = clock.now
+        for key in ("pool_faults", "pool_page_spills", "async_spills",
+                    "prefetch_hits", "stall_ticks_saved"):
+            out[key] = kv.stats[key]
+        return out
+
+    sync = twin(False)
+    async_ = twin(True)
+    rows = {"sync": sync, "async": async_,
+            "speedup_sim": (async_["throughput_tok_per_s"]
+                            / max(sync["throughput_tok_per_s"], 1e-9)),
+            "stall_s_removed": sync["sim_time_s"] - async_["sim_time_s"]}
+
+    # ---- model-backed token identity + exact fault conservation --------
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import Request, ServeConfig, ServingEngine
+
+    cfg = get_config(arch)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    n_req = 3 if smoke else 4
+    prompt_lens = [int(x) for x in rng.choice((12, 20), n_req)]
+    max_new = 12 if smoke else 24
+    max_len = max(prompt_lens) + max_new + 1
+    max_len += -max_len % 8
+    page_tokens = 8
+    mcfg = model.cfg
+    group_bytes = (mcfg.num_layers * 2 * page_tokens
+                   * max(mcfg.num_kv_heads, 1) * max(mcfg.head_dim, 1)
+                   * np.dtype(model.compute_dtype).itemsize)
+    # just above the liveness floor (one max-length sequence + reserve):
+    # the 4-row batch overflows constantly, so admission spills pages the
+    # next prepare_step must fault back — the prefetch target
+    tight = (-(-max_len // page_tokens) + 3) * group_bytes
+
+    prompts = [rng.integers(0, cfg.vocab_size, n, dtype=np.int32)
+               for n in prompt_lens]
+
+    def run(async_tiering: bool) -> dict:
+        eng = ServingEngine(model, params, ServeConfig(
+            max_len=max_len, page_tokens=page_tokens,
+            engine_spec=EngineSpec(engine="paged", kv_hbm_bytes=tight,
+                                   async_tiering=async_tiering),
+            max_batch_seqs=4, speculate_k=2))
+        reqs = [Request(rid=i, prompt=prompts[i].copy(), max_new=max_new)
+                for i in range(n_req)]
+        eng.generate(reqs)
+        s = eng.stats()
+        return {"async_tiering": async_tiering,
+                "tokens": [list(r.generated) for r in reqs],
+                "pool_faults": s["pool_faults"],
+                "prefetch_hits": s["prefetch_hits"],
+                "stall_ticks_saved": s["stall_ticks_saved"],
+                "sim_time_s": s["sim_time_s"]}
+
+    m_sync = run(False)
+    m_async = run(True)
+    rows["model"] = {
+        "sync": {k: v for k, v in m_sync.items() if k != "tokens"},
+        "async": {k: v for k, v in m_async.items() if k != "tokens"},
+        "token_identical": m_sync["tokens"] == m_async["tokens"],
+        "fault_conservation":
+            m_async["prefetch_hits"] + m_async["pool_faults"]
+            == m_sync["pool_faults"]}
+    rows["config"] = {"arch": arch, "twin_pool_pages": pages,
+                      "requests": n_req, "prompt_lens": prompt_lens,
+                      "max_new": max_new, "smoke": smoke}
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--tokens", type=int, default=512)
@@ -346,6 +473,16 @@ def main(argv=None):
                          "than one token per decode row-launch "
                          "(accepted-tokens-per-launch > 1.0) with tokens "
                          "identical to the non-speculative run")
+    ap.add_argument("--async-tiering", action="store_true",
+                    help="run the sync-vs-async transfer-pipeline "
+                         "comparison on a deliberately tight pool plus the "
+                         "model-backed token-identity check")
+    ap.add_argument("--tiering-gate", action="store_true",
+                    help="CI: exit nonzero unless async tiering beats the "
+                         "synchronous baseline on simulated throughput "
+                         "with prefetch_hits > 0 and stall_ticks_saved > "
+                         "0, stays token-identical, and satisfies the "
+                         "fault-conservation invariant")
     ap.add_argument("--out", default="artifacts/kvcache_bench.json")
     ap.add_argument("--serve-out", default="BENCH_serve.json",
                     help="repo-root serving perf record (written whenever "
@@ -366,6 +503,9 @@ def main(argv=None):
     spec = None
     if args.speculate_k > 0:
         spec = bench_speculative(smoke=args.smoke, k=args.speculate_k)
+    tiering = None
+    if args.async_tiering:
+        tiering = bench_async_tiering(smoke=args.smoke)
     print("design,workload,sim_time_s,write_amp,host_read_MB,"
           "tput_tok_s,p50_ms,p99_ms,preempts,pool_hit,d2h_saved_MB")
     for r in rows:
@@ -399,12 +539,24 @@ def main(argv=None):
               f"{spec['baseline']['step_calls']} launches, "
               f"x{spec['speedup_wall']:.2f} wall, "
               f"token-identical={spec['token_identical']})")
+    if tiering is not None:
+        ts, ta = tiering["sync"], tiering["async"]
+        tm = tiering["model"]
+        print(f"async tiering: {ta['throughput_tok_per_s']:.0f} vs "
+              f"{ts['throughput_tok_per_s']:.0f} tok/s sim "
+              f"(x{tiering['speedup_sim']:.2f}, "
+              f"{tiering['stall_s_removed']*1e3:.2f} ms of stalls "
+              f"removed), {ta['prefetch_hits']} prefetch hits / "
+              f"{ta['async_spills']} async spills / "
+              f"{ta['stall_ticks_saved']} stalls saved, "
+              f"token-identical={tm['token_identical']}, "
+              f"fault-conservation={tm['fault_conservation']}")
     # write the artifacts BEFORE the gates so a failing CI run still leaves
     # the evidence of what regressed
     out = Path(args.out)
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(rows, indent=1))
-    if serve_rows or spec is not None:
+    if serve_rows or spec is not None or tiering is not None:
         # merge into the existing record so separate CI steps (the
         # serve/prefill_heavy smoke, the shared_prefix smoke, the
         # speculative smoke) compose instead of clobbering each other:
@@ -426,7 +578,9 @@ def main(argv=None):
              "fused_vs_unfused": (prior.get("fused_vs_unfused")
                                   if fused is None else fused),
              "speculative": (prior.get("speculative")
-                             if spec is None else spec)},
+                             if spec is None else spec),
+             "tiering": (prior.get("tiering")
+                         if tiering is None else tiering)},
             indent=1, sort_keys=True))
     if any(r["workload"] in serve_workloads() and not r["preempts"]
            for r in rows):
@@ -491,6 +645,42 @@ def main(argv=None):
             print(f"WARNING: speculative wall speedup x"
                   f"{spec['speedup_wall']:.2f} <= 1 on this runner "
                   f"({atpl:.2f} accepted tokens per launch still holds)")
+    if args.tiering_gate:
+        if tiering is None:
+            raise SystemExit("--tiering-gate needs --async-tiering")
+        ts, ta = tiering["sync"], tiering["async"]
+        tm = tiering["model"]
+        # correctness first, same order as --spec-gate: the pipeline is
+        # only legal because it is timing-only
+        if not tm["token_identical"]:
+            raise SystemExit(
+                "async tiering produced DIFFERENT tokens than the "
+                "synchronous run — the pipeline is no longer timing-only")
+        if not tm["fault_conservation"]:
+            raise SystemExit(
+                f"fault conservation broken: async prefetch_hits "
+                f"({tm['async']['prefetch_hits']}) + pool_faults "
+                f"({tm['async']['pool_faults']}) != sync pool_faults "
+                f"({tm['sync']['pool_faults']}) — prefetch is changing "
+                f"allocation decisions")
+        if not ts["pool_faults"]:
+            raise SystemExit(
+                "tiering twin never faulted a page — the tight-pool "
+                "regime this gate measures is dead")
+        # then the win, on SIMULATED throughput — deterministic on any
+        # runner, unlike wall clock (same reasoning as the other gates)
+        if ta["throughput_tok_per_s"] <= ts["throughput_tok_per_s"]:
+            raise SystemExit(
+                f"async tiering does NOT beat the synchronous baseline "
+                f"({ta['throughput_tok_per_s']:.0f} vs "
+                f"{ts['throughput_tok_per_s']:.0f} tok/s sim) — the "
+                f"regression this gate exists to prevent")
+        if not ta["prefetch_hits"] or not ta["stall_ticks_saved"]:
+            raise SystemExit(
+                f"async pipeline is idle: prefetch_hits="
+                f"{ta['prefetch_hits']}, stall_ticks_saved="
+                f"{ta['stall_ticks_saved']} — transfers are not actually "
+                f"overlapping the forward")
     return rows
 
 

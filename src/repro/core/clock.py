@@ -66,6 +66,12 @@ class DrainQueue:
         self.last_finish = start + service
         return self.last_finish
 
+    def backlog(self, now: float) -> float:
+        """Seconds of queued work still draining at time ``now`` (0 when the
+        server is idle) — the channel-occupancy gauge the async transfer
+        pipeline reports."""
+        return max(0.0, self.last_finish - now)
+
 
 class ShardedDrainer:
     """N independent :class:`DrainQueue` servers sharing one SimClock.

@@ -51,6 +51,10 @@ class EngineSpec:
     # index over shared pool pages; 0 disables sharing entirely (pooled
     # engines behave exactly as before)
     prefix_cache_tokens: int = 0
+    # async tiering (ISSUE 8): pooled spills/faults go through a background
+    # transfer pipeline (double-buffered D2H/H2D drain queues) instead of
+    # stalling the foreground; False keeps every transfer synchronous
+    async_tiering: bool = False
 
 
 class CacheEngine(abc.ABC):

@@ -154,6 +154,35 @@ class KVCacheEngine(abc.ABC):
         """
         return True
 
+    # ------------------------------------------------- async tier transfers
+    # Asynchronous tiering (ISSUE 8): a pooled engine may move its page
+    # spills (D2H) and fault-ins (H2D) through a background transfer
+    # pipeline so they overlap the fused forward instead of stalling it.
+    # The scheduler publishes next tick's planned batch through prefetch()
+    # so spilled pages start their H2D before prepare_step would
+    # demand-fault them; the coherence rule is a drain barrier before any
+    # read of an in-flight page. Engines without a pipeline keep the no-op
+    # defaults — both calls are safe on every engine.
+
+    def prefetch(self, seqs: Sequence[int],
+                 n_tokens: Optional[Sequence[int]] = None) -> int:
+        """Lookahead hint: the scheduler plans to step ``seqs`` next tick
+        (``n_tokens[i]`` advisory slot counts — decode rows ``1 + k``,
+        chunk rows their chunk length). An async-tiering engine schedules
+        H2D fault-ins for these sequences' spilled pages; the transfers
+        drain in the background and the later demand fault only waits for
+        the residual time. Purely a timing hint — no allocation and no
+        data movement happen here, so prefetching never changes which
+        pages spill or fault. Returns the number of transfers scheduled
+        (0 on engines without a pipeline)."""
+        return 0
+
+    def flush_transfers(self) -> None:
+        """Drain every in-flight asynchronous tier transfer (advance the
+        clock to the pipeline's idle time). Benchmarks call this before
+        reading ``sim_time_s`` so async runs pay for their outstanding
+        background traffic; a no-op on engines without a pipeline."""
+
     # ----------------------------------------------- device-resident KV pool
     # The mirror-free serving path (ISSUE 4): an engine that supports
     # pooling owns (L, P, T, K, D) device arrays of KV pages; the serving

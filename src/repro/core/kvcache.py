@@ -90,7 +90,11 @@ class _TieredKV(KVCacheEngine):
                             # engines without sharing so the stats key set
                             # stays identical across every registered engine
                             "prefix_hits": 0, "prefix_tokens_reused": 0,
-                            "cow_copies": 0, "shared_pages": 0}
+                            "cow_copies": 0, "shared_pages": 0,
+                            # async-tiering counters (ISSUE 8) — zero on
+                            # engines without a transfer pipeline, same rule
+                            "async_spills": 0, "prefetch_hits": 0,
+                            "stall_ticks_saved": 0}
 
     # hooks -----------------------------------------------------------------
     def _append_tokens(self, seq: int, toks: list[np.ndarray]) -> None:
@@ -196,7 +200,7 @@ class PagedKVCache(_TieredKV):
     """
 
     def __init__(self, spec: KVSpec, clock: SimClock, *,
-                 hbm_budget_bytes: int):
+                 hbm_budget_bytes: int, async_tiering: bool = False):
         super().__init__(spec, clock)
         self.pool: dict[tuple, np.ndarray] = {}      # (layer, phys) → page
         self.block_table: dict[int, list[int]] = {}  # seq → [phys per logical]
@@ -206,13 +210,16 @@ class PagedKVCache(_TieredKV):
         self.next_phys = 0
         self._pooled = False
         self._share_index = None       # prefix index (set_share_index)
+        self.async_tiering = bool(async_tiering)
+        self._pipeline = None          # TransferPipeline once pooled + async
         self.stats.update({"hbm_hits": 0, "hbm_misses": 0, "dma_up_bytes": 0,
                            "host_writes": 0, "redo_bytes": 0})
 
     @classmethod
     def from_spec(cls, spec: EngineSpec, kvspec: KVSpec,
                   clock: SimClock) -> "PagedKVCache":
-        return cls(kvspec, clock, hbm_budget_bytes=spec.kv_hbm_bytes)
+        return cls(kvspec, clock, hbm_budget_bytes=spec.kv_hbm_bytes,
+                   async_tiering=spec.async_tiering)
 
     # ------------------------------------------------------ device page pool
     def supports_pool(self) -> bool:
@@ -251,6 +258,18 @@ class PagedKVCache(_TieredKV):
         self.host_pages: dict[tuple[int, int], np.ndarray] = {}  # spilled
         self._in_restore = False
         self._pooled = True
+        # async tiering (ISSUE 8): spills/faults drain through a background
+        # pipeline; the hot/cold victim model runs in BOTH modes so spill
+        # decisions (and therefore tokens) are identical sync vs async.
+        # Lazy import: serving owns the pipeline, importing it at module
+        # scope would cycle through the serving package (same rule as
+        # _cow_page's batching import).
+        from repro.serving.tiering import PageHeat, TransferPipeline
+        if self.async_tiering:
+            self._pipeline = TransferPipeline(self.clock)
+        self._heat = PageHeat()
+        self._alloc_seq = 0            # allocation counter (logical time)
+        self._fault_mark: dict[int, int] = {}   # phys → _alloc_seq at fault
         self.stats.update({"pool_appends": 0, "pool_hits": 0,
                            "pool_faults": 0, "pool_page_spills": 0,
                            "pool_d2h_bytes": 0, "pool_h2d_bytes": 0})
@@ -272,17 +291,46 @@ class PagedKVCache(_TieredKV):
         return np.asarray(jnp.stack(
             [self.dev_k[:, phys], self.dev_v[:, phys]], axis=1))
 
+    def _touch_page(self, phys: int) -> None:
+        """One page access: LRU recency + the hot/cold model's EMA."""
+        self.pool_lru.touch(phys)
+        self._heat.touch(phys)
+
+    def _recently_faulted(self, phys: int) -> bool:
+        """Was ``phys`` faulted within the last pool-size allocations?
+        Such pages spill only as a last resort (ISSUE 8 thrash guard): a
+        page that just paid an H2D round-trips straight back out otherwise.
+        Allocation count, not wall time, so sync/async rank identically."""
+        return (self._alloc_seq - self._fault_mark.get(phys, -self.pool_pages)
+                <= self.pool_pages)
+
     def _spill_lru_page(self, pinned: set) -> int:
-        """Evict the least-recently-used spillable resident page to the
-        host tier (page-granular spill); returns the freed physical index.
+        """Evict one spillable resident page to the host tier (page-granular
+        spill); returns the freed physical index.
 
         Refcount-aware (ISSUE 6): only a page with exactly ONE live user —
         and that user outside the pinned batch — can spill coherently;
         pages aliased by several sequences never spill (the scheduler
         preempts whole sequences instead). A single-user page the prefix
         index also pins is forgotten from the index first: the cache
-        re-prefills on a future miss, no sequence loses data."""
-        for phys in list(self.pool_lru.lru_order()):
+        re-prefills on a future miss, no sequence loses data. A pin with NO
+        index object behind it (raw ``pin_page`` use) is dropped instead of
+        skipped — skipping made that page headroom the pressure surface
+        promised but eviction could never deliver (ISSUE 8).
+
+        Victim choice is no longer pure LRU (ISSUE 8): eligible candidates
+        rank by ``(recently_faulted, hotness, LRU rank)`` — coldest page by
+        the :class:`~repro.serving.tiering.PageHeat` re-reference model
+        first, LRU order breaking ties, and just-faulted pages last so a
+        multi-page fault burst cannot evict its own pages (thrash). Every
+        page costs the same one-page H2D to miss on, so min re-reference
+        probability IS min expected miss cost.
+
+        Async mode submits the D2H to the background pipeline — the numpy
+        copy below is the staging buffer, the link time drains beside the
+        foreground, and only a reader of the host copy barriers on it."""
+        best = None
+        for rank, phys in enumerate(self.pool_lru.lru_order()):
             users = self.page_users.get(phys)
             if not users or len(users) > 1:
                 continue               # index-only (reclaimed, not spilled)
@@ -290,34 +338,62 @@ class PagedKVCache(_TieredKV):
             (seq, logical), = users.items()
             if seq in pinned:
                 continue
-            if phys in self.trie_refs:
-                if self._share_index is None:
-                    continue
+            # index-pinned single-user pages stay eligible: a live index
+            # forgets them first, a stale pin (no index) just drops
+            key = (self._recently_faulted(phys), self._heat.hotness(phys),
+                   rank)
+            if best is None or key < best[0]:
+                best = (key, phys, seq, logical)
+        if best is None:
+            raise RuntimeError(
+                "paged pool exhausted: every resident page is pinned, "
+                "shared, or index-held — the HBM budget is too small for "
+                "the running batch")
+        _, phys, seq, logical = best
+        if phys in self.trie_refs:
+            if self._share_index is not None:
                 self._share_index.forget_phys(phys)
-            page = self._page_np(phys)
-            self.host_pages[(seq, logical)] = page
-            self.block_table[seq][logical] = -1
-            self.page_users.pop(phys)
-            self.pool_lru.remove(phys)
+            else:
+                self.trie_refs.discard(phys)
+        page = self._page_np(phys)
+        self.host_pages[(seq, logical)] = page
+        self.block_table[seq][logical] = -1
+        self.page_users.pop(phys)
+        self.pool_lru.remove(phys)
+        if self._pipeline is not None:
+            self._pipeline.submit(self._pipeline.D2H, ("d2h", seq, logical),
+                                  HOST_LINK, "write", page.nbytes)
+            self.stats["async_spills"] += 1
+            self.stats["stall_ticks_saved"] += 1   # sync stalls right here
+        else:
             self.clock.charge(HOST_LINK, "write", page.nbytes,
                               random_access=True)          # D2H page out
-            self.stats["pool_page_spills"] += 1
-            self.stats["pool_d2h_bytes"] += page.nbytes
-            return phys
-        raise RuntimeError(
-            "paged pool exhausted: every resident page is pinned, shared, "
-            "or index-held — the HBM budget is too small for the running "
-            "batch")
+        self.stats["pool_page_spills"] += 1
+        self.stats["pool_d2h_bytes"] += page.nbytes
+        return phys
 
     def _alloc_page(self, pinned: set) -> int:
+        self._alloc_seq += 1
         if self.free_pages:
             return self.free_pages.pop()
         # reclaim before spilling: an idle index-held page (no live user)
         # frees without any D2H traffic — dropping cached prefix KV is
         # cheaper than spilling a live sequence's page
-        if self._share_index is not None and \
-                self._share_index.reclaim_one() is not None:
-            return self.free_pages.pop()
+        if self._share_index is not None:
+            if self._share_index.reclaim_one() is not None:
+                return self.free_pages.pop()
+        else:
+            # pins without an index object cannot reclaim through the index;
+            # free an idle one directly so the headroom the pressure surface
+            # counted actually exists at allocation time (ISSUE 8)
+            idle = next((p for p in sorted(self.trie_refs)
+                         if not self.page_users.get(p)), None)
+            if idle is not None:
+                self.trie_refs.discard(idle)
+                self.page_users.pop(idle, None)
+                if idle in self.pool_lru:
+                    self.pool_lru.remove(idle)
+                return idle
         return self._spill_lru_page(pinned)
 
     def _extend_table(self, seq: int, pinned: set) -> None:
@@ -325,11 +401,28 @@ class PagedKVCache(_TieredKV):
         phys = self._alloc_page(pinned)
         self.page_users[phys] = {seq: len(table)}
         table.append(phys)
-        self.pool_lru.touch(phys)
+        self._heat.assign(phys)
+        self._touch_page(phys)
 
     def _fault_page(self, seq: int, logical: int, pinned: set) -> None:
         import jax.numpy as jnp
         phys = self._alloc_page(pinned)
+        prefetched = False
+        if self._pipeline is not None:
+            # coherence: the H2D reads the host staging copy, so it chains
+            # after the page's own D2H finish when that is still in flight
+            d2h_key = ("d2h", seq, logical)
+            after = self._pipeline.finish_of(d2h_key) or 0.0
+            self._pipeline.cancel(d2h_key)
+            h2d_key = ("h2d", seq, logical)
+            prefetched = self._pipeline.finish_of(h2d_key) is not None
+            if not prefetched:
+                self._pipeline.submit(self._pipeline.H2D, h2d_key, HOST_LINK,
+                                      "read", self._group_bytes, after=after)
+            # drain barrier before the kernel may read this page — the one
+            # foreground wait; a prefetched page usually finished already
+            if self._pipeline.barrier(h2d_key) == 0.0:
+                self.stats["stall_ticks_saved"] += 1
         page = self.host_pages.pop((seq, logical))       # (L, 2, T, K, D)
         self.dev_k = self.dev_k.at[:, phys].set(
             jnp.asarray(page[:, 0], self.pool_dtype))
@@ -337,19 +430,38 @@ class PagedKVCache(_TieredKV):
             jnp.asarray(page[:, 1], self.pool_dtype))
         self.block_table[seq][logical] = phys
         self.page_users[phys] = {seq: logical}
-        self.pool_lru.touch(phys)
-        self.clock.charge(HOST_LINK, "read", page.nbytes,
-                          random_access=True)            # H2D fault-in
-        self.stats["pool_faults"] += 1
+        self._heat.assign(phys)
+        self._touch_page(phys)
+        self._fault_mark[phys] = self._alloc_seq
+        if self._pipeline is None:
+            self.clock.charge(HOST_LINK, "read", page.nbytes,
+                              random_access=True)        # H2D fault-in
+        if prefetched:
+            # the scheduler's lookahead had this page's transfer in flight:
+            # the demand fault becomes a (mostly) free pickup
+            self.stats["prefetch_hits"] += 1
+        else:
+            self.stats["pool_faults"] += 1
         self.stats["pool_h2d_bytes"] += page.nbytes
 
     def _ensure_seq_resident(self, seq: int, pinned: set) -> None:
+        faulted = []
         for logical, phys in enumerate(self.block_table.get(seq, [])):
             if phys < 0:
                 self._fault_page(seq, logical, pinned)
+                faulted.append(self.block_table[seq][logical])
             else:
-                self.pool_lru.touch(phys)
+                self._touch_page(phys)
                 self.stats["pool_hits"] += 1
+        # recency fix (ISSUE 8): the logical-order walk touches the
+        # sequence's later RESIDENT pages after its early faulted ones, so
+        # after a multi-page fault burst the pages that just paid an H2D sat
+        # coldest in the LRU — the next allocation's first victims (thrash).
+        # Re-touch the burst at the end: the whole sequence was accessed at
+        # once, so its pages share one recency class and the freshly faulted
+        # ones must not rank behind it.
+        for phys in faulted:
+            self.pool_lru.touch(phys)
 
     def prepare_step(self, seqs: Sequence[int], n_tokens: Sequence[int],
                      max_pages: int):
@@ -402,8 +514,13 @@ class PagedKVCache(_TieredKV):
             prep = n if prepared is None else int(prepared[i])
             pos = self.seq_len.get(seq, 0)
             self.seq_len[seq] = pos + n
+            # a prepared page can be spilled mid-tick by an out-of-batch
+            # allocation once the prepare pin is released — its -1 marker
+            # must never enter the LRU/heat maps
             for logical in range(pos // T, -(-(pos + n) // T)):
-                self.pool_lru.touch(self.block_table[seq][logical])
+                phys = self.block_table[seq][logical]
+                if phys >= 0:
+                    self._touch_page(phys)
             self.clock.charge(HBM, "write", max(prep, n) * per_tok)
             self.stats["pool_appends"] += n
             if prep > n:
@@ -412,16 +529,34 @@ class PagedKVCache(_TieredKV):
     def _rewind_step_pages(self, seq: int) -> None:
         """Speculative rollback: drop trailing block-table pages past the
         committed length. Such pages are this step's fresh allocations —
-        sole-user, resident, unpinned (``_extend_table`` never hands out a
-        shared or index-held page) — so they return straight to the free
-        list; the guard stops at anything that doesn't match that shape."""
+        sole-user, unpinned (``_extend_table`` never hands out a shared or
+        index-held page) — so they return straight to the free list; the
+        guard stops at anything that doesn't match that shape.
+
+        A trailing page may have been SPILLED between prepare and commit
+        (an out-of-batch allocation can evict a prepared page once the
+        batch pin is gone): its host copy holds only rejected KV. Breaking
+        there — the old behavior — leaked that stale staging copy forever
+        AND stranded every rolled-back page behind it (ISSUE 8). The fix
+        drops the dead copy (cancelling its in-flight transfers) and keeps
+        rewinding. The D2H byte counters are NOT rewound: the spill moved
+        real bytes, so ``pool_d2h_bytes == pool_page_spills × page_bytes``
+        stays the monotone bytes-moved invariant either way."""
         T = self.spec.page_tokens
         keep = max(-(-self.seq_len.get(seq, 0) // T), 0)
         table = self.block_table.get(seq, [])
         while len(table) > keep:
             phys = table[-1]
+            if phys < 0:
+                table.pop()
+                logical = len(table)
+                self.host_pages.pop((seq, logical), None)
+                if self._pipeline is not None:
+                    self._pipeline.cancel(("d2h", seq, logical))
+                    self._pipeline.cancel(("h2d", seq, logical))
+                continue
             users = self.page_users.get(phys, {})
-            if phys < 0 or phys in self.trie_refs or users.keys() - {seq}:
+            if phys in self.trie_refs or users.keys() - {seq}:
                 break
             table.pop()
             users.pop(seq, None)
@@ -449,15 +584,25 @@ class PagedKVCache(_TieredKV):
         self.seq_len[seq] = self.seq_len.get(seq, 0) + n_tokens
         for phys in self.block_table.get(seq, []):
             if phys >= 0:
-                self.pool_lru.touch(phys)
+                self._touch_page(phys)
         self.clock.charge(HBM, "write", n_tokens * self._token_group_bytes())
         self.stats["pool_appends"] += n_tokens
 
     def _idle_index_pages(self) -> int:
-        """Index-pinned pages with no live user: reclaimable on demand
-        (dropping cached prefix KV costs nothing but a future re-prefill),
-        so the pressure surface treats them as available."""
-        return sum(1 for p in self.trie_refs if not self.page_users.get(p))
+        """Index-pinned pages with no live user that allocation can ACTUALLY
+        free on demand — the pressure surface must only promise headroom
+        eviction can deliver (ISSUE 8). With an index registered, an idle
+        pin reclaims through ``reclaim_one`` only while its trie node is
+        unreferenced, so the count caps at the index's own reclaimable
+        total (an idle page whose node other sequences still hold is NOT
+        headroom — the old uncapped count admitted work the allocator then
+        crashed on). With no index object, idle pins free directly in
+        ``_alloc_page``, so the raw count stands."""
+        idle = sum(1 for p in self.trie_refs if not self.page_users.get(p))
+        if idle == 0 or self._share_index is None:
+            return idle
+        cap = getattr(self._share_index, "reclaimable_pages", None)
+        return idle if cap is None else min(idle, cap())
 
     def can_admit_tokens(self, n_tokens: int) -> bool:
         if not self._pooled:
@@ -506,6 +651,39 @@ class PagedKVCache(_TieredKV):
                    if seq not in self._preempted
                    and n >= T * len(self.block_table.get(seq, ())))
 
+    # ------------------------------------------------- async tier transfers
+    def prefetch(self, seqs: Sequence[int],
+                 n_tokens: Optional[Sequence[int]] = None) -> int:
+        """Schedule background H2D fault-ins for every spilled page of next
+        tick's planned batch (ISSUE 8). Timing-only: the host staging copy
+        stays where it is and no page is allocated — the later demand fault
+        in ``_fault_page`` materializes the page and, finding the transfer
+        already in flight, pays only the residual wait (usually zero). That
+        keeps allocation state bit-identical to a synchronous run, which is
+        what makes ``prefetch_hits + pool_faults == sync pool_faults`` an
+        exact invariant rather than an approximation."""
+        if not self._pooled or self._pipeline is None:
+            return 0
+        n = 0
+        for seq in seqs:
+            if seq in self._preempted:
+                continue
+            for logical, phys in enumerate(self.block_table.get(seq, ())):
+                if phys >= 0:
+                    continue
+                key = ("h2d", seq, logical)
+                if self._pipeline.finish_of(key) is not None:
+                    continue           # already in flight from a prior tick
+                after = self._pipeline.finish_of(("d2h", seq, logical)) or 0.0
+                self._pipeline.submit(self._pipeline.H2D, key, HOST_LINK,
+                                      "read", self._group_bytes, after=after)
+                n += 1
+        return n
+
+    def flush_transfers(self) -> None:
+        if self._pooled and self._pipeline is not None:
+            self._pipeline.flush()
+
     # ------------------------------------------------------- prefix sharing
     def supports_sharing(self) -> bool:
         return self._pooled
@@ -545,7 +723,7 @@ class PagedKVCache(_TieredKV):
                 self.stats["shared_pages"] += 1   # gained a 2nd live user
             users[seq] = logical
             table.append(phys)
-            self.pool_lru.touch(phys)
+            self._touch_page(phys)
         self.seq_len[seq] = covered_tokens
         self.stats["prefix_hits"] += 1
         self.stats["prefix_tokens_reused"] += covered_tokens
@@ -603,7 +781,8 @@ class PagedKVCache(_TieredKV):
         self.page_users[phys].pop(seq, None)
         self.page_users[new] = {seq: logical}
         self.block_table[seq][logical] = new
-        self.pool_lru.touch(new)
+        self._heat.assign(new)
+        self._touch_page(new)
         self.clock.charge(HBM, "read", self._group_bytes)
         self.clock.charge(HBM, "write", self._group_bytes)
         self.stats["cow_copies"] += 1
@@ -642,7 +821,7 @@ class PagedKVCache(_TieredKV):
             self.dev_v = self.dev_v.at[:, phys, sl].set(
                 jnp.asarray(chunk[:, :, 1].transpose(1, 0, 2, 3),
                             self.pool_dtype))
-            self.pool_lru.touch(phys)
+            self._touch_page(phys)
         nbytes = len(toks) * self._token_group_bytes()
         if self._in_restore:
             # disk → host → device: pay the PCIe upload per restored page
@@ -675,7 +854,7 @@ class PagedKVCache(_TieredKV):
                 self.dev_k[layer, phys, :hi - lo]).astype(spec.dtype)
             out[1, lo:hi] = np.asarray(
                 self.dev_v[layer, phys, :hi - lo]).astype(spec.dtype)
-            self.pool_lru.touch(phys)
+            self._touch_page(phys)
             self.clock.charge(HBM, "read", (hi - lo) * spec.token_bytes)
         return out
 
@@ -693,6 +872,10 @@ class PagedKVCache(_TieredKV):
             if lo >= T:
                 break
             if phys < 0:
+                if self._pipeline is not None:
+                    # coherence barrier: the staging copy may still be in
+                    # flight to the host — never read an in-flight page
+                    self._pipeline.barrier(("d2h", seq, logical))
                 page = self.host_pages[(seq, logical)]
             else:
                 page = self._page_np(phys)
@@ -718,6 +901,10 @@ class PagedKVCache(_TieredKV):
                         self.free_pages.append(phys)
             else:
                 self.host_pages.pop((seq, logical), None)
+        if self._pipeline is not None:
+            # a later sequence may reuse this id: its (dir, seq, logical)
+            # keys must not inherit this sequence's in-flight transfers
+            self._pipeline.cancel_seq(seq)
         if self._share_index is not None:
             self._share_index.on_seq_dropped(seq)
 
@@ -854,8 +1041,11 @@ class PagedKVCache(_TieredKV):
         whose eviction actually FREES the most device pool pages — a page
         this sequence shares with other rows (or that the prefix index
         pins) stays resident after the preempt, so only sole-user unpinned
-        pages count (ties toward the least recently appended). Host mode
-        keeps the LRU fallback."""
+        pages count. Ties rank by the hot/cold model (ISSUE 8): prefer the
+        candidate whose freeable pages carry the least re-reference mass
+        (``PageHeat.hotness`` summed — evicting them forfeits the fewest
+        expected future hits), then by LRU coldness. Host mode keeps the
+        LRU fallback."""
         if not self._pooled:
             return None
         cands = list(candidates)
@@ -865,12 +1055,13 @@ class PagedKVCache(_TieredKV):
 
         def key(seq):
             pages = [p for p in self.block_table.get(seq, ()) if p >= 0]
-            freed = sum(1 for p in pages
+            freeable = [p for p in pages
                         if len(self.page_users.get(p, ())) == 1
-                        and p not in self.trie_refs)
+                        and p not in self.trie_refs]
+            heat = sum(self._heat.hotness(p) for p in freeable)
             coldest = min((order.get(p, len(order)) for p in pages),
                           default=len(order))
-            return (-freed, coldest)
+            return (-len(freeable), heat, coldest)
         return min(cands, key=key)
 
 

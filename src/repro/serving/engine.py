@@ -430,6 +430,16 @@ class ServingEngine:
                                  np.asarray(positions))
         return logits[:B], [batching.split_row(batch, i) for i in range(B)]
 
+    def publish_plan(self, rids: list, n_tokens: list) -> int:
+        """Scheduler lookahead (ISSUE 8): next tick's planned batch — rids
+        with the token slots each will claim. Pooled engines forward it to
+        the async tiering pipeline, which starts H2D fault-ins for any
+        spilled page of a planned row so ``prepare_step`` finds the
+        transfer already in flight; everywhere else it is a no-op."""
+        if not self.pooled:
+            return 0
+        return self.tiered.prefetch(rids, n_tokens)
+
     def can_step_fused(self, rids: list, n_tokens: list) -> bool:
         """Can this tick's mixed batch be placed in one fused step?
         Pooled engines answer through :meth:`KVCacheEngine.can_place_step`
@@ -600,7 +610,8 @@ class ServingEngine:
         from repro.serving.scheduler import Scheduler
         sched = Scheduler(self, requests)
         sched.run()
-        self.sched_stats = sched.stats.as_dict()
+        self.tiered.flush_transfers()   # run-end drain: sim_time_s includes
+        self.sched_stats = sched.stats.as_dict()   # in-flight transfer tails
         return requests
 
     def generate_sequential(self, requests: list[Request]) -> list[Request]:

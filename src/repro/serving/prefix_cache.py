@@ -181,6 +181,18 @@ class PrefixCache:
                 return phys
         return None
 
+    def reclaimable_pages(self) -> int:
+        """Upper bound on how many pool pages :meth:`reclaim_one` can free
+        right now: entries no live sequence references. Refcounts are
+        non-increasing with depth along any root-path (per-seq holds are
+        root-contiguous runs), so every refcount-0 node eventually becomes
+        an evictable leaf as shallower refcount-0 descendants are dropped —
+        the count is achievable, not just a bound. The engine's headroom
+        audit (``_idle_index_pages``) caps its "idle shared pages" estimate
+        with this so ``can_place_step`` never promises pages the index
+        cannot actually give back (ISSUE 8 satellite)."""
+        return sum(1 for node in self._by_phys.values() if node.refs == 0)
+
     def forget_phys(self, phys: int) -> None:
         """The engine is spilling/retiring this page: drop its entry. The
         page's sole live user keeps its data (the spill blob); future

@@ -472,7 +472,26 @@ class Scheduler:
         self._finish_done()
         self._preempt_under_pressure()
         self._check_progress(lengths_before)
+        self._publish_plan()
         return bool(self.waiting or self.running or self.preempted)
+
+    def _publish_plan(self) -> None:
+        """Tell the engine what next tick's batch looks like (ISSUE 8):
+        every surviving running row plus how many token slots it will claim
+        — its next chunk length mid-prefill, ``1 + speculate_k`` decoding.
+        The async tiering pipeline uses this to prefetch spilled pages
+        before ``prepare_step`` demand-faults them; on sync or non-pooled
+        engines the publication is a no-op."""
+        if not self.running:
+            return
+        seqs, ntoks = [], []
+        k = self.engine.speculate_k
+        for r in self.running:
+            seqs.append(r.req.rid)
+            ntoks.append(self._chunk_len(r.pending)
+                         if r.pending is not None and len(r.pending)
+                         else 1 + k)
+        self.engine.publish_plan(seqs, ntoks)
 
     def run(self) -> None:
         while self.tick():

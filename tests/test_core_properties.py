@@ -295,6 +295,133 @@ def test_prefix_sharing_matches_sequential_for_any_schedule(
     assert len(kv.free_pages) + kv._idle_index_pages() == kv.pool_pages
 
 
+# --------------------------------------------------------------------------
+# Async tiering (ISSUE 8): timing-only for ANY schedule
+# --------------------------------------------------------------------------
+
+def _pool_capable_engines():
+    return [name for name in list_kv_engines()
+            if create_kv_engine(EngineSpec(engine=name, kv_hbm_bytes=1 << 12),
+                                KV_SPEC, SimClock()).supports_pool()]
+
+
+@settings(max_examples=20)
+@given(ops=kv_ops_strategy, pool_pages=st.sampled_from([3, 4, 6]),
+       seed=st.integers(0, 3))
+def test_async_tiering_is_timing_only_at_engine_level(ops, pool_pages, seed):
+    """Engine-level half of the ISSUE 8 invariant, where fault traffic is
+    real: for ANY append/read/preempt/restore sequence against a pool
+    tight enough to spill, the async pipeline returns byte-identical
+    reads, makes identical placement decisions, and every prefetch hit
+    displaces exactly one demand fault (``prefetch_hits + pool_faults ==
+    sync pool_faults``)."""
+    spec = KVSpec(num_layers=2, kv_heads=2, head_dim=4, page_tokens=4,
+                  dtype=np.dtype(np.float32))
+    kvs = {}
+    for mode in (False, True):
+        kv = create_kv_engine(
+            EngineSpec(engine="paged", kv_hbm_bytes=1 << 30,
+                       async_tiering=mode), spec, SimClock())
+        kv.init_pool(dtype=np.float32, pages=pool_pages)
+        kvs[mode] = kv
+    rng = np.random.default_rng(seed)
+    preempted: set[int] = set()
+    for op, seq, arg in ops:
+        if op == "append" and seq not in preempted:
+            toks = rng.standard_normal(
+                (spec.num_layers, 2, arg, spec.kv_heads,
+                 spec.head_dim)).astype(np.float32)
+            if not all(kv.can_admit_tokens(arg) for kv in kvs.values()):
+                continue
+            for kv in kvs.values():
+                kv.append(seq, toks)
+            # the scheduler's lookahead publication, every tick
+            kvs[True].prefetch(sorted(kvs[True].block_table))
+        elif op == "read" and seq not in preempted:
+            if seq not in kvs[False].seq_len:
+                continue
+            layer = arg % spec.num_layers
+            a = kvs[False].read(seq, layer)
+            b = kvs[True].read(seq, layer)
+            assert np.array_equal(a, b), (seq, layer)
+        elif op == "flip":
+            if seq in preempted:
+                preempted.discard(seq)
+                for kv in kvs.values():
+                    kv.restore(seq)
+            elif seq in kvs[False].seq_len:
+                preempted.add(seq)
+                for kv in kvs.values():
+                    kv.preempt(seq)
+    for kv in kvs.values():
+        kv.flush_transfers()
+    s, a = kvs[False].stats, kvs[True].stats
+    assert kvs[True].block_table == kvs[False].block_table
+    assert a["pool_page_spills"] == s["pool_page_spills"]
+    assert a["prefetch_hits"] + a["pool_faults"] == s["pool_faults"]
+    assert s["prefetch_hits"] == s["async_spills"] == 0
+    assert s["stall_ticks_saved"] == 0
+    assert kvs[True].clock.now <= kvs[False].clock.now
+
+
+@pytest.mark.slow
+@settings(max_examples=4)
+@given(
+    arrival_perm=st.permutations(range(3)),
+    max_new=st.integers(1, 4),
+    max_batch_seqs=st.integers(1, 3),
+    pool_pages=st.sampled_from([5, 8, 1 << 10]),
+    speculate_k=st.sampled_from([0, 2, 4]),
+    seed=st.integers(0, 3),
+)
+def test_async_tiering_matches_sequential_for_any_schedule(
+        arrival_perm, max_new, max_batch_seqs, pool_pages, speculate_k,
+        seed):
+    """Serving-level half of the ISSUE 8 invariant: async tiering on/off ×
+    every pool-capable engine × random arrival schedules × speculation
+    depths is token-identical to the sequential reference, and the
+    lookahead only reschedules transfers: ``prefetch_hits + pool_faults``
+    equals the synchronous run's ``pool_faults`` exactly."""
+    from repro.serving import Request, ServeConfig, ServingEngine
+    cfg, model, params = _serve_model()
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size, (6, 9, 7)[i], dtype=np.int32)
+               for i in range(3)]
+    group_bytes = (model.cfg.num_layers * 2 * 4 * model.cfg.num_kv_heads
+                   * model.cfg.head_dim
+                   * np.dtype(model.compute_dtype).itemsize)
+
+    def mk_engine(name, async_tiering):
+        return ServingEngine(model, params, ServeConfig(
+            max_len=16, page_tokens=4,
+            engine_spec=EngineSpec(engine=name,
+                                   kv_hbm_bytes=pool_pages * group_bytes,
+                                   kv_hot_window=4, drain_shards=2,
+                                   async_tiering=async_tiering),
+            max_batch_seqs=max_batch_seqs, speculate_k=speculate_k))
+
+    ref = [Request(rid=i, prompt=p.copy(), max_new=max_new)
+           for i, p in enumerate(prompts)]
+    mk_engine("paged", False).generate_sequential(ref)
+    want = {r.rid: list(r.generated) for r in ref}
+
+    for name in _pool_capable_engines():
+        faults = {}
+        for mode in (False, True):
+            reqs = [Request(rid=i, prompt=p.copy(), max_new=max_new)
+                    for i, p in enumerate(prompts)]
+            eng = mk_engine(name, mode)
+            eng.generate([reqs[i] for i in arrival_perm])
+            for r in reqs:
+                assert r.done and r.generated == want[r.rid], (name, mode,
+                                                               r.rid)
+            s = eng.tiered.stats
+            faults[mode] = (s["pool_faults"], s["prefetch_hits"])
+            if not mode:
+                assert s["prefetch_hits"] == s["async_spills"] == 0
+        assert faults[True][0] + faults[True][1] == faults[False][0], name
+
+
 @settings(max_examples=15)
 @given(st.integers(2, 64))
 def test_monotone_capacity_no_data_loss(cache_pages):

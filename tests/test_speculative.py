@@ -191,6 +191,14 @@ def test_rollback_preserves_pool_churn_invariant(lm, reference, wrong_at):
     kv = eng.tiered
     assert not kv.page_users
     assert len(kv.free_pages) + kv._idle_index_pages() == kv.pool_pages
+    # byte counters stay the exact bytes-moved record through the churn:
+    # pages spilled mid-tick then rolled back keep their D2H on the books
+    # (the bytes DID move) without ever double-counting (ISSUE 8)
+    s = kv.stats
+    assert s["pool_d2h_bytes"] == s["pool_page_spills"] * kv._group_bytes
+    assert s["pool_h2d_bytes"] == (
+        (s["pool_faults"] + s["prefetch_hits"]) * kv._group_bytes
+        + s["restore_in_bytes"])
 
 
 # -------------------------------------------------------------- composition

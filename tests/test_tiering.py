@@ -1,0 +1,361 @@
+"""Async tier transfers + hot/cold victim model: the ISSUE 8 battery.
+
+Five suites lock the tentpole and its satellite bugfixes down:
+
+* **pipeline units** — the double-buffered :class:`TransferPipeline` over a
+  SimClock: FIFO per channel, independent channels, ``after=`` chaining,
+  barrier/cancel/flush semantics, and the backlog gauge;
+* **heat model** — :class:`PageHeat` ranks often/recently touched pages
+  hot, decays cold, and forgets a slot's previous tenant on ``assign``;
+* **headroom honesty** (satellite 1) — pages pinned without an index
+  object behind them are either real headroom (idle: freed directly) or
+  real spill victims (live: pin dropped at spill) — never pages the
+  pressure surface promises and allocation then crashes on;
+* **thrash + rewind churn** (satellites 2 and 3) — a multi-page fault
+  burst is not its own next victim, and speculative rollback of pages
+  spilled mid-tick drops the dead staging copies while the byte counters
+  stay the monotone bytes-moved record;
+* **sync/async equivalence** — the pipeline is timing-only: identical
+  reads, identical allocation decisions, ``prefetch_hits + pool_faults ==
+  sync pool_faults`` exactly, and a simulated clock that never runs
+  slower than the synchronous baseline.
+"""
+import numpy as np
+import pytest
+
+from repro.core import SimClock, create_kv_engine
+from repro.core.engines import EngineSpec, list_kv_engines
+from repro.core.kvcache import HOST_LINK, KVSpec
+from repro.serving.tiering import PageHeat, TransferPipeline
+
+KV_SPEC = KVSpec(num_layers=2, kv_heads=2, head_dim=8, page_tokens=4,
+                 dtype=np.dtype(np.float32))   # exact round trips for
+                                               # assert_array_equal below
+
+
+def _pooled_kv(pages, *, async_tiering=False):
+    clock = SimClock()
+    kv = create_kv_engine(
+        EngineSpec(engine="paged", kv_hbm_bytes=1 << 30,
+                   async_tiering=async_tiering), KV_SPEC, clock)
+    kv.init_pool(dtype=np.float32, pages=pages)
+    return kv, clock
+
+
+def _toks(rng, n):
+    return rng.standard_normal(
+        (KV_SPEC.num_layers, 2, n, KV_SPEC.kv_heads,
+         KV_SPEC.head_dim)).astype(np.float32)
+
+
+# ------------------------------------------------------------ pipeline units
+def test_pipeline_submit_is_background_barrier_is_stall():
+    clock = SimClock()
+    p = TransferPipeline(clock)
+    fin = p.submit(p.D2H, ("d2h", 0, 0), HOST_LINK, "write", 1 << 20)
+    assert clock.now == 0.0 and fin > 0.0        # submit never advances
+    assert p.finish_of(("d2h", 0, 0)) == fin
+    assert p.backlog_s() == pytest.approx(fin)
+    stall = p.barrier(("d2h", 0, 0))
+    assert stall == pytest.approx(fin) and clock.now == pytest.approx(fin)
+    assert p.barrier(("d2h", 0, 0)) == 0.0       # idempotent: already done
+    assert p.pending == 0
+
+
+def test_pipeline_channels_fifo_and_independent():
+    clock = SimClock()
+    p = TransferPipeline(clock)
+    f1 = p.submit(p.D2H, ("d2h", 0, 0), HOST_LINK, "write", 1 << 20)
+    f2 = p.submit(p.D2H, ("d2h", 0, 1), HOST_LINK, "write", 1 << 20)
+    g1 = p.submit(p.H2D, ("h2d", 1, 0), HOST_LINK, "read", 1 << 20)
+    assert f2 > f1                                # FIFO within a channel
+    assert g1 < f2                                # channels don't queue on
+    assert g1 == pytest.approx(f1)                # each other (double-buffer)
+
+
+def test_pipeline_after_chains_across_channels():
+    clock = SimClock()
+    p = TransferPipeline(clock)
+    f = p.submit(p.D2H, ("d2h", 0, 0), HOST_LINK, "write", 1 << 20)
+    g = p.submit(p.H2D, ("h2d", 0, 0), HOST_LINK, "read", 1 << 18, after=f)
+    assert g > f                                  # starts once the D2H lands
+    free = p.submit(p.H2D, ("h2d", 0, 1), HOST_LINK, "read", 1 << 18)
+    assert free > g                               # but the channel stays FIFO
+
+
+def test_pipeline_cancel_and_flush():
+    clock = SimClock()
+    p = TransferPipeline(clock)
+    p.submit(p.D2H, ("d2h", 3, 0), HOST_LINK, "write", 1 << 20)
+    p.submit(p.H2D, ("h2d", 3, 1), HOST_LINK, "read", 1 << 20)
+    f = p.submit(p.D2H, ("d2h", 4, 0), HOST_LINK, "write", 1 << 20)
+    assert p.cancel(("d2h", 3, 0)) and not p.cancel(("d2h", 3, 0))
+    assert p.cancel_seq(3) == 1 and p.pending == 1
+    assert p.flush() == pytest.approx(f)          # waits the max finish
+    assert clock.now == pytest.approx(f) and p.flush() == 0.0
+
+
+def test_page_heat_ranks_and_resets():
+    h = PageHeat()
+    h.assign(0), h.assign(1)
+    h.touch(1)
+    for _ in range(3):
+        h.touch(0)
+    assert h.hotness(0) > h.hotness(1) > 0.0      # frequent+recent wins
+    for _ in range(10):
+        h.touch(1)                                # page 0 ages out
+    assert h.hotness(1) > h.hotness(0)
+    hot = h.hotness(1)
+    h.assign(1)                                   # slot handed to a new page
+    assert h.hotness(1) == 0.0 < hot              # no inherited heat
+
+
+# --------------------------------------------- satellite 1: headroom honesty
+def test_stale_pinned_idle_pages_are_usable_headroom():
+    """Pages pinned via raw ``pin_page`` with no index object, then
+    orphaned by their sequence's release, counted as admission headroom
+    but the allocator could never free them: ``can_admit_tokens`` said
+    yes, ``_alloc_page`` raised pool-exhausted. They must free directly."""
+    kv, _ = _pooled_kv(pages=2)
+    rng = np.random.default_rng(0)
+    kv.append(0, _toks(rng, 8))                   # both pool pages
+    for phys in list(kv.block_table[0]):
+        kv.pin_page(phys)
+    kv.release(0)                                 # idle but still pinned
+    assert not kv.free_pages
+    assert kv.can_admit_tokens(8)                 # headroom promised...
+    want = _toks(rng, 8)
+    kv.append(1, want)                            # ...must be deliverable
+    assert not kv.trie_refs                       # stale pins gone
+    got = kv.read(1, layer=0)
+    np.testing.assert_array_equal(got[0], want[0, 0])
+
+
+def test_spill_drops_stale_pin_instead_of_skipping():
+    """A live sequence's page under a stale pin is a spill candidate (the
+    pin drops), not a permanently resident page that shrinks the pool."""
+    kv, _ = _pooled_kv(pages=2)
+    rng = np.random.default_rng(1)
+    a = _toks(rng, 4)
+    kv.append(0, a)
+    kv.pin_page(kv.block_table[0][0])
+    kv.append(1, _toks(rng, 4))                   # pool now full
+    kv.append(1, _toks(rng, 4))                   # must spill seq 0's page
+    assert kv.block_table[0][0] == -1 and not kv.trie_refs
+    got = kv.read(0, layer=1)                     # faults it back, bit-exact
+    np.testing.assert_array_equal(got[0], a[1, 0])
+    assert kv.stats["pool_faults"] == 1
+
+
+def test_can_place_step_headroom_is_deliverable_under_churn():
+    """The pressure-surface audit as an invariant: whenever
+    ``can_admit_tokens``/``can_place_step`` promise room, the allocation
+    they vetted must succeed — across stale pins, spills, and faults."""
+    kv, _ = _pooled_kv(pages=4)
+    rng = np.random.default_rng(2)
+    for round_ in range(6):
+        seq = round_ % 3
+        if kv.can_admit_tokens(8):
+            kv.append(seq, _toks(rng, 8))         # may spill, never raises
+        if round_ == 2:
+            for phys in kv.block_table.get(0, []):
+                if phys >= 0:
+                    kv.pin_page(phys)
+            kv.release(0)                         # stale-pin the pool
+        if kv.can_place_step([seq], [2]):
+            k, v = kv.pool_views()
+            kv.prepare_step([seq], [2], max_pages=16)
+            kv.commit_step(k, v, [seq], [2])
+
+
+# ------------------------------------- satellite 2: fault-burst thrash guard
+def test_fault_burst_pages_are_not_next_victims():
+    """After a multi-page fault burst, the just-faulted pages must not be
+    the next allocations' first victims: no (seq, logical) page may spill
+    again right after paying its H2D (the fault-then-spill churn)."""
+    kv, _ = _pooled_kv(pages=6)
+    rng = np.random.default_rng(3)
+    a = _toks(rng, 16)
+    kv.append(0, a)                               # 4 pages
+    kv.append(1, _toks(rng, 8))                   # pool full at 6
+    kv.append(2, _toks(rng, 8))                   # spills seq 0's LRU pages
+    assert kv.block_table[0][0] == -1 and kv.block_table[0][1] == -1
+    kv.read(0, layer=0)                           # burst: faults both back
+    assert kv.stats["pool_faults"] == 2
+    spills_before = kv.stats["pool_page_spills"]
+    kv.append(1, _toks(rng, 4))                   # refault seq 1 under pressure
+    assert kv.stats["pool_page_spills"] > spills_before
+    # the burst pages survived: victims came from seq 0's colder tail
+    assert kv.block_table[0][0] >= 0 and kv.block_table[0][1] >= 0
+    got = kv.read(0, layer=1)                     # still bit-exact throughout
+    np.testing.assert_array_equal(got[0], a[1, 0])
+
+
+def test_no_page_round_trips_twice_in_one_tick():
+    """One prepare/commit tick with a fault burst inside it never spills a
+    page it faulted in the same tick (the churn the victim key's
+    recently-faulted term exists to prevent)."""
+    kv, _ = _pooled_kv(pages=6)
+    rng = np.random.default_rng(4)
+    kv.append(0, _toks(rng, 8))                   # 2 pages
+    kv.append(1, _toks(rng, 8))                   # 2 more
+    kv.append(2, _toks(rng, 16))                  # 4 pages: spills seq 0
+    h2d_before = {key for key in kv.host_pages}
+    assert h2d_before                             # seq 0 partly spilled
+    k, v = kv.pool_views()
+    kv.prepare_step([0, 1], [2, 2], max_pages=16)     # faults seq 0's pages
+    kv.commit_step(k, v, [0, 1], [2, 2])
+    faulted = h2d_before - set(kv.host_pages)
+    assert faulted                                # the tick did fault
+    respilled = faulted & set(kv.host_pages)
+    assert not respilled                          # and never re-spilled them
+
+
+# ------------------------------- satellite 3: rewind vs mid-tick spill bytes
+def test_rewind_drops_spilled_speculative_pages():
+    """A page allocated for speculative slots, spilled mid-tick by an
+    out-of-batch admission, then rolled back: the rewind must drop the
+    dead host staging copy (old code stopped at the -1 and leaked it) and
+    keep the byte counters monotone and exact."""
+    kv, _ = _pooled_kv(pages=4)
+    rng = np.random.default_rng(5)
+    k, v = kv.pool_views()
+    kv.prepare_step([0], [6], max_pages=16)       # 2 pages for 6 planned slots
+    kv.append(1, _toks(rng, 16))                  # spills BOTH prepared pages
+    assert kv.block_table[0] == [-1, -1]
+    assert set(kv.host_pages) == {(0, 0), (0, 1)}
+    kv.commit_step(k, v, [0], [1], prepared=[6])  # accept 1 of 6
+    assert kv.block_table[0] == [-1]              # trailing page rewound
+    assert set(kv.host_pages) == {(0, 0)}         # its staging copy dropped
+    group = kv._group_bytes
+    assert kv.stats["pool_d2h_bytes"] == kv.stats["pool_page_spills"] * group
+    kv.release(0)
+    kv.release(1)
+    assert not kv.host_pages and not kv.page_users
+    assert len(kv.free_pages) == kv.pool_pages
+    # monotone: the rewound spill's bytes are still on the record
+    assert kv.stats["pool_d2h_bytes"] == kv.stats["pool_page_spills"] * group
+
+
+def test_pool_byte_counters_match_bytes_moved():
+    """``pool_d2h_bytes``/``pool_h2d_bytes`` equal pages-moved × page bytes
+    (plus restore uploads) AND the clock's own tallies — through spills,
+    faults, preempt/restore, and rollback churn."""
+    for async_tiering in (False, True):
+        kv, clock = _pooled_kv(pages=4, async_tiering=async_tiering)
+        rng = np.random.default_rng(6)
+        for seq in (0, 1, 2):
+            kv.append(seq, _toks(rng, 8))
+        kv.read(0, layer=0)
+        kv.preempt(1)
+        kv.restore(1)
+        k, v = kv.pool_views()
+        kv.prepare_step([2], [6], max_pages=16)
+        kv.append(0, _toks(rng, 8))
+        kv.commit_step(k, v, [2], [1], prepared=[6])
+        kv.flush_transfers()
+        s, group = kv.stats, kv._group_bytes
+        assert s["pool_d2h_bytes"] == s["pool_page_spills"] * group
+        assert s["pool_h2d_bytes"] == (
+            (s["pool_faults"] + s["prefetch_hits"]) * group
+            + s["restore_in_bytes"])
+        # the clock saw at least the counted traffic (preempting a partly
+        # spilled sequence legitimately reads host copies on top of it)
+        assert clock.bytes_moved("host", "write") >= s["pool_d2h_bytes"]
+        assert clock.bytes_moved("host", "read") >= s["pool_h2d_bytes"]
+
+
+# ----------------------------------------------- sync/async: timing-only-ness
+def _drive_schedule(kv, *, prefetch):
+    """A fixed spill/fault-heavy schedule; returns every read's bytes."""
+    rng = np.random.default_rng(7)
+    reads = []
+    for step in range(8):
+        for seq in (0, 1, 2):
+            kv.append(seq, _toks(rng, 3 if step == 0 else 1))
+        if prefetch:
+            kv.prefetch([0, 1, 2])
+        if step % 2:
+            for seq in (0, 1, 2):
+                reads.append(kv.read(seq, layer=step % 2))
+    kv.preempt(0)
+    kv.restore(0)
+    reads.append(kv.read(0, layer=1))
+    kv.flush_transfers()
+    return reads
+
+
+def test_async_is_timing_only_and_conserves_faults():
+    """The tentpole's core invariant: async mode changes WHEN transfers
+    are paid, never what happens — reads bit-identical, identical spill
+    decisions, every prefetch hit exactly displacing one demand fault,
+    and a clock that only ever gets faster."""
+    sync_kv, sync_clock = _pooled_kv(pages=5, async_tiering=False)
+    async_kv, async_clock = _pooled_kv(pages=5, async_tiering=True)
+    sync_reads = _drive_schedule(sync_kv, prefetch=True)   # no-op pipeline
+    async_reads = _drive_schedule(async_kv, prefetch=True)
+    for got, want in zip(async_reads, sync_reads):
+        np.testing.assert_array_equal(got, want)
+    s, a = sync_kv.stats, async_kv.stats
+    assert a["pool_page_spills"] == s["pool_page_spills"]
+    assert async_kv.block_table == sync_kv.block_table
+    # exact conservation: the lookahead only RESCHEDULES transfers
+    assert s["pool_faults"] > 0
+    assert a["prefetch_hits"] + a["pool_faults"] == s["pool_faults"]
+    assert a["prefetch_hits"] > 0 and a["async_spills"] > 0
+    assert a["stall_ticks_saved"] > 0
+    # sync mode never touches the async counters
+    assert s["async_spills"] == s["prefetch_hits"] == 0
+    assert s["stall_ticks_saved"] == 0
+    # same bytes moved, strictly less foreground time
+    assert async_clock.bytes_moved("host", "write") == \
+        sync_clock.bytes_moved("host", "write")
+    assert async_clock.now < sync_clock.now
+
+
+def test_prefetch_is_a_pure_timing_hint():
+    """prefetch() must not allocate, move data, or change any stat — it
+    only enqueues background transfers for spilled pages."""
+    kv, _ = _pooled_kv(pages=3, async_tiering=True)
+    rng = np.random.default_rng(8)
+    kv.append(0, _toks(rng, 8))
+    kv.append(1, _toks(rng, 8))                   # spills seq 0 pages
+    state = (dict(kv.block_table), dict(kv.host_pages), list(kv.free_pages),
+             dict(kv.stats))
+    n = kv.prefetch([0, 1])
+    assert n == sum(1 for p in kv.block_table[0] if p < 0)
+    assert (dict(kv.block_table), dict(kv.host_pages), list(kv.free_pages),
+            dict(kv.stats)) == state
+    assert kv.prefetch([0, 1]) == 0               # already in flight
+    kv.flush_transfers()
+
+
+def test_preempt_barriers_on_inflight_spill_copies():
+    """Coherence rule at the preempt boundary: building the preemption
+    blob reads spilled pages' host staging copies, so it must barrier on
+    their in-flight D2H — the round trip stays bit-exact in async mode."""
+    kv, clock = _pooled_kv(pages=3, async_tiering=True)
+    rng = np.random.default_rng(9)
+    a = _toks(rng, 8)
+    kv.append(0, a)
+    kv.append(1, _toks(rng, 8))                   # spills a page of seq 0
+    assert -1 in kv.block_table[0] and kv._pipeline.pending > 0
+    kv.preempt(0)                                 # must wait for the D2H
+    kv.restore(0)
+    got = kv.read(0, layer=0)
+    np.testing.assert_array_equal(got[0], a[0, 0])
+    kv.flush_transfers()
+
+
+def test_async_counters_zeroed_on_every_engine():
+    """Uniform stats key set: the ISSUE 8 counters exist — zeroed — on
+    every registered KV engine, and prefetch/flush_transfers are safe
+    no-ops outside the pooled paged path."""
+    for name in list_kv_engines():
+        kv = create_kv_engine(
+            EngineSpec(engine=name, kv_hbm_bytes=1 << 20), KV_SPEC,
+            SimClock())
+        for key in ("async_spills", "prefetch_hits", "stall_ticks_saved"):
+            assert kv.stats[key] == 0, (name, key)
+        assert kv.prefetch([0, 1]) == 0
+        kv.flush_transfers()
