@@ -33,6 +33,16 @@ rides each decode row-launch. The same flag makes the serve-workload
 twins commit ``1 + a ∈ [1, 1+K]`` tokens per decode step, keeping their
 pool-pressure sizing honest for speculative serving.
 
+``--families all`` (ISSUE 9) runs the model-backed per-family comparison:
+every cache-descriptor family (dense GQA, MLA, int8 KV, MoE, SSM) through
+the real ServingEngine, pooled fused mirror-free vs the same engine forced
+onto the host-mirror path — recorded under ``families`` in
+BENCH_serve.json (merged by design × workload × family).
+``--family-gate`` (CI) exits nonzero unless every family is
+token-identical and mirror-free on the pooled path, beats the mirror
+baseline >= 5x on *simulated* decode throughput wherever the mirror
+actually moves bytes, and int8 holds <= 0.55x the fp16 pool bytes/token.
+
 ``--async-tiering`` runs the sync-vs-async transfer-pipeline comparison
 (ISSUE 8): the serve-workload twin on a deliberately tight page pool —
 steady spill/fault traffic — once with synchronous transfers and once
@@ -434,6 +444,112 @@ def bench_async_tiering(*, smoke=False, arch="internlm2-1.8b-smoke",
     return rows
 
 
+def bench_families(*, smoke=False, seed=0, families="all") -> list:
+    """Model-backed per-family serving comparison (ISSUE 9's acceptance
+    measurement): every cache-descriptor family — dense GQA, MLA, int8 KV,
+    MoE, SSM — through the real ServingEngine + Scheduler, pooled fused
+    mirror-free vs the SAME engine forced onto the host-mirror path
+    (``paged_decode=False``). Both runs must be token-identical; the win is
+    the DETERMINISTIC simulated tier time (the mirror path charges every
+    device→host KV byte on the sim clock, the pooled path charges none), so
+    the ratio survives noisy CI runners. The SSM mirror baseline moves zero
+    mirror bytes by construction (its state rides in the batch rows, there
+    is no growing KV to mirror), so its ratio is recorded as None and the
+    gate checks mirror-freedom + token identity only."""
+    import dataclasses as dc
+
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import Request, ServeConfig, ServingEngine
+
+    def fam_model(fam):
+        if fam == "mla":
+            cfg = dc.replace(get_config("deepseek-v2-236b-smoke"),
+                             family="attn_dense", moe=None)
+            return cfg, build_model(cfg, remat=False)
+        if fam == "int8":
+            cfg = get_config("internlm2-1.8b-smoke")
+            return cfg, build_model(cfg, remat=False, kv_cache_dtype="int8")
+        if fam == "ssm":
+            cfg = get_config("mamba2-1.3b-smoke")
+            return cfg, build_model(cfg, remat=False)
+        if fam == "moe":
+            cfg = get_config("arctic-480b-smoke")
+            # no-drop capacity: expert routing stays exact under batching,
+            # so token identity is a hard assertion, not a tolerance
+            cfg = dc.replace(cfg, moe=dc.replace(
+                cfg.moe, capacity_factor=float(cfg.moe.num_experts)))
+            return cfg, build_model(cfg, remat=False)
+        cfg = get_config("internlm2-1.8b-smoke")
+        return cfg, build_model(cfg, remat=False)
+
+    all_fams = ["dense", "mla", "int8", "moe", "ssm"]
+    fams = all_fams if families == "all" else families.split(",")
+    unknown = set(fams) - set(all_fams)
+    if unknown:
+        raise ValueError(f"unknown families {sorted(unknown)}; choose from "
+                         f"{all_fams}")
+    page_tokens = 8
+    rows = []
+    for fam in fams:
+        cfg, model = fam_model(fam)
+        params = model.init(jax.random.PRNGKey(seed))
+        rng = np.random.default_rng(seed)
+        n_req = 3 if smoke else 4
+        prompt_lens = [int(x) for x in rng.choice((8, 12), n_req)]
+        prompts = [rng.integers(0, cfg.vocab_size, n, dtype=np.int32)
+                   for n in prompt_lens]
+        max_new = 8 if smoke else 16
+        max_len = max(prompt_lens) + max_new + 1
+        max_len += -max_len % page_tokens
+
+        def run(paged_decode):
+            eng = ServingEngine(model, params, ServeConfig(
+                max_len=max_len, page_tokens=page_tokens,
+                engine_spec=EngineSpec(engine="paged",
+                                       kv_hbm_bytes=256 << 20),
+                max_batch_seqs=n_req, paged_decode=paged_decode))
+            reqs = [Request(rid=i, prompt=prompts[i].copy(),
+                            max_new=max_new) for i in range(n_req)]
+            t0 = time.perf_counter()
+            eng.generate(reqs)
+            wall = time.perf_counter() - t0
+            s = eng.stats()
+            return {"pooled": eng.pooled, "fused": eng.fused,
+                    "wall_s": wall, "sim_time_s": s["sim_time_s"],
+                    "mirror_d2h_bytes": s["mirror_d2h_bytes"],
+                    "_tokens": [list(r.generated) for r in reqs]}
+
+        pooled = run(None)
+        mirror = run(False)
+        desc = model.cache_descriptor(page_tokens)
+        # the mirror baseline's sim clock carries exactly the device→host
+        # bytes the pooled path never moves; same tokens both runs, so the
+        # sim-throughput ratio is the inverse sim-time ratio (capped so an
+        # all-resident pooled run with sim_time 0 stays JSON-finite)
+        ratio = (min(mirror["sim_time_s"] / max(pooled["sim_time_s"], 1e-9),
+                     1e6)
+                 if mirror["mirror_d2h_bytes"] else None)
+        row = {"design": "paged", "workload": "serve", "family": fam,
+               "smoke": smoke, "planes": list(desc.plane_names),
+               "generated_tokens": sum(len(t) for t in pooled["_tokens"]),
+               "token_identical":
+                   pooled.pop("_tokens") == mirror.pop("_tokens"),
+               "pooled": pooled, "mirror": mirror,
+               "mirror_d2h_saved_bytes": mirror["mirror_d2h_bytes"],
+               "decode_tput_sim_ratio": ratio,
+               "bytes_per_token":
+                   desc.token_group_bytes or desc.seq_state_bytes}
+        if fam == "int8":
+            fp16 = (cfg.num_layers * 2 * max(cfg.num_kv_heads, 1)
+                    * max(cfg.head_dim, 1) * 2)
+            row["fp16_bytes_per_token"] = fp16
+            row["bytes_per_token_vs_fp16"] = row["bytes_per_token"] / fp16
+        rows.append(row)
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--tokens", type=int, default=512)
@@ -473,6 +589,17 @@ def main(argv=None):
                          "than one token per decode row-launch "
                          "(accepted-tokens-per-launch > 1.0) with tokens "
                          "identical to the non-speculative run")
+    ap.add_argument("--families", default="",
+                    help="run the model-backed per-family pooled-vs-mirror "
+                         "comparison: 'all' or a comma list from "
+                         "dense/mla/int8/moe/ssm (default: skip)")
+    ap.add_argument("--family-gate", action="store_true",
+                    help="CI: exit nonzero unless every descriptor family "
+                         "runs pooled mirror-free and token-identical to "
+                         "its mirror baseline, beats it >= 5x on simulated "
+                         "decode throughput where the mirror moves bytes, "
+                         "and int8 holds <= 0.55x the fp16 pool "
+                         "bytes/token")
     ap.add_argument("--async-tiering", action="store_true",
                     help="run the sync-vs-async transfer-pipeline "
                          "comparison on a deliberately tight pool plus the "
@@ -506,6 +633,9 @@ def main(argv=None):
     tiering = None
     if args.async_tiering:
         tiering = bench_async_tiering(smoke=args.smoke)
+    fam_rows = None
+    if args.families:
+        fam_rows = bench_families(smoke=args.smoke, families=args.families)
     print("design,workload,sim_time_s,write_amp,host_read_MB,"
           "tput_tok_s,p50_ms,p99_ms,preempts,pool_hit,d2h_saved_MB")
     for r in rows:
@@ -539,6 +669,17 @@ def main(argv=None):
               f"{spec['baseline']['step_calls']} launches, "
               f"x{spec['speedup_wall']:.2f} wall, "
               f"token-identical={spec['token_identical']})")
+    if fam_rows is not None:
+        for r in fam_rows:
+            ratio = r["decode_tput_sim_ratio"]
+            print(f"family={r['family']:5s} "
+                  f"planes={','.join(r['planes']) or '-':24s} "
+                  f"pooled={r['pooled']['pooled']} "
+                  f"mirror_d2h_bytes={r['pooled']['mirror_d2h_bytes']} "
+                  f"saved={r['mirror_d2h_saved_bytes']} "
+                  f"sim_tput_ratio="
+                  f"{'n/a' if ratio is None else f'{ratio:.1f}x'} "
+                  f"token-identical={r['token_identical']}")
     if tiering is not None:
         ts, ta = tiering["sync"], tiering["async"]
         tm = tiering["model"]
@@ -556,7 +697,8 @@ def main(argv=None):
     out = Path(args.out)
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(rows, indent=1))
-    if serve_rows or spec is not None or tiering is not None:
+    if (serve_rows or spec is not None or tiering is not None
+            or fam_rows is not None):
         # merge into the existing record so separate CI steps (the
         # serve/prefill_heavy smoke, the shared_prefix smoke, the
         # speculative smoke) compose instead of clobbering each other:
@@ -573,8 +715,14 @@ def main(argv=None):
         fresh = {(r["design"], r["workload"]) for r in serve_rows}
         keep = [r for r in prior.get("engines", [])
                 if (r.get("design"), r.get("workload")) not in fresh]
+        fresh_fam = {(r["design"], r["workload"], r["family"])
+                     for r in (fam_rows or [])}
+        keep_fam = [r for r in prior.get("families", [])
+                    if (r.get("design"), r.get("workload"),
+                        r.get("family")) not in fresh_fam]
         serve_path.write_text(json.dumps(
             {"engines": keep + serve_rows,
+             "families": keep_fam + (fam_rows or []),
              "fused_vs_unfused": (prior.get("fused_vs_unfused")
                                   if fused is None else fused),
              "speculative": (prior.get("speculative")
@@ -645,6 +793,41 @@ def main(argv=None):
             print(f"WARNING: speculative wall speedup x"
                   f"{spec['speedup_wall']:.2f} <= 1 on this runner "
                   f"({atpl:.2f} accepted tokens per launch still holds)")
+    if args.family_gate:
+        if fam_rows is None:
+            raise SystemExit("--family-gate needs --families")
+        for r in fam_rows:
+            fam = r["family"]
+            # correctness first, same order as the other gates: the
+            # descriptor layouts are only legal because they are exact
+            if not r["token_identical"]:
+                raise SystemExit(
+                    f"family {fam}: pooled run produced DIFFERENT tokens "
+                    f"than the mirror baseline — the descriptor layout is "
+                    f"no longer exact")
+            if not r["pooled"]["pooled"] or not r["pooled"]["fused"]:
+                raise SystemExit(
+                    f"family {fam}: fell off the pooled fused path "
+                    f"(pooled={r['pooled']['pooled']}, "
+                    f"fused={r['pooled']['fused']}) — the mirror fallback "
+                    f"is silently eating the family")
+            if r["pooled"]["mirror_d2h_bytes"] != 0:
+                raise SystemExit(
+                    f"family {fam}: pooled path mirrored "
+                    f"{r['pooled']['mirror_d2h_bytes']} bytes device→host "
+                    f"— the zero-mirror invariant broke")
+            ratio = r["decode_tput_sim_ratio"]
+            if ratio is not None and ratio < 5.0:
+                raise SystemExit(
+                    f"family {fam}: pooled simulated decode throughput is "
+                    f"only x{ratio:.2f} the mirror baseline (< 5x) — the "
+                    f"win this gate exists to prevent regressing")
+            if fam == "int8" and r["bytes_per_token_vs_fp16"] > 0.55:
+                raise SystemExit(
+                    f"int8 pool holds "
+                    f"{r['bytes_per_token_vs_fp16']:.3f}x the fp16 "
+                    f"bytes/token (> 0.55x) — the scale planes outgrew "
+                    f"the quantization win")
     if args.tiering_gate:
         if tiering is None:
             raise SystemExit("--tiering-gate needs --async-tiering")

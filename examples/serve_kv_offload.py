@@ -2,7 +2,9 @@
 cache, comparing the paper's designs at the serving call-site (DESIGN.md
 §2a) — including preemption under HBM pressure and the mirror-free pooled
 decode path (decode straight over the device page pool, zero device→host
-mirror traffic).
+mirror traffic). The cache-descriptor support matrix shows which serving
+path each (engine, model family) pair runs, and the family sweep at the
+end drives int8 and SSM through the same pooled mirror-free path.
 
     PYTHONPATH=src python examples/serve_kv_offload.py
 """
@@ -11,11 +13,72 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.engines import EngineSpec, list_kv_engines
+from repro.core.engines.desc import MATRIX_FAMILIES, support_matrix
 from repro.models import build_model
 from repro.serving import Request, ServeConfig, ServingEngine
 
 
+def print_matrix():
+    rows = support_matrix()
+    fams = [f for f, _, _ in MATRIX_FAMILIES]
+    modes = {(e, f): m for e, f, m in rows}
+    engines = sorted({e for e, _, _ in rows})
+    width = max(max(len(f) for f in fams),
+                max(len(m) for m in modes.values())) + 2
+    print("KV engine x config family (from the cache descriptors):")
+    print("  " + " " * 10 + "".join(f"{f:>{width}}" for f in fams))
+    for eng in engines:
+        print(f"  {eng:10s}" + "".join(f"{modes[(eng, f)]:>{width}}"
+                                       for f in fams))
+    print()
+
+
+def family_sweep():
+    """int8 and SSM through the SAME pooled mirror-free path dense runs:
+    the descriptor decides the layout (int8 pages + bf16 scale planes at
+    half the HBM bytes/token; SSM state rows instead of pages), and greedy
+    tokens still match the sequential mirrored reference exactly."""
+    print("descriptor-driven families on the pooled path")
+    cfg = get_config("internlm2-1.8b-smoke")
+    scfg = get_config("mamba2-1.3b-smoke")
+    runs = (
+        ("int8", build_model(cfg, remat=False, kv_cache_dtype="int8"), cfg),
+        ("ssm", build_model(scfg, remat=False), scfg),
+    )
+    for fam, model, mcfg in runs:
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(1)
+        prompts = [rng.integers(0, mcfg.vocab_size, 12, dtype=np.int32)
+                   for _ in range(2)]
+
+        def reqs():
+            return [Request(rid=i, prompt=p.copy(), max_new=8)
+                    for i, p in enumerate(prompts)]
+
+        def engine():
+            return ServingEngine(model, params, ServeConfig(
+                max_len=32, page_tokens=8,
+                engine_spec=EngineSpec(engine="paged", kv_hot_window=16,
+                                       kv_hbm_bytes=64 << 20),
+                max_batch_seqs=2))
+        ref = reqs()
+        engine().generate_sequential(ref)
+        eng, rs = engine(), reqs()
+        assert eng.pooled and eng.fused
+        eng.generate(rs)
+        s = eng.stats()
+        assert [r.generated for r in rs] == [r.generated for r in ref], fam
+        assert s["mirror_d2h_bytes"] == 0
+        desc = model.cache_descriptor(8)
+        print(f"  family={fam:5s} planes={','.join(desc.plane_names):24s} "
+              f"mirror_d2h_bytes=0 tokens=reference "
+              f"(token_bytes={desc.token_group_bytes or desc.seq_state_bytes})")
+    print()
+
+
 def main():
+    print_matrix()
+    family_sweep()
     cfg = get_config("internlm2-1.8b-smoke")
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.PRNGKey(0))

@@ -212,10 +212,12 @@ class KVCacheEngine(abc.ABC):
             f"supports_pool() before init_pool()")
 
     def pool_views(self):
-        """The device pool arrays ``(pool_k, pool_v)``, each
-        ``(L, P, T, K, D)``. The engine retains ownership — callers must
-        hand updated arrays back through :meth:`commit_decode` /
-        :meth:`commit_prefill`."""
+        """The device pool planes in cache-descriptor order — for the
+        dense layout the classic ``(pool_k, pool_v)`` pair, each
+        ``(L, P, T, K, D)``; other descriptors return their own plane
+        tuples (int8 adds scale planes, MLA pools ``(c, kr)``). The
+        engine retains ownership — callers must hand updated arrays back
+        through :meth:`commit_step_planes` / :meth:`commit_prefill`."""
         raise RuntimeError(
             f"KV engine {self.engine_name!r} has no paged pool")
 
@@ -345,9 +347,47 @@ class KVCacheEngine(abc.ABC):
                        n_tokens: int) -> None:
         """Accept updated pool arrays after a prompt's KV was scattered
         into ``seq``'s pages on device (the admission path's one
-        device-side copy; still zero device→host traffic)."""
+        device-side copy; still zero device→host traffic). Dense
+        ``(k, v)`` special case of :meth:`commit_prefill_planes`."""
         raise RuntimeError(
             f"KV engine {self.engine_name!r} has no paged pool")
+
+    # ------------------------------------------- descriptor plane surface
+    # Cache descriptors (ISSUE 9): a pooled engine built from a KVSpec
+    # carrying a CacheDescriptor owns one device array PER PLANE. The
+    # plane-generic commit twins below accept the full plane tuple in
+    # descriptor order; the dense (pool_k, pool_v) entries above remain as
+    # the two-plane special case. State-bearing descriptors (SSM) have no
+    # pages at all — their per-seq state rows move through
+    # state_views()/commit_state() and ride preempt/restore with the row.
+
+    def commit_step_planes(self, planes, seqs: Sequence[int],
+                           n_tokens: Sequence[int],
+                           prepared: Optional[Sequence[int]] = None) -> None:
+        """Plane-generic :meth:`commit_step`: ``planes`` is the updated
+        pool-plane tuple in cache-descriptor order."""
+        raise RuntimeError(
+            f"KV engine {self.engine_name!r} has no paged pool")
+
+    def commit_prefill_planes(self, planes, seq: int,
+                              n_tokens: int) -> None:
+        """Plane-generic :meth:`commit_prefill`."""
+        raise RuntimeError(
+            f"KV engine {self.engine_name!r} has no paged pool")
+
+    def state_views(self, seqs: Sequence[int]):
+        """Batched per-seq state rows for one step — one ``(L, B, *shape)``
+        array per descriptor seq plane. Only state-bearing descriptors
+        (SSM) implement this."""
+        raise RuntimeError(
+            f"KV engine {self.engine_name!r} has no per-seq state rows")
+
+    def commit_state(self, seqs: Sequence[int], n_tokens: Sequence[int],
+                     states) -> None:
+        """Commit one step's updated state rows; rows with
+        ``n_tokens[i] == 0`` commit nothing (speculative/padding rewind)."""
+        raise RuntimeError(
+            f"KV engine {self.engine_name!r} has no per-seq state rows")
 
 
 _KV_REGISTRY: dict[str, type[KVCacheEngine]] = {}

@@ -40,6 +40,8 @@ import numpy as np
 
 from repro.core.clock import ShardedDrainer, SimClock
 from repro.core.engines.base import EngineSpec
+from repro.core.engines.desc import (CacheDescriptor, PLANE_STAT_NAMES,
+                                     dense_descriptor)
 from repro.core.engines.kv import KVCacheEngine, register_kv_engine
 from repro.core.lru import LRUList
 from repro.roofline.hw import SSD, TierSpec
@@ -60,6 +62,17 @@ class KVSpec:
     head_dim: int
     page_tokens: int = 16
     dtype: np.dtype = np.dtype(np.float16)
+    #: optional cache descriptor (repro.core.engines.desc) naming the pool's
+    #: planes; None resolves to the legacy dense (k, v) layout, so every
+    #: mirror engine's byte math below is unchanged
+    desc: Optional[CacheDescriptor] = None
+
+    def descriptor(self) -> CacheDescriptor:
+        if self.desc is not None:
+            return self.desc
+        return dense_descriptor(self.num_layers, self.kv_heads,
+                                self.head_dim, self.page_tokens,
+                                dtype=np.dtype(self.dtype).name)
 
     @property
     def token_bytes(self) -> int:          # K+V for one token, one layer
@@ -95,6 +108,14 @@ class _TieredKV(KVCacheEngine):
                             # engines without a transfer pipeline, same rule
                             "async_spills": 0, "prefetch_hits": 0,
                             "stall_ticks_saved": 0}
+        # per-plane pool traffic (ISSUE 9) — one counter pair per plane in
+        # the descriptor universe, zero on engines without a pool, so the
+        # stats key set stays identical across every registered engine.
+        # Paged-plane spills satisfy the exactness invariant per plane:
+        # pool_d2h_bytes_<p> == pool_page_spills × plane_page_bytes(p).
+        for plane in PLANE_STAT_NAMES:
+            self.stats[f"pool_d2h_bytes_{plane}"] = 0
+            self.stats[f"pool_h2d_bytes_{plane}"] = 0
 
     # hooks -----------------------------------------------------------------
     def _append_tokens(self, seq: int, toks: list[np.ndarray]) -> None:
@@ -236,18 +257,40 @@ class PagedKVCache(_TieredKV):
         if self.seq_len or self.pool or self._preempted:
             raise RuntimeError("init_pool() must run before any append")
         spec = self.spec
-        self.pool_dtype = np.dtype(dtype if dtype is not None else spec.dtype)
-        # one physical page spans every layer (the block table is shared by
-        # the whole stack), so a page group costs L per-layer pages of HBM
-        self._group_bytes = (spec.num_layers * 2 * spec.page_tokens
-                             * spec.kv_heads * spec.head_dim
-                             * self.pool_dtype.itemsize)
-        self.pool_pages = (pages if pages is not None else
-                           max(self.hbm_budget_bytes // self._group_bytes, 1))
-        shape = (spec.num_layers, self.pool_pages, spec.page_tokens,
-                 spec.kv_heads, spec.head_dim)
-        self.dev_k = jnp.zeros(shape, self.pool_dtype)
-        self.dev_v = jnp.zeros(shape, self.pool_dtype)
+        desc = spec.descriptor()
+        if dtype is not None:
+            desc = desc.with_kv_dtype(dtype)
+        if desc.page_tokens != spec.page_tokens:
+            raise ValueError(
+                f"descriptor page_tokens={desc.page_tokens} disagrees with "
+                f"KVSpec page_tokens={spec.page_tokens}")
+        self.desc = desc
+        self._plane_names = tuple(p.name for p in desc.paged_planes)
+        self._state_only = not desc.has_pages
+        kv_planes = [p for p in desc.paged_planes if p.kind == "kv"]
+        self.pool_dtype = (kv_planes[0].np_dtype if kv_planes
+                           else np.dtype(np.float32))
+        # one physical page spans every layer and every plane (the block
+        # table is shared by the whole stack), so a page group costs L
+        # per-layer pages of HBM summed across the descriptor's planes
+        self._group_bytes = desc.page_group_bytes
+        self.dev_planes: dict = {}
+        if desc.has_pages:
+            self.pool_pages = (pages if pages is not None else
+                               max(self.hbm_budget_bytes
+                                   // self._group_bytes, 1))
+            for p in desc.paged_planes:
+                shape = ((spec.num_layers, self.pool_pages, spec.page_tokens)
+                         + tuple(p.shape))
+                self.dev_planes[p.name] = jnp.zeros(shape, p.np_dtype)
+        else:
+            # state-only layout (SSM): zero paged planes — per-seq state
+            # rows ride alongside the (empty) page tables instead, spilled
+            # and restored whole with the row
+            self.pool_pages = 0
+            self._state_capacity = max(
+                self.hbm_budget_bytes // max(desc.seq_state_bytes, 1), 1)
+        self.seq_state: dict[int, dict] = {}     # seq → plane → (L, *shape)
         self.free_pages: list[int] = list(range(self.pool_pages - 1, -1, -1))
         self.pool_lru = LRUList()                    # resident phys pages
         # refcounted page users: phys → {seq: logical}. A page may appear in
@@ -255,8 +298,8 @@ class PagedKVCache(_TieredKV):
         # freed only when its user dict empties AND no index pin remains.
         self.page_users: dict[int, dict[int, int]] = {}
         self.trie_refs: set[int] = set()             # index-pinned pages
-        self.host_pages: dict[tuple[int, int], np.ndarray] = {}  # spilled
-        self._in_restore = False
+        # spilled pages: (seq, logical) → {plane → (L, T, *shape)}
+        self.host_pages: dict[tuple[int, int], dict] = {}
         self._pooled = True
         # async tiering (ISSUE 8): spills/faults drain through a background
         # pipeline; the hot/cold victim model runs in BOTH modes so spill
@@ -275,21 +318,26 @@ class PagedKVCache(_TieredKV):
                            "pool_d2h_bytes": 0, "pool_h2d_bytes": 0})
 
     def pool_views(self):
+        """Device pool planes in descriptor order — dense descriptors
+        return the classic ``(pool_k, pool_v)`` pair."""
         if not self._pooled:
             return super().pool_views()      # the loud "no pool" error
-        return self.dev_k, self.dev_v
+        return tuple(self.dev_planes[n] for n in self._plane_names)
 
     def _token_group_bytes(self) -> int:
-        """One token across all layers at pool dtype."""
-        spec = self.spec
-        return (spec.num_layers * 2 * spec.kv_heads * spec.head_dim
-                * self.pool_dtype.itemsize)
+        """One pooled token across all layers and planes."""
+        return self.desc.token_group_bytes
 
-    def _page_np(self, phys: int) -> np.ndarray:
-        """Materialize device page ``phys`` as host (L, 2, T, K, D)."""
-        import jax.numpy as jnp
-        return np.asarray(jnp.stack(
-            [self.dev_k[:, phys], self.dev_v[:, phys]], axis=1))
+    def _page_planes_np(self, phys: int) -> dict:
+        """Materialize device page ``phys`` as host arrays, one
+        ``(L, T, *shape)`` per plane."""
+        return {n: np.asarray(self.dev_planes[n][:, phys])
+                for n in self._plane_names}
+
+    def _count_plane_bytes(self, counter: str, page: dict) -> None:
+        """Charge a page/blob's bytes to the per-plane traffic counters."""
+        for name, arr in page.items():
+            self.stats[f"{counter}_{name}"] += arr.nbytes
 
     def _touch_page(self, phys: int) -> None:
         """One page access: LRU recency + the hot/cold model's EMA."""
@@ -355,21 +403,23 @@ class PagedKVCache(_TieredKV):
                 self._share_index.forget_phys(phys)
             else:
                 self.trie_refs.discard(phys)
-        page = self._page_np(phys)
+        page = self._page_planes_np(phys)
+        nbytes = sum(a.nbytes for a in page.values())
         self.host_pages[(seq, logical)] = page
         self.block_table[seq][logical] = -1
         self.page_users.pop(phys)
         self.pool_lru.remove(phys)
         if self._pipeline is not None:
             self._pipeline.submit(self._pipeline.D2H, ("d2h", seq, logical),
-                                  HOST_LINK, "write", page.nbytes)
+                                  HOST_LINK, "write", nbytes)
             self.stats["async_spills"] += 1
             self.stats["stall_ticks_saved"] += 1   # sync stalls right here
         else:
-            self.clock.charge(HOST_LINK, "write", page.nbytes,
+            self.clock.charge(HOST_LINK, "write", nbytes,
                               random_access=True)          # D2H page out
         self.stats["pool_page_spills"] += 1
-        self.stats["pool_d2h_bytes"] += page.nbytes
+        self.stats["pool_d2h_bytes"] += nbytes
+        self._count_plane_bytes("pool_d2h_bytes", page)
         return phys
 
     def _alloc_page(self, pinned: set) -> int:
@@ -423,18 +473,18 @@ class PagedKVCache(_TieredKV):
             # foreground wait; a prefetched page usually finished already
             if self._pipeline.barrier(h2d_key) == 0.0:
                 self.stats["stall_ticks_saved"] += 1
-        page = self.host_pages.pop((seq, logical))       # (L, 2, T, K, D)
-        self.dev_k = self.dev_k.at[:, phys].set(
-            jnp.asarray(page[:, 0], self.pool_dtype))
-        self.dev_v = self.dev_v.at[:, phys].set(
-            jnp.asarray(page[:, 1], self.pool_dtype))
+        page = self.host_pages.pop((seq, logical))   # plane → (L, T, *shape)
+        nbytes = sum(a.nbytes for a in page.values())
+        for name in self._plane_names:
+            self.dev_planes[name] = self.dev_planes[name].at[:, phys].set(
+                jnp.asarray(page[name], self.dev_planes[name].dtype))
         self.block_table[seq][logical] = phys
         self.page_users[phys] = {seq: logical}
         self._heat.assign(phys)
         self._touch_page(phys)
         self._fault_mark[phys] = self._alloc_seq
         if self._pipeline is None:
-            self.clock.charge(HOST_LINK, "read", page.nbytes,
+            self.clock.charge(HOST_LINK, "read", nbytes,
                               random_access=True)        # H2D fault-in
         if prefetched:
             # the scheduler's lookahead had this page's transfer in flight:
@@ -442,7 +492,8 @@ class PagedKVCache(_TieredKV):
             self.stats["prefetch_hits"] += 1
         else:
             self.stats["pool_faults"] += 1
-        self.stats["pool_h2d_bytes"] += page.nbytes
+        self.stats["pool_h2d_bytes"] += nbytes
+        self._count_plane_bytes("pool_h2d_bytes", page)
 
     def _ensure_seq_resident(self, seq: int, pinned: set) -> None:
         faulted = []
@@ -469,6 +520,10 @@ class PagedKVCache(_TieredKV):
         batch sequence's pages are pinned — a later allocation must never
         spill a page the kernel is about to read — and each sequence gets
         pages covering its whole chunk."""
+        if self._pooled and self._state_only:
+            raise RuntimeError(
+                "state-only descriptor has no pages; drive steps through "
+                "state_views()/commit_state()")
         pinned = set(seqs)
         T = self.spec.page_tokens
         for seq, n in zip(seqs, n_tokens):
@@ -497,16 +552,29 @@ class PagedKVCache(_TieredKV):
     def commit_step(self, pool_k, pool_v, seqs: Sequence[int],
                     n_tokens: Sequence[int],
                     prepared: Optional[Sequence[int]] = None) -> None:
-        """Commit ``n_tokens[i]`` tokens per sequence. With speculative
-        decode, ``n_tokens[i]`` may be SMALLER than the ``prepared[i]``
-        count :meth:`prepare_step` was sized for: the rejected tail's KV
-        was physically scattered (the HBM write is charged for every
-        prepared slot) but never becomes visible — ``seq_len`` advances by
-        the accepted count only, pages allocated solely for the tail go
-        back to the free list, and stale KV inside retained pages is
-        masked by the kernels (slots at or past ``lengths``) until the
-        next committed tokens overwrite it in place."""
-        self.dev_k, self.dev_v = pool_k, pool_v
+        """Dense ``(k, v)`` special case of :meth:`commit_step_planes`."""
+        return self.commit_step_planes((pool_k, pool_v), seqs, n_tokens,
+                                       prepared=prepared)
+
+    def commit_step_planes(self, planes, seqs: Sequence[int],
+                           n_tokens: Sequence[int],
+                           prepared: Optional[Sequence[int]] = None) -> None:
+        """Commit ``n_tokens[i]`` tokens per sequence, accepting updated
+        pool planes in descriptor order. With speculative decode,
+        ``n_tokens[i]`` may be SMALLER than the ``prepared[i]`` count
+        :meth:`prepare_step` was sized for: the rejected tail's KV was
+        physically scattered (the HBM write is charged for every prepared
+        slot) but never becomes visible — ``seq_len`` advances by the
+        accepted count only, pages allocated solely for the tail go back
+        to the free list, and stale KV inside retained pages is masked by
+        the kernels (slots at or past ``lengths``) until the next
+        committed tokens overwrite it in place."""
+        if len(planes) != len(self._plane_names):
+            raise ValueError(
+                f"expected {len(self._plane_names)} pool planes "
+                f"{self._plane_names}, got {len(planes)}")
+        for name, arr in zip(self._plane_names, planes):
+            self.dev_planes[name] = arr
         per_tok = self._token_group_bytes()
         T = self.spec.page_tokens
         for i, (seq, n) in enumerate(zip(seqs, n_tokens)):
@@ -580,7 +648,16 @@ class PagedKVCache(_TieredKV):
 
     def commit_prefill(self, pool_k, pool_v, seq: int,
                        n_tokens: int) -> None:
-        self.dev_k, self.dev_v = pool_k, pool_v
+        """Dense ``(k, v)`` special case of :meth:`commit_prefill_planes`."""
+        return self.commit_prefill_planes((pool_k, pool_v), seq, n_tokens)
+
+    def commit_prefill_planes(self, planes, seq: int, n_tokens: int) -> None:
+        if len(planes) != len(self._plane_names):
+            raise ValueError(
+                f"expected {len(self._plane_names)} pool planes "
+                f"{self._plane_names}, got {len(planes)}")
+        for name, arr in zip(self._plane_names, planes):
+            self.dev_planes[name] = arr
         self.seq_len[seq] = self.seq_len.get(seq, 0) + n_tokens
         for phys in self.block_table.get(seq, []):
             if phys >= 0:
@@ -607,6 +684,9 @@ class PagedKVCache(_TieredKV):
     def can_admit_tokens(self, n_tokens: int) -> bool:
         if not self._pooled:
             return True
+        if self._state_only:
+            # state rows are fixed-size: admission is a row-count check
+            return len(self.seq_state) < self._state_capacity
         pages_needed = -(-n_tokens // self.spec.page_tokens)
         return (pages_needed + self._reserve_pages()
                 <= len(self.free_pages) + self._idle_index_pages())
@@ -621,7 +701,7 @@ class PagedKVCache(_TieredKV):
         whole batch while allocating. Shared pages (several live users)
         never spill, so they don't count; idle index-held pages reclaim
         for free, so they do."""
-        if not self._pooled:
+        if not self._pooled or self._state_only:
             return True
         T = self.spec.page_tokens
         batch = set(seqs)
@@ -646,6 +726,8 @@ class PagedKVCache(_TieredKV):
     def _reserve_pages(self) -> int:
         """Pages the next decode step will claim: one per active sequence
         whose next token starts a fresh page."""
+        if self._pooled and self._state_only:
+            return 0
         T = self.spec.page_tokens
         return sum(1 for seq, n in self.seq_len.items()
                    if seq not in self._preempted
@@ -686,7 +768,7 @@ class PagedKVCache(_TieredKV):
 
     # ------------------------------------------------------- prefix sharing
     def supports_sharing(self) -> bool:
-        return self._pooled
+        return self._pooled and not self._state_only
 
     def set_share_index(self, index) -> None:
         if not self._pooled:
@@ -773,11 +855,13 @@ class PagedKVCache(_TieredKV):
         # lazy import: repro.serving.batching owns the device-pool helpers
         # and importing it at module scope would cycle through the serving
         # package
-        from repro.serving.batching import copy_pool_page
+        from repro.serving.batching import copy_pool_page_planes
         phys = self.block_table[seq][logical]
         new = self._alloc_page(set(pinned) | {seq})
-        self.dev_k, self.dev_v = copy_pool_page(
-            self.dev_k, self.dev_v, phys, new)
+        copied = copy_pool_page_planes(
+            tuple(self.dev_planes[n] for n in self._plane_names), phys, new)
+        for name, arr in zip(self._plane_names, copied):
+            self.dev_planes[name] = arr
         self.page_users[phys].pop(seq, None)
         self.page_users[new] = {seq: logical}
         self.block_table[seq][logical] = new
@@ -789,13 +873,170 @@ class PagedKVCache(_TieredKV):
         if self._share_index is not None:
             self._share_index.on_cow(seq, phys)
 
+    # ------------------------------------------------------ per-seq state rows
+    # SSM configs pool ZERO paged planes: their cache is a fixed-size state
+    # row per sequence (descriptor seq_planes) that rides alongside the
+    # block tables — committed with the row each step, spilled/preempted/
+    # restored whole, and rolled back by committing an earlier slot's state.
+    def state_views(self, seqs: Sequence[int]):
+        """Batched state rows for one step: one ``(L, B, *shape)`` array
+        per seq plane in descriptor order. Sequences without committed
+        state yet (fresh admissions) read zero-initialized rows."""
+        import jax.numpy as jnp
+        if not self._pooled or not self.desc.has_state:
+            raise RuntimeError("state_views() requires a pooled engine with "
+                               "a state-bearing descriptor")
+        out = []
+        for p in self.desc.seq_planes:
+            zero = None
+            rows = []
+            for seq in seqs:
+                arr = self.seq_state.get(seq, {}).get(p.name)
+                if arr is None:
+                    if zero is None:
+                        zero = jnp.zeros(
+                            (self.spec.num_layers,) + tuple(p.shape),
+                            p.np_dtype)
+                    arr = zero
+                rows.append(arr)
+            out.append(jnp.stack(rows, axis=1))
+        return tuple(out)
+
+    def commit_state(self, seqs: Sequence[int], n_tokens: Sequence[int],
+                     states) -> None:
+        """Commit one step's updated state rows. ``states``: one
+        ``(L, B, *shape)`` per seq plane (descriptor order); row ``i``
+        becomes ``seqs[i]``'s new state and ``seq_len`` advances by
+        ``n_tokens[i]``. Rows with ``n_tokens[i] == 0`` (batch padding,
+        fully-rejected speculative rows) commit NOTHING — their stored
+        state is untouched, which is the state-row form of the paged
+        rewind rule."""
+        if not self._pooled or not self.desc.has_state:
+            raise RuntimeError("commit_state() requires a pooled engine "
+                               "with a state-bearing descriptor")
+        live = 0
+        for i, (seq, n) in enumerate(zip(seqs, n_tokens)):
+            n = int(n)
+            if n <= 0:
+                continue
+            self._check_active(seq)
+            live += 1
+            row = self.seq_state.setdefault(seq, {})
+            for p, arr in zip(self.desc.seq_planes, states):
+                row[p.name] = arr[:, i]
+            self.seq_len[seq] = self.seq_len.get(seq, 0) + n
+            self.stats["pool_appends"] += n
+        self.clock.charge(HBM, "write", live * self.desc.seq_state_bytes)
+
+    def _spill_state_planes(self, seq: int) -> dict:
+        """Preemption blobs for a state-only sequence: the device state
+        rows come down over the link (D2H), one array per seq plane."""
+        blobs = {}
+        for p in self.desc.seq_planes:
+            arr = self.seq_state.get(seq, {}).get(p.name)
+            if arr is None:
+                arr = np.zeros((self.spec.num_layers,) + tuple(p.shape),
+                               p.np_dtype)
+            blobs[p.name] = np.asarray(arr)
+        nbytes = sum(a.nbytes for a in blobs.values())
+        self.clock.charge(HOST_LINK, "write", nbytes, random_access=False)
+        self.stats["pool_d2h_bytes"] += nbytes
+        self._count_plane_bytes("pool_d2h_bytes", blobs)
+        return blobs
+
+    def _restore_state_planes(self, seq: int, length: int,
+                              blobs: dict) -> None:
+        import jax.numpy as jnp
+        self.seq_state[seq] = {n: jnp.asarray(a) for n, a in blobs.items()}
+        nbytes = sum(a.nbytes for a in blobs.values())
+        self.clock.charge(HOST_LINK, "read", nbytes, random_access=False)
+        self.clock.charge(HBM, "write", nbytes)
+        self.stats["pool_h2d_bytes"] += nbytes
+        self._count_plane_bytes("pool_h2d_bytes", blobs)
+        self.seq_len[seq] = length
+
+    # --------------------------------------------- pooled preempt / restore
+    def preempt(self, seq: int) -> None:
+        """Pooled preemption spills PLANE blobs (one token-exact array per
+        paged plane, or the state rows) rather than the host engines'
+        dense ``(L, 2, T, K, D)`` blob — the layout leaves the pool the
+        same way it lives in it."""
+        if not self._pooled:
+            return super().preempt(seq)
+        self._check_active(seq)
+        length = self.seq_len.get(seq, 0)
+        blobs = (self._spill_state_planes(seq) if self._state_only
+                 else self._spill_pooled_planes(seq))
+        nbytes = sum(a.nbytes for a in blobs.values())
+        # sequential drain of the whole sequence out of the host tier and
+        # onto the disk tier (one streamed copy, no random faults)
+        self.clock.charge(HOST_LINK, "read", nbytes, random_access=False)
+        self.clock.charge(SSD, "write", nbytes, random_access=False)
+        self._drop_seq(seq)
+        self.seq_len.pop(seq, None)
+        self._preempted[seq] = (length, blobs)
+        self.stats["preempts"] += 1
+        self.stats["preempt_out_bytes"] += nbytes
+
+    def restore(self, seq: int) -> None:
+        if not self._pooled:
+            return super().restore(seq)
+        item = self._preempted.pop(seq, None)
+        if item is None:
+            raise RuntimeError(f"sequence {seq} is not preempted")
+        length, blobs = item
+        nbytes = sum(a.nbytes for a in blobs.values())
+        self.clock.charge(SSD, "read", nbytes, random_access=False)
+        self.stats["restores"] += 1
+        self.stats["restore_in_bytes"] += nbytes
+        if self._state_only:
+            self._restore_state_planes(seq, length, blobs)
+        else:
+            self._restore_pooled_planes(seq, length, blobs)
+
+    def _restore_pooled_planes(self, seq: int, length: int,
+                               blobs: dict) -> None:
+        """Scatter a preempted sequence's plane blobs into fresh pool
+        pages: disk → host (charged by :meth:`restore`) → device (PCIe
+        upload + HBM write). Pages come from the same allocator as any
+        append, so a tight pool may spill other sequences to make room."""
+        import jax.numpy as jnp
+        spec = self.spec
+        pinned = {seq}
+        table = self.block_table.setdefault(seq, [])
+        npages = -(-length // spec.page_tokens)
+        for _ in range(npages - len(table)):
+            self._extend_table(seq, pinned)
+        for logical in range(npages):
+            lo = logical * spec.page_tokens
+            hi = min(lo + spec.page_tokens, length)
+            phys = table[logical]
+            for name in self._plane_names:
+                plane = self.dev_planes[name]
+                chunk = jnp.asarray(blobs[name][:, lo:hi], plane.dtype)
+                self.dev_planes[name] = \
+                    plane.at[:, phys, :hi - lo].set(chunk)
+            self._touch_page(phys)
+        nbytes = sum(a.nbytes for a in blobs.values())
+        self.clock.charge(HOST_LINK, "read", nbytes, random_access=False)
+        self.clock.charge(HBM, "write", nbytes)
+        self.stats["pool_h2d_bytes"] += nbytes
+        self._count_plane_bytes("pool_h2d_bytes", blobs)
+        self.stats["pool_appends"] += length
+        self.seq_len[seq] = length
+
     # pooled data paths ------------------------------------------------------
     def _append_tokens_pooled(self, seq: int, toks: list[np.ndarray]) -> None:
-        """Host-facing append in pooled mode (benchmarks, the sequential
-        mirror, and restores): scatter into the device pool. Decode-shaped
-        appends model device-born tokens (HBM write only); restores pay the
-        host→device upload."""
+        """Host-facing append in pooled mode (benchmarks and the sequential
+        mirror): scatter into the device pool. Decode-shaped appends model
+        device-born tokens (HBM write only). Dense ``(k, v)`` layouts only
+        — other families' hosts-side callers have no dense token format."""
         import jax.numpy as jnp
+        if self.desc.kernel != "dense":
+            raise NotImplementedError(
+                f"host-facing appends are dense-only; {self.desc.family!r} "
+                f"pools are fed on device via commit_step_planes/"
+                f"commit_prefill_planes")
         spec = self.spec
         pinned = {seq}
         self._ensure_seq_resident(seq, pinned)
@@ -815,57 +1056,51 @@ class PagedKVCache(_TieredKV):
                        hi - logical * spec.page_tokens)
             chunk = arr[lo - start:hi - start]    # (m, L, 2, K, D)
             phys = table[logical]
-            self.dev_k = self.dev_k.at[:, phys, sl].set(
+            self.dev_planes["k"] = self.dev_planes["k"].at[:, phys, sl].set(
                 jnp.asarray(chunk[:, :, 0].transpose(1, 0, 2, 3),
                             self.pool_dtype))
-            self.dev_v = self.dev_v.at[:, phys, sl].set(
+            self.dev_planes["v"] = self.dev_planes["v"].at[:, phys, sl].set(
                 jnp.asarray(chunk[:, :, 1].transpose(1, 0, 2, 3),
                             self.pool_dtype))
             self._touch_page(phys)
         nbytes = len(toks) * self._token_group_bytes()
-        if self._in_restore:
-            # disk → host → device: pay the PCIe upload per restored page
-            self.clock.charge(HOST_LINK, "read", nbytes, random_access=False)
-            self.stats["pool_h2d_bytes"] += nbytes
         self.clock.charge(HBM, "write", nbytes)
         self.stats["pool_appends"] += len(toks)
         self.seq_len[seq] = end
 
-    def restore(self, seq: int) -> None:
-        if not self._pooled:
-            return super().restore(seq)
-        self._in_restore = True
-        try:
-            super().restore(seq)
-        finally:
-            self._in_restore = False
-
     def _read_pooled(self, seq: int, layer: int) -> np.ndarray:
         spec = self.spec
+        if self.desc.kernel != "dense":
+            raise NotImplementedError(
+                f"host-facing reads are dense-only; {self.desc.family!r} "
+                f"pools are consumed on device through pool_views()")
         self._ensure_seq_resident(seq, {seq})
         T = self.seq_len.get(seq, 0)
         out = np.zeros((2, T, spec.kv_heads, spec.head_dim), spec.dtype)
+        dev_k, dev_v = self.dev_planes["k"], self.dev_planes["v"]
         for logical, phys in enumerate(self.block_table.get(seq, [])):
             lo = logical * spec.page_tokens
             hi = min(lo + spec.page_tokens, T)
             if lo >= T:
                 break
             out[0, lo:hi] = np.asarray(
-                self.dev_k[layer, phys, :hi - lo]).astype(spec.dtype)
+                dev_k[layer, phys, :hi - lo]).astype(spec.dtype)
             out[1, lo:hi] = np.asarray(
-                self.dev_v[layer, phys, :hi - lo]).astype(spec.dtype)
+                dev_v[layer, phys, :hi - lo]).astype(spec.dtype)
             self._touch_page(phys)
             self.clock.charge(HBM, "read", (hi - lo) * spec.token_bytes)
         return out
 
-    def _spill_pooled(self, seq: int) -> np.ndarray:
-        """Whole-sequence preemption blob, gathered page by page: resident
-        pages pay a D2H transfer each, already-spilled pages are host-side
-        copies (no device traffic)."""
+    def _spill_pooled_planes(self, seq: int) -> dict:
+        """Whole-sequence preemption blobs — one token-exact
+        ``(L, T, *shape)`` array per paged plane — gathered page by page:
+        resident pages pay a D2H transfer each, already-spilled pages are
+        host-side copies (no device traffic)."""
         spec = self.spec
         T = self.seq_len.get(seq, 0)
-        blob = np.zeros((spec.num_layers, 2, T, spec.kv_heads,
-                         spec.head_dim), self.pool_dtype)
+        blobs = {p.name: np.zeros((spec.num_layers, T) + tuple(p.shape),
+                                  p.np_dtype)
+                 for p in self.desc.paged_planes}
         for logical, phys in enumerate(self.block_table.get(seq, [])):
             lo = logical * spec.page_tokens
             hi = min(lo + spec.page_tokens, T)
@@ -878,18 +1113,23 @@ class PagedKVCache(_TieredKV):
                     self._pipeline.barrier(("d2h", seq, logical))
                 page = self.host_pages[(seq, logical)]
             else:
-                page = self._page_np(phys)
-                self.clock.charge(HOST_LINK, "write", page.nbytes,
+                page = self._page_planes_np(phys)
+                nbytes = sum(a.nbytes for a in page.values())
+                self.clock.charge(HOST_LINK, "write", nbytes,
                                   random_access=True)      # D2H page out
-                self.stats["pool_d2h_bytes"] += page.nbytes
+                self.stats["pool_d2h_bytes"] += nbytes
                 self.stats["pool_page_spills"] += 1
-            blob[:, :, lo:hi] = page[:, :, :hi - lo]
-        return blob
+                self._count_plane_bytes("pool_d2h_bytes", page)
+            for name, arr in page.items():
+                blobs[name][:, lo:hi] = arr[:, :hi - lo]
+        return blobs
 
     def _drop_seq_pooled(self, seq: int) -> None:
-        """Release ``seq``'s pages: shared pages only lose this sequence's
-        refcount; a page returns to the free list when its last live user
-        leaves AND the prefix index does not pin it."""
+        """Release ``seq``'s pages (and any state rows): shared pages only
+        lose this sequence's refcount; a page returns to the free list
+        when its last live user leaves AND the prefix index does not pin
+        it."""
+        self.seq_state.pop(seq, None)
         for logical, phys in enumerate(self.block_table.pop(seq, [])):
             if phys >= 0:
                 users = self.page_users.get(phys, {})
@@ -981,7 +1221,9 @@ class PagedKVCache(_TieredKV):
 
     def _spill(self, seq: int) -> np.ndarray:
         if self._pooled:
-            return self._spill_pooled(seq)
+            raise RuntimeError(
+                "pooled preemption goes through plane blobs, not the dense "
+                "host spill hook")
         spec = self.spec
         T = self.seq_len.get(seq, 0)
         blob = np.zeros((spec.num_layers, 2, T, spec.kv_heads,
@@ -1006,18 +1248,24 @@ class PagedKVCache(_TieredKV):
     # -------------------------------------------------------------- pressure
     def hbm_used_bytes(self) -> int:
         if self._pooled:
+            if self._state_only:
+                return len(self.seq_state) * self.desc.seq_state_bytes
             return ((self.pool_pages - len(self.free_pages))
                     * self._group_bytes)
         return len(self.hbm_lru) * self.spec.page_bytes
 
     def hbm_limit_bytes(self) -> Optional[int]:
         if self._pooled:
+            if self._state_only:
+                return self._state_capacity * self.desc.seq_state_bytes
             return self.pool_pages * self._group_bytes
         return self.hbm_capacity * self.spec.page_bytes
 
     def pressure(self) -> float:
         if not self._pooled:
             return super().pressure()
+        if self._state_only:
+            return min(len(self.seq_state) / self._state_capacity, 1.0)
         # count the pages the NEXT decode step will claim, so the scheduler
         # preempts one tick before allocation would have to spill pages of
         # the running batch itself (page-granular early warning); pages held
@@ -1029,6 +1277,9 @@ class PagedKVCache(_TieredKV):
 
     def resident_bytes(self, seq: int) -> int:
         if self._pooled:
+            if self._state_only:
+                return (self.desc.seq_state_bytes
+                        if seq in self.seq_state else 0)
             n = sum(1 for phys in self.block_table.get(seq, ()) if phys >= 0)
             return n * self._group_bytes
         n = sum(1 for phys in self.block_table.get(seq, ())
@@ -1046,7 +1297,7 @@ class PagedKVCache(_TieredKV):
         (``PageHeat.hotness`` summed — evicting them forfeits the fewest
         expected future hits), then by LRU coldness. Host mode keeps the
         LRU fallback."""
-        if not self._pooled:
+        if not self._pooled or self._state_only:
             return None
         cands = list(candidates)
         if not cands:

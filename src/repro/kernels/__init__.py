@@ -52,6 +52,34 @@ and the pooled serving decode path):
   (``mode="drop"``). Pinned by ``tests/test_kernels.py``
   (commit-one-more-slot launches are bit-for-bit prefixes of the block
   launch; poisoned rolled-back slots change nothing).
+* **Multi-plane layouts** (cache descriptors, ISSUE 9) — the dense entries
+  above are the ``(k, v)``-plane special case. A model family's
+  ``CacheDescriptor`` (``repro.core.engines.desc``) names the planes its
+  pool actually holds, and each plane is its own ``(L, P, T, *shape)``
+  device array sharing ONE block table, ONE ``lengths`` and ONE ``q_lens``
+  per batch — everything in this contract (dead-page clamping, ragged
+  masking, speculative rewind, bucketing, COW aliasing) applies per plane
+  unchanged. Two plane-specific entries exist:
+
+  - ``paged_attention_ragged_q8`` / ``paged_attention_layers_ragged_q8`` —
+    int8 family: ``k``/``v`` pages are ``(P, T, K, D) int8`` and ride with
+    per-(token, head) **scale planes** ``k_scale``/``v_scale`` of shape
+    ``(P, T, K) bfloat16``. Dequant (``int8 × scale → fp32``) happens in
+    the kernel body, so the dominant pool read moves ~half the HBM bytes
+    of fp16; the fp32 oracle is dequantize-then-dense-ref, pinned within
+    tolerance by ``tests/test_kernels.py``.
+  - ``mla_paged_attention(_ragged)`` — MLA family: the pool holds ONE
+    latent plane ``c: (P, T, dc)`` and one rope-key plane
+    ``kr: (P, T, dr)`` per token, shared by every query head (no K axis in
+    the grid). Queries arrive weight-absorbed (``q_c = q_nope · w_uk``,
+    plus rope ``q_r``), scores are ``(q_c·cᵀ + q_r·krᵀ) · scale`` with the
+    caller's ``1/sqrt(qk_nope + qk_rope)``, and the output is the
+    attended latent ``(B, Qmax, H, dc)`` — ``w_uv``/``wo`` stay in the
+    model.
+
+  SSM state planes never reach a paged kernel: they are per-seq rows that
+  ride alongside the block tables in the engine (committed/rewound with
+  the row), not per-token pages.
 * **Bucketing ladder** — callers (the serving engine) pad batch width and
   ``Qmax`` up to a power-of-two ladder so the jitted entries stop
   recompiling per width; the padding rows/slots are masked by
@@ -80,10 +108,16 @@ backends.
 """
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.paged_attention.ops import (
-    paged_attention, paged_attention_layers, paged_attention_layers_ragged,
-    paged_attention_ragged)
+    mla_paged_attention, mla_paged_attention_layers_ragged,
+    mla_paged_attention_ragged, paged_attention, paged_attention_layers,
+    paged_attention_layers_ragged, paged_attention_layers_ragged_q8,
+    paged_attention_q8, paged_attention_ragged, paged_attention_ragged_q8)
 from repro.kernels.log_patch.ops import log_patch
 
 __all__ = ["flash_attention", "paged_attention", "paged_attention_layers",
            "paged_attention_ragged", "paged_attention_layers_ragged",
+           "paged_attention_q8", "paged_attention_ragged_q8",
+           "paged_attention_layers_ragged_q8",
+           "mla_paged_attention", "mla_paged_attention_ragged",
+           "mla_paged_attention_layers_ragged",
            "log_patch"]

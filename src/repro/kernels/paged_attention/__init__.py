@@ -1,6 +1,12 @@
 from repro.kernels.paged_attention.ops import (
-    paged_attention, paged_attention_layers, paged_attention_layers_ragged,
-    paged_attention_ragged)
+    mla_paged_attention, mla_paged_attention_layers_ragged,
+    mla_paged_attention_ragged, paged_attention, paged_attention_layers,
+    paged_attention_layers_ragged, paged_attention_layers_ragged_q8,
+    paged_attention_q8, paged_attention_ragged, paged_attention_ragged_q8)
 
 __all__ = ["paged_attention", "paged_attention_layers",
-           "paged_attention_ragged", "paged_attention_layers_ragged"]
+           "paged_attention_ragged", "paged_attention_layers_ragged",
+           "paged_attention_q8", "paged_attention_ragged_q8",
+           "paged_attention_layers_ragged_q8",
+           "mla_paged_attention", "mla_paged_attention_ragged",
+           "mla_paged_attention_layers_ragged"]

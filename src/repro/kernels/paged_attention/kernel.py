@@ -379,3 +379,313 @@ def paged_attention_layers_ragged_pallas(q, pool_k, pool_v, block_table,
       qg, pool_k, pool_v)
     return out.reshape(L, B, K, Qm, G, D).transpose(0, 1, 3, 2, 4, 5).reshape(
         L, B, Qm, H, D)
+
+
+# ---------------------------------------------------------------------------
+# Descriptor-driven plane variants (ISSUE 9): the ragged entries above are
+# the ``dense`` cache family's kernels; the int8 family adds per-page scale
+# planes (dequant happens IN the kernel, so pool pages stay int8 in HBM and
+# the dominant KV read moves ~half the bytes), and the MLA family attends
+# over the latent plane (one (dc,) latent + one (dr,) rope key per token,
+# shared by every head — no K grid axis). Which entry a serving step uses
+# comes from the model's CacheDescriptor (core/engines/desc.py).
+# ---------------------------------------------------------------------------
+def _pa_ragged_q8_kernel(table_ref, len_ref, qlen_ref, q_ref, k_ref, v_ref,
+                         ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                         scale: float, page_tokens: int, group: int,
+                         batch_axis: int):
+    """Ragged-query body with in-kernel dequant: K/V pages arrive int8,
+    their per-(token, head) bf16 scales ride as separate planes, and the
+    fp32 product ``int8 * scale`` feeds the same online softmax as the
+    dense body — numerically the ``dequantize_kv`` grid, never
+    materialized in HBM."""
+    b = pl.program_id(batch_axis)
+    p = pl.program_id(batch_axis + 2)
+    last_p = pl.num_programs(batch_axis + 2) - 1
+    length = len_ref[b]
+    q_len = qlen_ref[b]
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    live = ((p * page_tokens) < length) & (q_len > 0)
+
+    @pl.when(live)
+    def _compute():
+        D = acc_ref.shape[-1]
+        q = q_ref[...].reshape(acc_ref.shape).astype(jnp.float32)  # (QG, D)
+        ks = ks_ref[...].reshape(page_tokens, 1).astype(jnp.float32)
+        vs = vs_ref[...].reshape(page_tokens, 1).astype(jnp.float32)
+        k = k_ref[...].reshape(page_tokens, D).astype(jnp.float32) * ks
+        v = v_ref[...].reshape(page_tokens, D).astype(jnp.float32) * vs
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = p * page_tokens + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        qi = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+        allow = (pos <= (length - q_len + qi)) & (qi < q_len)
+        s = jnp.where(allow, s, NEG_INF)
+        _ragged_softmax_step(s, m_ref, l_ref, acc_ref, v)
+
+    @pl.when(p == last_p)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = out.astype(o_ref.dtype).reshape(o_ref.shape)
+
+
+def paged_attention_ragged_q8_pallas(q, pool_k, pool_v, pool_ks, pool_vs,
+                                     block_table, lengths, q_lens, *,
+                                     scale: float | None = None,
+                                     interpret: bool = False):
+    """int8 ragged single-layer entry: q (B, Qmax, H, D); pool_k/v
+    (P, T, K, D) int8; pool_ks/vs (P, T, K) scale planes; block_table
+    (B, MP); lengths/q_lens (B,)."""
+    B, Qm, H, D = q.shape
+    P, T, K, _ = pool_k.shape
+    MP = block_table.shape[1]
+    G = H // K
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(B, Qm, K, G, D).transpose(0, 2, 1, 3, 4).reshape(
+        B, K, Qm * G, D)
+    table = jnp.clip(block_table, 0, P - 1).astype(jnp.int32)
+
+    kernel = functools.partial(_pa_ragged_q8_kernel, scale=scale,
+                               page_tokens=T, group=G, batch_axis=0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, K, MP),
+        in_specs=[
+            pl.BlockSpec((1, 1, Qm * G, D),
+                         lambda b, k, p, tbl, ln, ql: (b, k, 0, 0)),
+            pl.BlockSpec((1, T, 1, D),
+                         lambda b, k, p, tbl, ln, ql: (tbl[b, p], 0, k, 0)),
+            pl.BlockSpec((1, T, 1, D),
+                         lambda b, k, p, tbl, ln, ql: (tbl[b, p], 0, k, 0)),
+            pl.BlockSpec((1, T, 1),
+                         lambda b, k, p, tbl, ln, ql: (tbl[b, p], 0, k)),
+            pl.BlockSpec((1, T, 1),
+                         lambda b, k, p, tbl, ln, ql: (tbl[b, p], 0, k)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Qm * G, D),
+                               lambda b, k, p, tbl, ln, ql: (b, k, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Qm * G, 1), jnp.float32),
+            pltpu.VMEM((Qm * G, 1), jnp.float32),
+            pltpu.VMEM((Qm * G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, Qm * G, D), q.dtype),
+        interpret=interpret,
+    )(table, lengths.astype(jnp.int32), q_lens.astype(jnp.int32),
+      qg, pool_k, pool_v, pool_ks, pool_vs)
+    return out.reshape(B, K, Qm, G, D).transpose(0, 2, 1, 3, 4).reshape(
+        B, Qm, H, D)
+
+
+def paged_attention_layers_ragged_q8_pallas(q, pool_k, pool_v, pool_ks,
+                                            pool_vs, block_table, lengths,
+                                            q_lens, *,
+                                            scale: float | None = None,
+                                            interpret: bool = False):
+    """int8 ragged multi-layer entry: q (L, B, Qmax, H, D); pool_k/v
+    (L, P, T, K, D) int8; pool_ks/vs (L, P, T, K); shared block table."""
+    L, B, Qm, H, D = q.shape
+    _, P, T, K, _ = pool_k.shape
+    MP = block_table.shape[1]
+    G = H // K
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(L, B, Qm, K, G, D).transpose(0, 1, 3, 2, 4, 5).reshape(
+        L, B, K, Qm * G, D)
+    table = jnp.clip(block_table, 0, P - 1).astype(jnp.int32)
+
+    kernel = functools.partial(_pa_ragged_q8_kernel, scale=scale,
+                               page_tokens=T, group=G, batch_axis=1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(L, B, K, MP),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Qm * G, D),
+                         lambda l, b, k, p, tbl, ln, ql: (l, b, k, 0, 0)),
+            pl.BlockSpec((1, 1, T, 1, D),
+                         lambda l, b, k, p, tbl, ln, ql:
+                         (l, tbl[b, p], 0, k, 0)),
+            pl.BlockSpec((1, 1, T, 1, D),
+                         lambda l, b, k, p, tbl, ln, ql:
+                         (l, tbl[b, p], 0, k, 0)),
+            pl.BlockSpec((1, 1, T, 1),
+                         lambda l, b, k, p, tbl, ln, ql:
+                         (l, tbl[b, p], 0, k)),
+            pl.BlockSpec((1, 1, T, 1),
+                         lambda l, b, k, p, tbl, ln, ql:
+                         (l, tbl[b, p], 0, k)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, Qm * G, D),
+                               lambda l, b, k, p, tbl, ln, ql:
+                               (l, b, k, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Qm * G, 1), jnp.float32),
+            pltpu.VMEM((Qm * G, 1), jnp.float32),
+            pltpu.VMEM((Qm * G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((L, B, K, Qm * G, D), q.dtype),
+        interpret=interpret,
+    )(table, lengths.astype(jnp.int32), q_lens.astype(jnp.int32),
+      qg, pool_k, pool_v, pool_ks, pool_vs)
+    return out.reshape(L, B, K, Qm, G, D).transpose(0, 1, 3, 2, 4, 5).reshape(
+        L, B, Qm, H, D)
+
+
+def _mla_ragged_kernel(table_ref, len_ref, qlen_ref, qc_ref, qr_ref, c_ref,
+                       kr_ref, o_ref, m_ref, l_ref, acc_ref, *, scale: float,
+                       page_tokens: int, heads: int, batch_axis: int):
+    """MLA ragged body (weight-absorbed decode over the latent plane): one
+    ``(dc,)`` latent + one ``(dr,)`` rope key per pooled token, shared by
+    every query head — scores are ``q_c·cᵀ + q_r·krᵀ`` and the output is
+    the probability-weighted latent (the model applies ``w_uv``/``wo``
+    after). MQA-like: no K grid axis, the whole head block rides one page
+    DMA of the latent."""
+    b = pl.program_id(batch_axis)
+    p = pl.program_id(batch_axis + 1)
+    last_p = pl.num_programs(batch_axis + 1) - 1
+    length = len_ref[b]
+    q_len = qlen_ref[b]
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    live = ((p * page_tokens) < length) & (q_len > 0)
+
+    @pl.when(live)
+    def _compute():
+        dc = acc_ref.shape[-1]
+        qh = acc_ref.shape[0]                                  # Qmax * H
+        qc = qc_ref[...].reshape(qh, dc).astype(jnp.float32)
+        qr = qr_ref[...].reshape(qh, -1).astype(jnp.float32)
+        c = c_ref[...].reshape(page_tokens, dc).astype(jnp.float32)
+        kr = kr_ref[...].reshape(page_tokens, -1).astype(jnp.float32)
+        s = (jax.lax.dot_general(qc, c, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+             + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+             ) * scale
+        pos = p * page_tokens + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        qi = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // heads
+        allow = (pos <= (length - q_len + qi)) & (qi < q_len)
+        s = jnp.where(allow, s, NEG_INF)
+        _ragged_softmax_step(s, m_ref, l_ref, acc_ref, c)
+
+    @pl.when(p == last_p)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = out.astype(o_ref.dtype).reshape(o_ref.shape)
+
+
+def mla_paged_attention_ragged_pallas(q_c, q_r, pool_c, pool_kr, block_table,
+                                      lengths, q_lens, *, scale: float,
+                                      interpret: bool = False):
+    """MLA ragged single-layer entry: q_c (B, Qmax, H, dc) absorbed
+    queries; q_r (B, Qmax, H, dr) rope queries; pool_c (P, T, dc) latent
+    plane; pool_kr (P, T, dr) rope-key plane. Returns the attended latent
+    o_c (B, Qmax, H, dc)."""
+    B, Qm, H, dc = q_c.shape
+    dr = q_r.shape[-1]
+    P, T, _ = pool_c.shape
+    MP = block_table.shape[1]
+    qc = q_c.reshape(B, Qm * H, dc)
+    qr = q_r.reshape(B, Qm * H, dr)
+    table = jnp.clip(block_table, 0, P - 1).astype(jnp.int32)
+
+    kernel = functools.partial(_mla_ragged_kernel, scale=scale,
+                               page_tokens=T, heads=H, batch_axis=0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, MP),
+        in_specs=[
+            pl.BlockSpec((1, Qm * H, dc),
+                         lambda b, p, tbl, ln, ql: (b, 0, 0)),
+            pl.BlockSpec((1, Qm * H, dr),
+                         lambda b, p, tbl, ln, ql: (b, 0, 0)),
+            pl.BlockSpec((1, T, dc),
+                         lambda b, p, tbl, ln, ql: (tbl[b, p], 0, 0)),
+            pl.BlockSpec((1, T, dr),
+                         lambda b, p, tbl, ln, ql: (tbl[b, p], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Qm * H, dc),
+                               lambda b, p, tbl, ln, ql: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Qm * H, 1), jnp.float32),
+            pltpu.VMEM((Qm * H, 1), jnp.float32),
+            pltpu.VMEM((Qm * H, dc), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Qm * H, dc), q_c.dtype),
+        interpret=interpret,
+    )(table, lengths.astype(jnp.int32), q_lens.astype(jnp.int32),
+      qc, qr, pool_c, pool_kr)
+    return out.reshape(B, Qm, H, dc)
+
+
+def mla_paged_attention_layers_ragged_pallas(q_c, q_r, pool_c, pool_kr,
+                                             block_table, lengths, q_lens, *,
+                                             scale: float,
+                                             interpret: bool = False):
+    """MLA ragged multi-layer entry: q_c (L, B, Qmax, H, dc); q_r
+    (L, B, Qmax, H, dr); pool_c (L, P, T, dc); pool_kr (L, P, T, dr)."""
+    L, B, Qm, H, dc = q_c.shape
+    dr = q_r.shape[-1]
+    _, P, T, _ = pool_c.shape
+    MP = block_table.shape[1]
+    qc = q_c.reshape(L, B, Qm * H, dc)
+    qr = q_r.reshape(L, B, Qm * H, dr)
+    table = jnp.clip(block_table, 0, P - 1).astype(jnp.int32)
+
+    kernel = functools.partial(_mla_ragged_kernel, scale=scale,
+                               page_tokens=T, heads=H, batch_axis=1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(L, B, MP),
+        in_specs=[
+            pl.BlockSpec((1, 1, Qm * H, dc),
+                         lambda l, b, p, tbl, ln, ql: (l, b, 0, 0)),
+            pl.BlockSpec((1, 1, Qm * H, dr),
+                         lambda l, b, p, tbl, ln, ql: (l, b, 0, 0)),
+            pl.BlockSpec((1, 1, T, dc),
+                         lambda l, b, p, tbl, ln, ql: (l, tbl[b, p], 0, 0)),
+            pl.BlockSpec((1, 1, T, dr),
+                         lambda l, b, p, tbl, ln, ql: (l, tbl[b, p], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Qm * H, dc),
+                               lambda l, b, p, tbl, ln, ql: (l, b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Qm * H, 1), jnp.float32),
+            pltpu.VMEM((Qm * H, 1), jnp.float32),
+            pltpu.VMEM((Qm * H, dc), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((L, B, Qm * H, dc), q_c.dtype),
+        interpret=interpret,
+    )(table, lengths.astype(jnp.int32), q_lens.astype(jnp.int32),
+      qc, qr, pool_c, pool_kr)
+    return out.reshape(L, B, Qm, H, dc)

@@ -16,6 +16,7 @@ from __future__ import annotations
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.paged_attention.kernel import (
     paged_attention_layers_pallas, paged_attention_layers_ragged_pallas,
@@ -95,3 +96,119 @@ def paged_attention_layers_ragged(q, pool_k, pool_v, block_table, lengths,
             interpret=True)
     return paged_attention_layers_ragged_ref(q, pool_k, pool_v, block_table,
                                              lengths, q_lens, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# Descriptor plane variants: int8 (dequant-in-kernel, per-page scale planes)
+# and MLA (attention over the latent plane). Same tpu/interpret/ref dispatch.
+# ---------------------------------------------------------------------------
+from repro.kernels.paged_attention.kernel import (  # noqa: E402
+    mla_paged_attention_layers_ragged_pallas, mla_paged_attention_ragged_pallas,
+    paged_attention_layers_ragged_q8_pallas, paged_attention_ragged_q8_pallas)
+from repro.kernels.paged_attention.ref import (  # noqa: E402
+    mla_paged_attention_layers_ragged_ref, mla_paged_attention_ragged_ref,
+    paged_attention_layers_ragged_q8_ref, paged_attention_ragged_q8_ref)
+
+
+@partial(jax.jit, static_argnames=("scale", "force_pallas"))
+def paged_attention_ragged_q8(q, pool_k, pool_v, pool_ks, pool_vs,
+                              block_table, lengths, q_lens, *, scale=None,
+                              force_pallas: bool = False):
+    """Ragged-query attention over an int8 KV pool with per-(token, head)
+    scale planes. q: (B, Qmax, H, D); pool_k/v: (P, T, K, D) int8;
+    pool_ks/vs: (P, T, K); dequant happens in the kernel body, so pool
+    pages move ~half the HBM bytes of fp16."""
+    if jax.default_backend() == "tpu":
+        return paged_attention_ragged_q8_pallas(
+            q, pool_k, pool_v, pool_ks, pool_vs, block_table, lengths,
+            q_lens, scale=scale)
+    if force_pallas:
+        return paged_attention_ragged_q8_pallas(
+            q, pool_k, pool_v, pool_ks, pool_vs, block_table, lengths,
+            q_lens, scale=scale, interpret=True)
+    return paged_attention_ragged_q8_ref(q, pool_k, pool_v, pool_ks, pool_vs,
+                                         block_table, lengths, q_lens,
+                                         scale=scale)
+
+
+@partial(jax.jit, static_argnames=("scale", "force_pallas"))
+def paged_attention_layers_ragged_q8(q, pool_k, pool_v, pool_ks, pool_vs,
+                                     block_table, lengths, q_lens, *,
+                                     scale=None, force_pallas: bool = False):
+    """Multi-layer int8 ragged entry: q (L, B, Qmax, H, D); pools
+    (L, P, T, K, D) int8 + (L, P, T, K) scale planes."""
+    if jax.default_backend() == "tpu":
+        return paged_attention_layers_ragged_q8_pallas(
+            q, pool_k, pool_v, pool_ks, pool_vs, block_table, lengths,
+            q_lens, scale=scale)
+    if force_pallas:
+        return paged_attention_layers_ragged_q8_pallas(
+            q, pool_k, pool_v, pool_ks, pool_vs, block_table, lengths,
+            q_lens, scale=scale, interpret=True)
+    return paged_attention_layers_ragged_q8_ref(
+        q, pool_k, pool_v, pool_ks, pool_vs, block_table, lengths, q_lens,
+        scale=scale)
+
+
+@partial(jax.jit, static_argnames=("scale", "force_pallas"))
+def paged_attention_q8(q, pool_k, pool_v, pool_ks, pool_vs, block_table,
+                       lengths, *, scale=None, force_pallas: bool = False):
+    """int8 decode entry (one query token per row): q (B, H, D). Defined as
+    the ``q_len == 1`` slice of the ragged entry, so the two stay bitwise
+    identical by construction."""
+    B = q.shape[0]
+    out = paged_attention_ragged_q8(
+        q[:, None], pool_k, pool_v, pool_ks, pool_vs, block_table, lengths,
+        jnp.ones((B,), jnp.int32), scale=scale, force_pallas=force_pallas)
+    return out[:, 0]
+
+
+@partial(jax.jit, static_argnames=("scale", "force_pallas"))
+def mla_paged_attention_ragged(q_c, q_r, pool_c, pool_kr, block_table,
+                               lengths, q_lens, *, scale, force_pallas=False):
+    """MLA ragged entry over the latent plane. q_c: (B, Qmax, H, dc)
+    weight-absorbed queries; q_r: (B, Qmax, H, dr) rope queries; pool_c:
+    (P, T, dc); pool_kr: (P, T, dr). Returns the attended latent
+    (B, Qmax, H, dc) — the model applies ``w_uv``/``wo`` after."""
+    if jax.default_backend() == "tpu":
+        return mla_paged_attention_ragged_pallas(
+            q_c, q_r, pool_c, pool_kr, block_table, lengths, q_lens,
+            scale=scale)
+    if force_pallas:
+        return mla_paged_attention_ragged_pallas(
+            q_c, q_r, pool_c, pool_kr, block_table, lengths, q_lens,
+            scale=scale, interpret=True)
+    return mla_paged_attention_ragged_ref(q_c, q_r, pool_c, pool_kr,
+                                          block_table, lengths, q_lens,
+                                          scale=scale)
+
+
+@partial(jax.jit, static_argnames=("scale", "force_pallas"))
+def mla_paged_attention_layers_ragged(q_c, q_r, pool_c, pool_kr, block_table,
+                                      lengths, q_lens, *, scale,
+                                      force_pallas: bool = False):
+    """Multi-layer MLA ragged entry: q_c (L, B, Qmax, H, dc); q_r
+    (L, B, Qmax, H, dr); pool_c (L, P, T, dc); pool_kr (L, P, T, dr)."""
+    if jax.default_backend() == "tpu":
+        return mla_paged_attention_layers_ragged_pallas(
+            q_c, q_r, pool_c, pool_kr, block_table, lengths, q_lens,
+            scale=scale)
+    if force_pallas:
+        return mla_paged_attention_layers_ragged_pallas(
+            q_c, q_r, pool_c, pool_kr, block_table, lengths, q_lens,
+            scale=scale, interpret=True)
+    return mla_paged_attention_layers_ragged_ref(
+        q_c, q_r, pool_c, pool_kr, block_table, lengths, q_lens, scale=scale)
+
+
+@partial(jax.jit, static_argnames=("scale", "force_pallas"))
+def mla_paged_attention(q_c, q_r, pool_c, pool_kr, block_table, lengths, *,
+                        scale, force_pallas: bool = False):
+    """MLA decode entry (one query token per row): q_c (B, H, dc); q_r
+    (B, H, dr). The ``q_len == 1`` slice of the ragged entry — bitwise
+    identical by construction."""
+    B = q_c.shape[0]
+    out = mla_paged_attention_ragged(
+        q_c[:, None], q_r[:, None], pool_c, pool_kr, block_table, lengths,
+        jnp.ones((B,), jnp.int32), scale=scale, force_pallas=force_pallas)
+    return out[:, 0]

@@ -92,3 +92,80 @@ def paged_attention_layers_ragged_ref(q, pool_k, pool_v, block_table,
         return paged_attention_ragged_ref(ql, pkl, pvl, block_table,
                                           lengths, q_lens, scale=scale)
     return jax.vmap(one_layer)(q, pool_k, pool_v)
+
+
+# ---------------------------------------------------------------------------
+# Descriptor plane variants (int8 scale planes, MLA latent plane)
+# ---------------------------------------------------------------------------
+def _dequant_pool(pool_q, pool_scale):
+    """int8 pages × per-(token, head) scales → fp32 (the fp32 oracle the
+    in-kernel dequant is pinned against)."""
+    return pool_q.astype(jnp.float32) * pool_scale.astype(jnp.float32)[..., None]
+
+
+def paged_attention_ragged_q8_ref(q, pool_k, pool_v, pool_ks, pool_vs,
+                                  block_table, lengths, q_lens, *,
+                                  scale: float | None = None):
+    """int8 ragged oracle: dequantize the whole pool to fp32, then run the
+    dense ragged oracle. pool_k/v (P, T, K, D) int8; pool_ks/vs (P, T, K)."""
+    return paged_attention_ragged_ref(
+        q, _dequant_pool(pool_k, pool_ks).astype(q.dtype),
+        _dequant_pool(pool_v, pool_vs).astype(q.dtype),
+        block_table, lengths, q_lens, scale=scale)
+
+
+def paged_attention_layers_ragged_q8_ref(q, pool_k, pool_v, pool_ks, pool_vs,
+                                         block_table, lengths, q_lens, *,
+                                         scale: float | None = None):
+    """Multi-layer int8 ragged oracle: q (L,B,Qmax,H,D); pools
+    (L,P,T,K,D) int8 + (L,P,T,K) scales."""
+    def one_layer(ql, pkl, pvl, ksl, vsl):
+        return paged_attention_ragged_q8_ref(ql, pkl, pvl, ksl, vsl,
+                                             block_table, lengths, q_lens,
+                                             scale=scale)
+    return jax.vmap(one_layer)(q, pool_k, pool_v, pool_ks, pool_vs)
+
+
+def mla_paged_attention_ragged_ref(q_c, q_r, pool_c, pool_kr, block_table,
+                                   lengths, q_lens, *, scale: float):
+    """MLA ragged oracle over the latent plane.
+
+    q_c:     (B, Qmax, H, dc)  weight-absorbed queries (q_nope · w_uk)
+    q_r:     (B, Qmax, H, dr)  rope queries
+    pool_c:  (P, T, dc)        latent plane pages
+    pool_kr: (P, T, dr)        rope-key plane pages
+    Scores are ``(q_c·cᵀ + q_r·krᵀ) · scale`` (scale =
+    1/sqrt(qk_nope + qk_rope), passed by the caller); the output is the
+    probability-weighted latent (B, Qmax, H, dc) — ``w_uv``/``wo`` are the
+    model's job. Padding slots and empty rows return exactly zero.
+    """
+    B, Qm, H, dc = q_c.shape
+    P, T, _ = pool_c.shape
+    table = jnp.clip(block_table, 0, P - 1)
+    c = pool_c[table].reshape(B, -1, dc).astype(jnp.float32)    # (B, S, dc)
+    kr = pool_kr[table].reshape(B, -1, pool_kr.shape[-1]).astype(jnp.float32)
+    S = c.shape[1]
+    s = (jnp.einsum("bqhc,btc->bhqt", q_c.astype(jnp.float32), c)
+         + jnp.einsum("bqhr,btr->bhqt", q_r.astype(jnp.float32), kr)) * scale
+    qpos = (lengths - q_lens)[:, None] + jnp.arange(Qm)[None, :]   # (B, Qm)
+    qvalid = jnp.arange(Qm)[None, :] < q_lens[:, None]             # (B, Qm)
+    allow = (jnp.arange(S)[None, None, :] <= qpos[:, :, None]) \
+        & qvalid[:, :, None]
+    s = jnp.where(allow[:, None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqt,btc->bqhc", p, c)
+    out = jnp.where((qvalid & (lengths > 0)[:, None])
+                    [:, :, None, None], out, 0.0)
+    return out.astype(q_c.dtype)
+
+
+def mla_paged_attention_layers_ragged_ref(q_c, q_r, pool_c, pool_kr,
+                                          block_table, lengths, q_lens, *,
+                                          scale: float):
+    """Multi-layer MLA ragged oracle: q_c (L,B,Qmax,H,dc); q_r
+    (L,B,Qmax,H,dr); pool_c (L,P,T,dc); pool_kr (L,P,T,dr)."""
+    def one_layer(qcl, qrl, pcl, prl):
+        return mla_paged_attention_ragged_ref(qcl, qrl, pcl, prl,
+                                              block_table, lengths, q_lens,
+                                              scale=scale)
+    return jax.vmap(one_layer)(q_c, q_r, pool_c, pool_kr)

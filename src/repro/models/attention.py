@@ -515,3 +515,218 @@ def mla_decode(params, cfg, x, cache_c, cache_kr, positions):
                    params["w_uv"].astype(jnp.float32)).astype(x.dtype)
     out = o.reshape(B, 1, H * m.v_head_dim) @ params["wo"]
     return out, cache_c, cache_kr
+
+
+def attn_decode_ragged_q8(params, cfg, x, ck, cv, ck_s, cv_s, ctx_lens,
+                          q_lens):
+    """``attn_decode_ragged`` over an int8 cache: the fused mixed-batch
+    tick's mirrored twin for the int8 family. New tokens quantize on write
+    (per (token, head), same grid as ``quantize_kv`` everywhere else),
+    padding slots scatter-drop, and attention reads the dequantized cache.
+
+    Returns (out, ck, cv, ck_s, cv_s).
+    """
+    B, Qm, _ = x.shape
+    K, H, D = cfg.num_kv_heads, cfg.num_heads, cfg.head_dim
+    positions = ctx_lens[:, None] + jnp.arange(Qm, dtype=jnp.int32)[None, :]
+    q, k, v = _project_qkv(params, cfg, x, positions, rope=True)
+    T = ck.shape[1]
+    valid = jnp.arange(Qm)[None, :] < q_lens[:, None]
+    write_pos = jnp.where(valid, positions, T)
+    b_idx = jnp.arange(B)[:, None]
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    ck = ck.at[b_idx, write_pos].set(kq, mode="drop")
+    cv = cv.at[b_idx, write_pos].set(vq, mode="drop")
+    ck_s = ck_s.at[b_idx, write_pos].set(ks, mode="drop")
+    cv_s = cv_s.at[b_idx, write_pos].set(vs, mode="drop")
+    kf = dequantize_kv(ck, ck_s, x.dtype)
+    vf = dequantize_kv(cv, cv_s, x.dtype)
+    kv_pos = jnp.arange(T, dtype=jnp.int32)
+    out = full_attention(q, kf, vf, scale=1.0 / math.sqrt(D),
+                         q_positions=positions, kv_positions=kv_pos,
+                         causal=True)
+    out = out.reshape(B, Qm, H * D) @ params["wo"]
+    return out, ck, cv, ck_s, cv_s
+
+
+def attn_decode_paged_q8(params, cfg, x, pool_k, pool_v, pool_ks, pool_vs,
+                         block_table, positions):
+    """Single-step decode over an int8 paged pool (mirror-free): the new
+    token quantizes on write into the int8 pages + scale planes, attention
+    runs the dequant-in-kernel ``paged_attention_q8`` entry.
+
+    pool_k/v: (P, T, K, D) int8; pool_ks/vs: (P, T, K) bf16.
+    Returns (out, pool_k, pool_v, pool_ks, pool_vs).
+    """
+    from repro.kernels.paged_attention import paged_attention_q8
+
+    B, S, _ = x.shape
+    assert S == 1
+    K, H, D = cfg.num_kv_heads, cfg.num_heads, cfg.head_dim
+    pos2 = positions[:, None]
+    q, k, v = _project_qkv(params, cfg, x, pos2, rope=True)
+    T = pool_k.shape[1]
+    b_idx = jnp.arange(B)
+    phys = block_table[b_idx, positions // T]
+    slot = positions % T
+    kq, ks = quantize_kv(k[:, 0])
+    vq, vs = quantize_kv(v[:, 0])
+    pool_k = pool_k.at[phys, slot].set(kq)
+    pool_v = pool_v.at[phys, slot].set(vq)
+    pool_ks = pool_ks.at[phys, slot].set(ks)
+    pool_vs = pool_vs.at[phys, slot].set(vs)
+    out = paged_attention_q8(q.reshape(B, H, D), pool_k, pool_v, pool_ks,
+                             pool_vs, block_table, positions + 1,
+                             scale=1.0 / math.sqrt(D))
+    out = out.reshape(B, 1, H * D) @ params["wo"]
+    return out, pool_k, pool_v, pool_ks, pool_vs
+
+
+def attn_step_paged_ragged_q8(params, cfg, x, pool_k, pool_v, pool_ks,
+                              pool_vs, block_table, ctx_lens, q_lens):
+    """Ragged multi-token step over one layer's slice of the int8 paged
+    pool — ``attn_step_paged_ragged`` with quantize-on-write scatters into
+    the int8 pages + scale planes and the ``paged_attention_ragged_q8``
+    dequant-in-kernel launch.
+
+    Returns (out, pool_k, pool_v, pool_ks, pool_vs).
+    """
+    from repro.kernels.paged_attention import paged_attention_ragged_q8
+
+    B, Qm, _ = x.shape
+    K, H, D = cfg.num_kv_heads, cfg.num_heads, cfg.head_dim
+    positions = ctx_lens[:, None] + jnp.arange(Qm, dtype=jnp.int32)[None, :]
+    q, k, v = _project_qkv(params, cfg, x, positions, rope=True)
+    P, T = pool_k.shape[0], pool_k.shape[1]
+    valid = jnp.arange(Qm)[None, :] < q_lens[:, None]
+    logical = jnp.clip(positions // T, 0, block_table.shape[1] - 1)
+    phys = jnp.take_along_axis(block_table, logical, axis=1)
+    phys = jnp.where(valid, phys, P)
+    slot = positions % T
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    pool_k = pool_k.at[phys, slot].set(kq, mode="drop")
+    pool_v = pool_v.at[phys, slot].set(vq, mode="drop")
+    pool_ks = pool_ks.at[phys, slot].set(ks, mode="drop")
+    pool_vs = pool_vs.at[phys, slot].set(vs, mode="drop")
+    out = paged_attention_ragged_q8(
+        q.reshape(B, Qm, H, D), pool_k, pool_v, pool_ks, pool_vs,
+        block_table, ctx_lens + q_lens, q_lens, scale=1.0 / math.sqrt(D))
+    out = out.reshape(B, Qm, H * D) @ params["wo"]
+    return out, pool_k, pool_v, pool_ks, pool_vs
+
+
+def mla_decode_ragged(params, cfg, x, cache_c, cache_kr, ctx_lens, q_lens):
+    """Ragged multi-token weight-absorbed MLA decode over the dense latent
+    cache — the fused tick's mirrored twin for the MLA family. Same einsum
+    chain as ``mla_decode`` with a (B, Qmax) query block and intra-chunk
+    causal masking; padding slots scatter-drop and their outputs are
+    garbage the caller must ignore.
+
+    Returns (out, cache_c, cache_kr).
+    """
+    m = cfg.mla
+    B, Qm, _ = x.shape
+    H = cfg.num_heads
+    positions = ctx_lens[:, None] + jnp.arange(Qm, dtype=jnp.int32)[None, :]
+    q_nope, q_rope = _mla_queries(params, cfg, x, positions)
+    c_new, kr_new = _mla_latent(params, cfg, x, positions)
+    T = cache_c.shape[1]
+    valid = jnp.arange(Qm)[None, :] < q_lens[:, None]
+    write_pos = jnp.where(valid, positions, T)
+    b_idx = jnp.arange(B)[:, None]
+    cache_c = cache_c.at[b_idx, write_pos].set(
+        c_new.astype(cache_c.dtype), mode="drop")
+    cache_kr = cache_kr.at[b_idx, write_pos].set(
+        kr_new.astype(cache_kr.dtype), mode="drop")
+    q_c = jnp.einsum("bshd,chd->bshc", q_nope.astype(jnp.float32),
+                     params["w_uk"].astype(jnp.float32))
+    s = (jnp.einsum("bshc,btc->bhst", q_c, cache_c.astype(jnp.float32))
+         + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                      cache_kr.astype(jnp.float32)))
+    s = s / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    kv_pos = jnp.arange(T, dtype=jnp.int32)
+    allow = kv_pos[None, None, :] <= positions[:, :, None]          # (B,Qm,T)
+    s = jnp.where(allow[:, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhst,btc->bshc", p, cache_c.astype(jnp.float32))
+    o = jnp.einsum("bshc,chd->bshd", o_c,
+                   params["w_uv"].astype(jnp.float32)).astype(x.dtype)
+    out = o.reshape(B, Qm, H * m.v_head_dim) @ params["wo"]
+    return out, cache_c, cache_kr
+
+
+def mla_decode_paged(params, cfg, x, pool_c, pool_kr, block_table,
+                     positions):
+    """Single-step weight-absorbed MLA decode over the paged latent pool
+    (mirror-free): the new latent/rope-key scatter into their page slots
+    and attention runs the ``mla_paged_attention`` entry over the latent
+    plane.
+
+    pool_c: (P, T, dc); pool_kr: (P, T, dr).
+    Returns (out, pool_c, pool_kr).
+    """
+    from repro.kernels.paged_attention import mla_paged_attention
+
+    m = cfg.mla
+    B, S, _ = x.shape
+    assert S == 1
+    H = cfg.num_heads
+    pos2 = positions[:, None]
+    q_nope, q_rope = _mla_queries(params, cfg, x, pos2)
+    c_new, kr_new = _mla_latent(params, cfg, x, pos2)
+    T = pool_c.shape[1]
+    b_idx = jnp.arange(B)
+    phys = block_table[b_idx, positions // T]
+    slot = positions % T
+    pool_c = pool_c.at[phys, slot].set(c_new[:, 0].astype(pool_c.dtype))
+    pool_kr = pool_kr.at[phys, slot].set(kr_new[:, 0].astype(pool_kr.dtype))
+    q_c = jnp.einsum("bshd,chd->bshc", q_nope.astype(jnp.float32),
+                     params["w_uk"].astype(jnp.float32))
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    o_c = mla_paged_attention(q_c[:, 0], q_rope[:, 0].astype(jnp.float32),
+                              pool_c, pool_kr, block_table, positions + 1,
+                              scale=scale)
+    o = jnp.einsum("bhc,chd->bhd", o_c.astype(jnp.float32),
+                   params["w_uv"].astype(jnp.float32)).astype(x.dtype)
+    out = o.reshape(B, 1, H * m.v_head_dim) @ params["wo"]
+    return out, pool_c, pool_kr
+
+
+def mla_step_paged_ragged(params, cfg, x, pool_c, pool_kr, block_table,
+                          ctx_lens, q_lens):
+    """Ragged multi-token weight-absorbed MLA step over the paged latent
+    pool — the fused mixed-batch tick for the MLA family, one
+    ``mla_paged_attention_ragged`` launch per layer.
+
+    Returns (out, pool_c, pool_kr).
+    """
+    from repro.kernels.paged_attention import mla_paged_attention_ragged
+
+    m = cfg.mla
+    B, Qm, _ = x.shape
+    H = cfg.num_heads
+    positions = ctx_lens[:, None] + jnp.arange(Qm, dtype=jnp.int32)[None, :]
+    q_nope, q_rope = _mla_queries(params, cfg, x, positions)
+    c_new, kr_new = _mla_latent(params, cfg, x, positions)
+    P, T = pool_c.shape[0], pool_c.shape[1]
+    valid = jnp.arange(Qm)[None, :] < q_lens[:, None]
+    logical = jnp.clip(positions // T, 0, block_table.shape[1] - 1)
+    phys = jnp.take_along_axis(block_table, logical, axis=1)
+    phys = jnp.where(valid, phys, P)
+    slot = positions % T
+    pool_c = pool_c.at[phys, slot].set(c_new.astype(pool_c.dtype),
+                                       mode="drop")
+    pool_kr = pool_kr.at[phys, slot].set(kr_new.astype(pool_kr.dtype),
+                                         mode="drop")
+    q_c = jnp.einsum("bshd,chd->bshc", q_nope.astype(jnp.float32),
+                     params["w_uk"].astype(jnp.float32))
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    o_c = mla_paged_attention_ragged(q_c, q_rope.astype(jnp.float32),
+                                     pool_c, pool_kr, block_table,
+                                     ctx_lens + q_lens, q_lens, scale=scale)
+    o = jnp.einsum("bqhc,chd->bqhd", o_c.astype(jnp.float32),
+                   params["w_uv"].astype(jnp.float32)).astype(x.dtype)
+    out = o.reshape(B, Qm, H * m.v_head_dim) @ params["wo"]
+    return out, pool_c, pool_kr

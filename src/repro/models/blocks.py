@@ -90,46 +90,109 @@ def decode_decoder_block(params, cfg, h, cache, positions, *, ffn_kind: str,
     return h + rs * f, (c0, c1)
 
 
-def decode_paged_block(params, cfg, h, pool_k, pool_v, block_table,
-                       positions):
-    """Single-token block over one layer's slice of the paged KV pool
-    (mirror-free decode; dense GQA attention only)."""
+def _apply_block_ffn(params, cfg, x, ffn_kind: str, ep_axes):
+    if ffn_kind == "moe":
+        f, _ = moe_mod.apply_moe(params["ffn"], cfg, x, ep_axes=ep_axes)
+        return f
+    return apply_ffn(params["ffn"], x, cfg.ffn_activation)
+
+
+def decode_paged_block(params, cfg, h, planes, block_table, positions, *,
+                       ffn_kind: str = "dense", ep_axes=()):
+    """Single-token block over one layer's slice of the paged pool
+    (mirror-free decode). ``planes`` is this layer's pool-plane tuple in
+    descriptor order — ``(k, v)`` dense, ``(k, v, k_scale, v_scale)``
+    int8, ``(c, kr)`` MLA — and attention dispatches on it."""
     rs = cfg.residual_scale
     x = rmsnorm(params["ln_attn"], h, cfg.norm_eps)
-    a, pool_k, pool_v = attn_mod.attn_decode_paged(
-        params["attn"], cfg, x, pool_k, pool_v, block_table, positions)
+    if cfg.mla is not None:
+        a, *planes = attn_mod.mla_decode_paged(
+            params["attn"], cfg, x, planes[0], planes[1], block_table,
+            positions)
+    elif len(planes) == 4:
+        a, *planes = attn_mod.attn_decode_paged_q8(
+            params["attn"], cfg, x, planes[0], planes[1], planes[2],
+            planes[3], block_table, positions)
+    else:
+        a, *planes = attn_mod.attn_decode_paged(
+            params["attn"], cfg, x, planes[0], planes[1], block_table,
+            positions)
     h = h + rs * a
     x = rmsnorm(params["ln_ffn"], h, cfg.norm_eps)
-    f = apply_ffn(params["ffn"], x, cfg.ffn_activation)
-    return h + rs * f, (pool_k, pool_v)
+    f = _apply_block_ffn(params, cfg, x, ffn_kind, ep_axes)
+    return h + rs * f, tuple(planes)
 
 
-def step_paged_ragged_block(params, cfg, h, pool_k, pool_v, block_table,
-                            ctx_lens, q_lens):
-    """Ragged multi-token block over one layer's pool slice (the fused
-    mixed-batch tick; dense GQA attention only)."""
+def step_paged_ragged_block(params, cfg, h, planes, block_table, ctx_lens,
+                            q_lens, *, ffn_kind: str = "dense", ep_axes=()):
+    """Ragged multi-token block over one layer's pool-plane tuple (the
+    fused mixed-batch tick). Plane dispatch as ``decode_paged_block``."""
     rs = cfg.residual_scale
     x = rmsnorm(params["ln_attn"], h, cfg.norm_eps)
-    a, pool_k, pool_v = attn_mod.attn_step_paged_ragged(
-        params["attn"], cfg, x, pool_k, pool_v, block_table, ctx_lens,
-        q_lens)
+    if cfg.mla is not None:
+        a, *planes = attn_mod.mla_step_paged_ragged(
+            params["attn"], cfg, x, planes[0], planes[1], block_table,
+            ctx_lens, q_lens)
+    elif len(planes) == 4:
+        a, *planes = attn_mod.attn_step_paged_ragged_q8(
+            params["attn"], cfg, x, planes[0], planes[1], planes[2],
+            planes[3], block_table, ctx_lens, q_lens)
+    else:
+        a, *planes = attn_mod.attn_step_paged_ragged(
+            params["attn"], cfg, x, planes[0], planes[1], block_table,
+            ctx_lens, q_lens)
     h = h + rs * a
     x = rmsnorm(params["ln_ffn"], h, cfg.norm_eps)
-    f = apply_ffn(params["ffn"], x, cfg.ffn_activation)
-    return h + rs * f, (pool_k, pool_v)
+    f = _apply_block_ffn(params, cfg, x, ffn_kind, ep_axes)
+    return h + rs * f, tuple(planes)
 
 
-def step_ragged_block(params, cfg, h, cache, ctx_lens, q_lens):
+def step_ragged_block(params, cfg, h, cache, ctx_lens, q_lens, *,
+                      ffn_kind: str = "dense", ep_axes=()):
     """Ragged multi-token block over the dense cache (the fused tick's
-    mirrored twin). cache: (cache_k, cache_v) for this layer."""
+    mirrored twin). ``cache`` is this layer's plane tuple: ``(k, v)``
+    dense, ``(k, v, k_scale, v_scale)`` int8, ``(c, kr)`` MLA."""
     rs = cfg.residual_scale
     x = rmsnorm(params["ln_attn"], h, cfg.norm_eps)
-    a, c0, c1 = attn_mod.attn_decode_ragged(params["attn"], cfg, x, cache[0],
-                                            cache[1], ctx_lens, q_lens)
+    if cfg.mla is not None:
+        a, *cache = attn_mod.mla_decode_ragged(
+            params["attn"], cfg, x, cache[0], cache[1], ctx_lens, q_lens)
+    elif len(cache) == 4:
+        a, *cache = attn_mod.attn_decode_ragged_q8(
+            params["attn"], cfg, x, cache[0], cache[1], cache[2], cache[3],
+            ctx_lens, q_lens)
+    else:
+        a, *cache = attn_mod.attn_decode_ragged(
+            params["attn"], cfg, x, cache[0], cache[1], ctx_lens, q_lens)
     h = h + rs * a
     x = rmsnorm(params["ln_ffn"], h, cfg.norm_eps)
-    f = apply_ffn(params["ffn"], x, cfg.ffn_activation)
-    return h + rs * f, (c0, c1)
+    f = _apply_block_ffn(params, cfg, x, ffn_kind, ep_axes)
+    return h + rs * f, tuple(cache)
+
+
+def step_ragged_ssm_block(params, cfg, h, conv_state, ssm_state, q_lens):
+    """Ragged multi-token SSM block: scan the single-step mixer over the
+    Qmax query slots, masking state updates past ``q_lens`` so padding
+    slots leave the state untouched. h: (B, Qmax, d). Returns
+    (h, conv_steps, ssm_steps) where the ``*_steps`` carry the PER-SLOT
+    states (Qmax leading axis) — the engine picks the committed slot
+    (speculative rollback = picking an earlier one)."""
+    B, Qm, _ = h.shape
+
+    def body(carry, xs):
+        conv, ssm = carry
+        x_t, i = xs
+        x = rmsnorm(params["ln"], x_t[:, None], cfg.norm_eps)
+        y, (nc, ns) = ssm_mod.ssm_decode(params["mixer"], cfg, x, conv, ssm)
+        live = (i < q_lens)
+        nc = jnp.where(live[:, None, None], nc, conv)
+        ns = jnp.where(live[:, None, None, None], ns, ssm)
+        return (nc, ns), (y[:, 0], nc, ns)
+
+    (_, _), (ys, conv_steps, ssm_steps) = jax.lax.scan(
+        body, (conv_state, ssm_state),
+        (h.transpose(1, 0, 2), jnp.arange(Qm, dtype=jnp.int32)))
+    return h + ys.transpose(1, 0, 2), conv_steps, ssm_steps
 
 
 # ---------------------------------------------------------------------------

@@ -409,49 +409,101 @@ class LM:
         return logits, cache
 
     # ---------------------------------------------------- paged decode step
+    def cache_descriptor(self, page_tokens: int = 16):
+        """This model's :class:`~repro.core.engines.desc.CacheDescriptor`
+        — the frozen plane layout that drives the pooled serving path —
+        or None when the family has no pooled layout (hybrid/encdec stay
+        on the mirrored dense-cache fallback)."""
+        from repro.core.engines.desc import descriptor_for
+        return descriptor_for(self.cfg, self.kv_cache_dtype,
+                              self.compute_dtype, page_tokens)
+
     def supports_paged_decode(self) -> bool:
-        """True when this model can decode directly over a paged KV pool:
-        the dense-GQA decoder stack with a plain (k, v) cache. MLA caches a
-        latent (not per-head KV), int8 caches carry scales, and the other
-        families keep state the pool has no layout for — they all stay on
-        the mirrored dense-cache path."""
-        return (self.cfg.family == "attn_dense" and self.cfg.mla is None
-                and self.kv_cache_dtype == "native")
+        """True when this model can decode directly over a paged pool —
+        i.e. when a cache descriptor exists for its config. Dense GQA pools
+        ``(k, v)`` planes, int8 adds scale planes, MLA pools the latent,
+        SSM rides its state rows alongside the page tables; hybrid and
+        encdec have no descriptor yet and stay mirrored."""
+        return self.cache_descriptor() is not None
 
-    def decode_step_paged(self, params, cache, tokens, positions):
-        """One decode step over a device-resident paged KV pool.
+    def _decoder_plane_names(self):
+        return tuple(p.name for p in self.cache_descriptor().paged_planes)
 
-        cache: ``pos (B,)``, ``pool_k``/``pool_v`` ``(L, P, T, K, D)``, and
-        ``block_table (B, MP)`` (dead entries clamped/skipped by the
-        kernel). The layer scan carries the pool slices as xs, each layer
-        scattering its new token into its page slot and attending through
-        the ``paged_attention`` kernel — no dense per-sequence KV row is
-        ever materialized, which is what keeps the serving mirror's
-        device→host traffic at zero on this path.
-        """
-        if not self.supports_paged_decode():
-            raise ValueError(
-                f"paged decode supports the dense-GQA family only; got "
-                f"family={self.cfg.family!r} mla={self.cfg.mla is not None} "
-                f"kv_cache_dtype={self.kv_cache_dtype!r}")
-        cfg = self.cfg
-        params = jax.tree.map(
+    def _cast_params(self, params):
+        return jax.tree.map(
             lambda a: a.astype(self.compute_dtype)
             if a.dtype in (jnp.float32, jnp.bfloat16) and a.ndim >= 1 else a,
             params)
+
+    def _scan_paged_planes(self, params, h, pools, step_fn):
+        """Scan the decoder stack with per-layer pool-plane slices as xs.
+        ``step_fn(ffn_kind) -> (carry, (lp, *planes)) -> (carry, planes)``.
+        MoE configs split into the dense-prefix and MoE scans (same split
+        as :meth:`decode_step`); everything else is one scan."""
+        cfg = self.cfg
+        if cfg.family == "moe":
+            n_d = self.n_dense
+            parts = []
+            if n_d:
+                h, out_d = jax.lax.scan(
+                    step_fn("dense"), h,
+                    (params["dense_blocks"],) + tuple(p[:n_d] for p in pools),
+                    unroll=self.scan_unroll)
+                parts.append(out_d)
+            h, out_m = jax.lax.scan(
+                step_fn("moe"), h,
+                (params["moe_blocks"],) + tuple(p[n_d:] for p in pools),
+                unroll=self.scan_unroll)
+            parts.append(out_m)
+            new_pools = tuple(
+                jnp.concatenate([part[i] for part in parts], 0)
+                for i in range(len(pools)))
+        else:
+            h, new_pools = jax.lax.scan(
+                step_fn("dense"), h, (params["blocks"],) + tuple(pools),
+                unroll=self.scan_unroll)
+        return h, new_pools
+
+    def decode_step_paged(self, params, cache, tokens, positions):
+        """One decode step over the device-resident paged pool.
+
+        cache: ``pos (B,)``, one ``pool_<plane>`` array per descriptor
+        plane (``(L, P, T, *shape)``), and ``block_table (B, MP)`` (dead
+        entries clamped/skipped by the kernel). The layer scan carries the
+        pool-plane slices as xs, each layer scattering its new token into
+        its page slot and attending through the family's paged kernel — no
+        dense per-sequence cache row is ever materialized, which is what
+        keeps the serving mirror's device→host traffic at zero. SSM
+        configs have no paged planes: their state rows ARE the cache, so
+        this is exactly :meth:`decode_step`.
+        """
+        desc = self.cache_descriptor()
+        if desc is None:
+            raise ValueError(
+                f"no cache descriptor for family={self.cfg.family!r} "
+                f"kv_cache_dtype={self.kv_cache_dtype!r}; paged decode "
+                f"needs a pooled layout")
+        if not desc.has_pages:
+            return self.decode_step(params, cache, tokens, positions)
+        cfg = self.cfg
+        params = self._cast_params(params)
         h = self._embed_tokens(params, tokens)
         table = cache["block_table"]
+        names = self._decoder_plane_names()
+        pools = tuple(cache["pool_" + n] for n in names)
 
-        def body(carry, xs):
-            lp, pk, pv = xs
-            hh, (npk, npv) = B.decode_paged_block(
-                lp, cfg, carry, pk, pv, table, positions)
-            return hh, (npk, npv)
-        h, (npk, npv) = jax.lax.scan(
-            body, h, (params["blocks"], cache["pool_k"], cache["pool_v"]),
-            unroll=self.scan_unroll)
-        new_cache = {"pos": positions + 1, "pool_k": npk, "pool_v": npv,
-                     "block_table": table}
+        def step_fn(ffn_kind):
+            def body(carry, xs):
+                hh, planes = B.decode_paged_block(
+                    xs[0], cfg, carry, xs[1:], table, positions,
+                    ffn_kind=ffn_kind, ep_axes=self.ep_axes)
+                return hh, planes
+            return body
+
+        h, new_pools = self._scan_paged_planes(params, h, pools, step_fn)
+        new_cache = {"pos": positions + 1, "block_table": table}
+        for n, p in zip(names, new_pools):
+            new_cache["pool_" + n] = p
         h = rmsnorm(params["final_ln"], h, cfg.norm_eps)
         logits = self._logits(params, h)
         return logits, new_cache
@@ -460,9 +512,9 @@ class LM:
     def supports_ragged_step(self) -> bool:
         """True when this model can run a fused mixed-batch tick: a ragged
         multi-token step where decode rows (1 new token) and prefill-chunk
-        rows (several) share one forward. Same gate as paged decode — the
-        dense-GQA stack with a plain (k, v) cache; other families keep the
-        per-chunk batch=1 fallback."""
+        rows (several) share one forward. Same gate as paged decode — a
+        cache descriptor exists; families without one keep the per-chunk
+        batch=1 fallback."""
         return self.supports_paged_decode()
 
     def step_paged_ragged(self, params, cache, tokens, ctx_lens, q_lens):
@@ -473,66 +525,110 @@ class LM:
         padded to the bucketing ladder's Qmax; ctx_lens: (B,) tokens already
         in the pool per row; q_lens: (B,) with 0 marking batch-width padding
         rows (they scatter nothing and their outputs are garbage to
-        discard). cache: ``pool_k``/``pool_v`` ``(L, P, T, K, D)`` +
-        ``block_table (B, MP)``. Returns logits for every query slot
-        ``(B, Qmax, V)`` — callers read slot ``q_lens[b] - 1`` — and the
-        updated pool cache with ``pos = ctx_lens + q_lens``.
+        discard). cache: one ``pool_<plane>`` per descriptor plane +
+        ``block_table (B, MP)``; SSM configs instead carry their
+        ``conv``/``ssm`` state rows and return per-slot ``conv_steps``/
+        ``ssm_steps`` (the engine commits the committed slot's state).
+        Returns logits for every query slot ``(B, Qmax, V)`` — callers read
+        slot ``q_lens[b] - 1`` — and the updated cache with
+        ``pos = ctx_lens + q_lens``.
         """
-        if not self.supports_ragged_step():
+        desc = self.cache_descriptor()
+        if desc is None:
             raise ValueError(
-                f"ragged paged step supports the dense-GQA family only; got "
-                f"family={self.cfg.family!r} mla={self.cfg.mla is not None} "
-                f"kv_cache_dtype={self.kv_cache_dtype!r}")
+                f"no cache descriptor for family={self.cfg.family!r} "
+                f"kv_cache_dtype={self.kv_cache_dtype!r}; ragged paged "
+                f"step needs a pooled layout")
+        if not desc.has_pages:
+            return self._step_ragged_ssm(params, cache, tokens, ctx_lens,
+                                         q_lens)
         cfg = self.cfg
-        params = jax.tree.map(
-            lambda a: a.astype(self.compute_dtype)
-            if a.dtype in (jnp.float32, jnp.bfloat16) and a.ndim >= 1 else a,
-            params)
+        params = self._cast_params(params)
         h = self._embed_tokens(params, tokens)
         table = cache["block_table"]
+        names = self._decoder_plane_names()
+        pools = tuple(cache["pool_" + n] for n in names)
+
+        def step_fn(ffn_kind):
+            def body(carry, xs):
+                hh, planes = B.step_paged_ragged_block(
+                    xs[0], cfg, carry, xs[1:], table, ctx_lens, q_lens,
+                    ffn_kind=ffn_kind, ep_axes=self.ep_axes)
+                return hh, planes
+            return body
+
+        h, new_pools = self._scan_paged_planes(params, h, pools, step_fn)
+        new_cache = {"pos": ctx_lens + q_lens, "block_table": table}
+        for n, p in zip(names, new_pools):
+            new_cache["pool_" + n] = p
+        h = rmsnorm(params["final_ln"], h, cfg.norm_eps)
+        logits = self._logits(params, h)
+        return logits, new_cache
+
+    def _step_ragged_ssm(self, params, cache, tokens, ctx_lens, q_lens):
+        """Ragged multi-token SSM step: each layer scans its single-step
+        mixer over the Qmax slots (state updates masked past ``q_lens``)
+        and emits PER-SLOT states ``conv_steps``/``ssm_steps`` shaped
+        ``(L, Qmax, B, ...)`` — slot ``i`` holds the state after absorbing
+        token ``i``. The caller (serving engine) selects the committed
+        slot's state per row; picking an earlier slot IS the speculative
+        rollback. ``cache["conv"]``/``cache["ssm"]`` stay the step's INPUT
+        states so committed == 0 rows keep them unchanged."""
+        cfg = self.cfg
+        params = self._cast_params(params)
+        h = self._embed_tokens(params, tokens)
 
         def body(carry, xs):
-            lp, pk, pv = xs
-            hh, (npk, npv) = B.step_paged_ragged_block(
-                lp, cfg, carry, pk, pv, table, ctx_lens, q_lens)
-            return hh, (npk, npv)
-        h, (npk, npv) = jax.lax.scan(
-            body, h, (params["blocks"], cache["pool_k"], cache["pool_v"]),
+            lp, conv_s, ssm_s = xs
+            hh, conv_steps, ssm_steps = B.step_ragged_ssm_block(
+                lp, cfg, carry, conv_s, ssm_s, q_lens)
+            return hh, (conv_steps, ssm_steps)
+        h, (conv_steps, ssm_steps) = jax.lax.scan(
+            body, h, (params["blocks"], cache["conv"], cache["ssm"]),
             unroll=self.scan_unroll)
-        new_cache = {"pos": ctx_lens + q_lens, "pool_k": npk, "pool_v": npv,
-                     "block_table": table}
+        new_cache = dict(cache)
+        new_cache["pos"] = ctx_lens + q_lens
+        new_cache["conv_steps"] = conv_steps
+        new_cache["ssm_steps"] = ssm_steps
         h = rmsnorm(params["final_ln"], h, cfg.norm_eps)
         logits = self._logits(params, h)
         return logits, new_cache
 
     def step_ragged(self, params, cache, tokens, ctx_lens, q_lens):
         """The fused mixed-batch step's mirrored twin: a ragged multi-token
-        step over the dense padded cache (``k``/``v`` ``(L, B, T, K, D)``).
-        Same contract as :meth:`step_paged_ragged`; with every
-        ``q_len == 1`` this is ``decode_step`` exactly."""
-        if not self.supports_ragged_step():
+        step over the dense padded cache planes (``(L, B, T, *shape)`` in
+        descriptor order — ``k``/``v``, int8 + scales, or MLA ``c``/
+        ``kr``; SSM routes to the per-slot state scan). Same contract as
+        :meth:`step_paged_ragged`; with every ``q_len == 1`` this is
+        ``decode_step`` exactly."""
+        desc = self.cache_descriptor()
+        if desc is None:
             raise ValueError(
-                f"ragged step supports the dense-GQA family only; got "
-                f"family={self.cfg.family!r} mla={self.cfg.mla is not None} "
-                f"kv_cache_dtype={self.kv_cache_dtype!r}")
+                f"no cache descriptor for family={self.cfg.family!r} "
+                f"kv_cache_dtype={self.kv_cache_dtype!r}; ragged step "
+                f"needs a pooled layout")
+        if not desc.has_pages:
+            return self._step_ragged_ssm(params, cache, tokens, ctx_lens,
+                                         q_lens)
         cfg = self.cfg
-        params = jax.tree.map(
-            lambda a: a.astype(self.compute_dtype)
-            if a.dtype in (jnp.float32, jnp.bfloat16) and a.ndim >= 1 else a,
-            params)
+        params = self._cast_params(params)
         h = self._embed_tokens(params, tokens)
+        names = self._decoder_plane_names()
+        planes = tuple(cache[n] for n in names)
 
-        def body(carry, xs):
-            lp, k_, v_ = xs
-            hh, (nk, nv) = B.step_ragged_block(lp, cfg, carry, (k_, v_),
-                                               ctx_lens, q_lens)
-            return hh, (nk, nv)
-        h, (nk, nv) = jax.lax.scan(
-            body, h, (params["blocks"], cache["k"], cache["v"]),
-            unroll=self.scan_unroll)
+        def step_fn(ffn_kind):
+            def body(carry, xs):
+                hh, out = B.step_ragged_block(
+                    xs[0], cfg, carry, xs[1:], ctx_lens, q_lens,
+                    ffn_kind=ffn_kind, ep_axes=self.ep_axes)
+                return hh, out
+            return body
+
+        h, new_planes = self._scan_paged_planes(params, h, planes, step_fn)
         new_cache = dict(cache)
         new_cache["pos"] = ctx_lens + q_lens
-        new_cache["k"], new_cache["v"] = nk, nv
+        for n, p in zip(names, new_planes):
+            new_cache[n] = p
         h = rmsnorm(params["final_ln"], h, cfg.norm_eps)
         logits = self._logits(params, h)
         return logits, new_cache

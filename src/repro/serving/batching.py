@@ -34,7 +34,10 @@ import jax.numpy as jnp
 import numpy as np
 
 #: cache keys whose batch axis is not the default 1
-_SPECIAL_BATCH_AXIS = {"pos": 0, "seg_conv": 2, "seg_ssm": 2}
+#: (``conv_steps``/``ssm_steps`` are the ragged SSM step's per-slot state
+#: stacks, shaped ``(L, Qmax, B, ...)`` — slot axis before batch axis)
+_SPECIAL_BATCH_AXIS = {"pos": 0, "seg_conv": 2, "seg_ssm": 2,
+                       "conv_steps": 2, "ssm_steps": 2}
 
 
 def batch_axis(key: str) -> int:
@@ -138,28 +141,42 @@ def gather_kv_range(cache_k, cache_v, lo: int, hi: int):
     return jnp.stack([k, v], axis=1).astype(jnp.float16)
 
 
-def scatter_prefill_pages(pool_k, pool_v, cache_k, cache_v, phys, n: int):
-    """Scatter a batch-1 prompt's prefilled KV into its pool pages ON
-    DEVICE (the mirror-free admission path: a device-to-device copy, zero
-    bytes over the device→host link).
+def scatter_prefill_planes(pools, caches, phys, n: int):
+    """Scatter a batch-1 prompt's prefilled cache planes into its pool
+    pages ON DEVICE (the mirror-free admission path: a device-to-device
+    copy, zero bytes over the device→host link).
 
-    pool_k/pool_v: ``(L, P, T, K, D)``; cache_k/cache_v: ``(L, 1, max_len,
-    K, D)``; phys: ``(npages,)`` int32 physical pages owning logical pages
-    ``0..npages-1``. Slots past ``n`` inside the last page carry prefill
-    padding — callers mask them with ``lengths`` (the kernel contract) and
-    later appends overwrite them in place.
+    pools: one ``(L, P, T, *shape)`` array per descriptor plane; caches:
+    the matching prefill cache planes ``(L, 1, max_len, *shape)`` in the
+    same order; phys: ``(npages,)`` int32 physical pages owning logical
+    pages ``0..npages-1``. Slots past ``n`` inside the last page carry
+    prefill padding — callers mask them with ``lengths`` (the kernel
+    contract) and later appends overwrite them in place.
     """
-    L, P, T, K, D = pool_k.shape
     npages = phys.shape[0]
-    k = cache_k[:, 0, :npages * T].reshape(L, npages, T, K, D)
-    v = cache_v[:, 0, :npages * T].reshape(L, npages, T, K, D)
-    return (pool_k.at[:, phys].set(k.astype(pool_k.dtype)),
-            pool_v.at[:, phys].set(v.astype(pool_v.dtype)))
+    out = []
+    for pool, cache in zip(pools, caches):
+        L, _, T = pool.shape[:3]
+        tail = pool.shape[3:]
+        c = cache[:, 0, :npages * T].reshape((L, npages, T) + tail)
+        out.append(pool.at[:, phys].set(c.astype(pool.dtype)))
+    return tuple(out)
+
+
+def scatter_prefill_pages(pool_k, pool_v, cache_k, cache_v, phys, n: int):
+    """Dense ``(k, v)`` special case of :func:`scatter_prefill_planes`."""
+    return scatter_prefill_planes((pool_k, pool_v), (cache_k, cache_v),
+                                  phys, n)
+
+
+def copy_pool_page_planes(pools, src: int, dst: int):
+    """Duplicate one physical page group on device across every plane
+    (prefix-sharing COW: the writer takes the copy at ``dst``, readers
+    keep ``src``). One HBM read + write of a page group, zero host
+    traffic."""
+    return tuple(p.at[:, dst].set(p[:, src]) for p in pools)
 
 
 def copy_pool_page(pool_k, pool_v, src: int, dst: int):
-    """Duplicate one physical page group on device (prefix-sharing COW:
-    the writer takes the copy at ``dst``, readers keep ``src``). One HBM
-    read + write of a page group, zero host traffic."""
-    return (pool_k.at[:, dst].set(pool_k[:, src]),
-            pool_v.at[:, dst].set(pool_v[:, src]))
+    """Dense ``(k, v)`` special case of :func:`copy_pool_page_planes`."""
+    return copy_pool_page_planes((pool_k, pool_v), src, dst)

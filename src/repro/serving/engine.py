@@ -24,17 +24,23 @@ Mirror transfers are sliced **on device**: each decode step moves exactly
 one ``(L, 2, K, D)`` float16 token per sequence over the device→host link
 (counted in ``stats()["mirror_d2h_bytes"]``), never a whole cache row.
 
-**Mirror-free pooled decode (ISSUE 4).** When the KV engine owns a device
--resident page pool (``paged``) and the model family supports it, the
-dense mirror disappears entirely: admission scatters the prompt's prefilled
-KV into pool pages on device, every decode step runs
-``model.decode_step_paged`` — the ``paged_attention`` Pallas kernel over
-the pool with block-table indirection — and the engine's block-table/LRU
-accounting advances through ``prepare_decode``/``commit_decode`` with no
-device→host copy at all: ``mirror_d2h_bytes`` stays **zero** on this path
-(pinned by test). Engines without a pool (``log``, ``kvhybrid``) and model
-families without a plain (k, v) cache fall back to the mirrored path
-transparently; ``ServeConfig.paged_decode`` forces either path.
+**Mirror-free pooled decode (ISSUE 4, generalized by ISSUE 9).** When the
+KV engine owns a device-resident page pool (``paged``) and the model's
+:class:`~repro.core.engines.desc.CacheDescriptor` exists, the dense mirror
+disappears entirely: admission scatters the prompt's prefilled cache
+planes into pool pages on device, every decode step runs the family's
+paged kernel over the pool with block-table indirection, and the engine's
+block-table/LRU accounting advances through ``prepare_step``/
+``commit_step_planes`` with no device→host copy at all:
+``mirror_d2h_bytes`` stays **zero** on this path (pinned by test). The
+descriptor — not a ``supports_*`` gate — decides the layout: dense GQA
+pools ``(k, v)``, int8 pools quantized pages next to their bf16 scale
+planes (half the HBM bytes/token), MLA pools the latent ``(c, kr)``
+planes, and SSM pools ZERO pages — its fixed-size state rows ride in the
+engine (``state_views``/``commit_state``) alongside the block tables.
+Engines without a pool (``log``, ``kvhybrid``) and families without a
+descriptor (hybrid, encdec) fall back to the mirrored path transparently;
+``ServeConfig.paged_decode`` forces either path.
 
 **Fused mixed-batch ticks (ISSUE 5).** The paper's batched-submission
 lesson, applied to the tick itself: instead of one batched decode launch
@@ -49,7 +55,7 @@ are masked end to end, including their pool scatters), so the jitted steps
 stop recompiling per width — ``step_compiles``/``step_cache_hits`` in
 ``stats()`` pin it. ``ServeConfig.fuse_ticks=False`` keeps the
 batch=1-per-chunk baseline (``kvcache_bench``'s fused gate measures the
-gap), and model families without a ragged step (SSM/MLA/int8/MoE caches)
+gap), and model families without a cache descriptor (hybrid, encdec)
 fall back to it transparently.
 """
 from __future__ import annotations
@@ -159,8 +165,14 @@ class ServingEngine:
         self.clock = SimClock()
         kv_heads = max(mcfg.num_kv_heads, 1)
         head_dim = max(mcfg.head_dim, 1)
+        # the model family's cache-layout descriptor (None → hybrid/encdec:
+        # mirror-only). It rides inside KVSpec so a pool-capable engine
+        # sizes, allocates and byte-accounts the pool from the SAME plane
+        # list the model's paged/ragged steps consume.
+        self.desc = model.cache_descriptor(cfg.page_tokens)
         spec = KVSpec(num_layers=mcfg.num_layers, kv_heads=kv_heads,
-                      head_dim=head_dim, page_tokens=cfg.page_tokens)
+                      head_dim=head_dim, page_tokens=cfg.page_tokens,
+                      desc=self.desc)
         self.tiered = create_kv_engine(cfg.resolved_spec(), spec, self.clock)
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cfg.max_len))
@@ -172,10 +184,15 @@ class ServingEngine:
                                         static_argnums=(2, 3))
         self.mirror_d2h_bytes = 0      # device→host mirror traffic (exact)
         self.sched_stats: dict = {}    # last generate()'s scheduler counters
+        # host-facing mirror appends are dense-layout: a pooled engine with
+        # a non-dense descriptor (int8/MLA pages, SSM state rows) cannot
+        # absorb them, so the sequential reference counts its mirror bytes
+        # but skips the tiered append (generate() never mirrors when pooled)
+        self._mirror_appends_ok = True
         # ---------------------------------------------- fused mixed-batch tick
         # one ragged forward per tick (decode rows + prefill-chunk rows in
-        # the same launch); models without a ragged step (SSM/MLA/int8/MoE
-        # caches) keep the batch=1-per-chunk fallback transparently
+        # the same launch); families without a cache descriptor (hybrid,
+        # encdec) keep the batch=1-per-chunk fallback transparently
         self.fused = bool(cfg.fuse_ticks) and model.supports_ragged_step()
         if self.fused:
             self._step_ragged = jax.jit(model.step_ragged)
@@ -190,38 +207,46 @@ class ServingEngine:
         self._step_shapes: set = set()
         # ------------------------------------------- mirror-free pooled path
         self.max_pages = -(-cfg.max_len // cfg.page_tokens)
-        pool_dtype = np.dtype(model.compute_dtype)
-        # liveness floor: the pool must hold one max-length sequence plus a
-        # reserve page, or a lone running sequence could exhaust it with
-        # nothing left to preempt
-        group_bytes = (mcfg.num_layers * 2 * cfg.page_tokens * kv_heads
-                       * head_dim * pool_dtype.itemsize)
-        budget_pages = cfg.resolved_spec().kv_hbm_bytes // group_bytes
-        pool_fits = budget_pages >= self.max_pages + 1
-        pool_ok = (self.tiered.supports_pool()
-                   and model.supports_paged_decode())
+        budget = cfg.resolved_spec().kv_hbm_bytes
+        if self.desc is None:
+            pool_fits, budget_pages = False, 0
+        elif self.desc.has_pages:
+            # liveness floor: the pool must hold one max-length sequence
+            # plus a reserve page, or a lone running sequence could exhaust
+            # it with nothing left to preempt
+            budget_pages = budget // self.desc.page_group_bytes
+            pool_fits = budget_pages >= self.max_pages + 1
+        else:
+            # state-row family (SSM): fixed-size rows, need one running row
+            # plus one restore in flight
+            budget_pages = budget // max(self.desc.seq_state_bytes, 1)
+            pool_fits = budget_pages >= 2
+        pool_ok = self.tiered.supports_pool() and self.desc is not None
         if cfg.paged_decode and not (pool_ok and pool_fits):
             raise ValueError(
-                f"paged_decode=True needs a pool-capable KV engine, a "
-                f"dense-GQA model, and an HBM budget of at least "
-                f"{self.max_pages + 1} pool pages; got engine="
+                f"paged_decode=True needs a pool-capable KV engine, a model "
+                f"family with a cache descriptor, and an HBM budget of at "
+                f"least {self.max_pages + 1} pool pages; got engine="
                 f"{self.tiered.engine_name!r} (supports_pool="
                 f"{self.tiered.supports_pool()}), family="
                 f"{model.cfg.family!r}, budget_pages={budget_pages}")
         self.pooled = (pool_ok and pool_fits) if cfg.paged_decode is None \
             else bool(cfg.paged_decode)
         if self.pooled:
-            if cfg.max_len % cfg.page_tokens:
+            if self.desc.has_pages and cfg.max_len % cfg.page_tokens:
                 raise ValueError(
                     f"pooled decode needs max_len ({cfg.max_len}) to be a "
                     f"multiple of page_tokens ({cfg.page_tokens})")
-            # the pool is the model's decode cache: same dtype as the dense
-            # path so pooled decode is numerically identical to it
-            self.tiered.init_pool(dtype=pool_dtype)
+            # the descriptor already carries each plane's dtype (the dense
+            # planes are the model's compute dtype, so pooled decode stays
+            # numerically identical to the dense path; int8 pages keep
+            # int8 next to their bf16 scale planes)
+            self.tiered.init_pool()
+            self._mirror_appends_ok = self.desc.kernel == "dense"
             self._decode_paged = jax.jit(model.decode_step_paged)
             self._step_paged_ragged = jax.jit(model.step_paged_ragged)
-            self._scatter_prefill = jax.jit(batching.scatter_prefill_pages,
-                                            static_argnums=5)
+            self._scatter_prefill = jax.jit(batching.scatter_prefill_planes,
+                                            static_argnums=3)
         # ----------------------------------------- speculative decode (I7)
         # draft-and-verify over the ragged entries: decode rows carry
         # 1 + k query slots, the per-slot logits of the SAME fused forward
@@ -249,7 +274,7 @@ class ServingEngine:
         # admission behavior is unchanged, still token-identical)
         self.prefix_cache = None
         pc_tokens = cfg.resolved_spec().prefix_cache_tokens
-        if self.pooled and pc_tokens > 0:
+        if self.pooled and pc_tokens > 0 and self.desc.has_pages:
             from repro.serving.prefix_cache import PrefixCache
             self.prefix_cache = PrefixCache(self.tiered,
                                             capacity_tokens=pc_tokens)
@@ -267,7 +292,8 @@ class ServingEngine:
         tok = np.asarray(self._gather_new_kv(
             cache["k"], cache["v"], jnp.asarray([pos], jnp.int32)))[0]
         self.mirror_d2h_bytes += tok.nbytes
-        self.tiered.append(rid, tok)
+        if self._mirror_appends_ok:
+            self.tiered.append(rid, tok)
 
     def mirror_decode_batch(self, rids: list, cache, positions) -> None:
         """Mirror one decode step's tokens for a whole running batch: one
@@ -335,7 +361,8 @@ class ServingEngine:
             return
         toks = np.asarray(self._gather_prefill_kv(cache["k"], cache["v"], n))
         self.mirror_d2h_bytes += toks.nbytes
-        self.tiered.append(rid, toks)
+        if self._mirror_appends_ok:
+            self.tiered.append(rid, toks)
 
     # ------------------------------------------------------------- generation
     def prefill_one(self, req: Request, n: Optional[int] = None):
@@ -375,17 +402,25 @@ class ServingEngine:
             self.prefix_cache.insert(rid, prompt)
 
     def _pool_admit(self, rid: int, cache, n: int) -> dict:
-        """Move a fresh prompt's prefilled KV into the device pool (one
-        on-device scatter — zero device→host bytes) and shrink the row's
-        cache to its position vector."""
+        """Move a fresh prompt's prefilled cache into the engine-owned pool
+        (one on-device scatter — zero device→host bytes) and shrink the
+        row's cache to its position vector. Paged families scatter every
+        descriptor plane into pool pages; the state-row family (SSM)
+        commits the prompt-final state rows instead — either way the dense
+        prefill cache is dropped and the row carries only ``pos``."""
         if n == 0:
             return {"pos": cache["pos"]}
+        if not self.desc.has_pages:
+            self.tiered.commit_state(
+                [rid], [n],
+                tuple(cache[p.name] for p in self.desc.seq_planes))
+            return {"pos": cache["pos"]}
         phys = self.tiered.alloc_prefill(rid, n)
-        pool_k, pool_v = self.tiered.pool_views()
-        pool_k, pool_v = self._scatter_prefill(
-            pool_k, pool_v, cache["k"], cache["v"],
+        pools = self._scatter_prefill(
+            self.tiered.pool_views(),
+            tuple(cache[p.name] for p in self.desc.paged_planes),
             jnp.asarray(phys, jnp.int32), n)
-        self.tiered.commit_prefill(pool_k, pool_v, rid, n)
+        self.tiered.commit_prefill_planes(pools, rid, n)
         return {"pos": cache["pos"]}
 
     def _count_step(self, path: str, width: int, qmax: int) -> None:
@@ -517,7 +552,11 @@ class ServingEngine:
         if fused:       # the unfused pooled decode reuses this entry at
             self.jit_stats["fused_steps"] += 1   # q_len=1; don't count it
 
+        if self.pooled and not self.desc.has_pages:
+            return self._step_state_batch(rids, caches, tok_rows, tok_j,
+                                          qlen_j, q_lens, spec, Bb, Qb)
         if self.pooled:
+            names = [p.name for p in self.desc.paged_planes]
             tbl, ctx = self.tiered.prepare_step(rids, q_lens, self.max_pages)
             model_pos = np.concatenate([np.asarray(c["pos"])
                                         for c in caches])
@@ -529,15 +568,16 @@ class ServingEngine:
             tbl_p[:B] = tbl
             ctx_p = np.zeros(Bb, np.int32)
             ctx_p[:B] = ctx
-            pool_k, pool_v = self.tiered.pool_views()
-            cache = {"pool_k": pool_k, "pool_v": pool_v,
-                     "block_table": jnp.asarray(tbl_p)}
+            cache = {"block_table": jnp.asarray(tbl_p)}
+            for n, v in zip(names, self.tiered.pool_views()):
+                cache["pool_" + n] = v
             self._count_step("pool", Bb, Qb)
             logits, out = self._step_paged_ragged(
                 self.params, cache, tok_j, jnp.asarray(ctx_p), qlen_j)
             committed = self._verify_drafts(logits, tok_rows, q_lens, spec)
-            self.tiered.commit_step(out["pool_k"], out["pool_v"], rids,
-                                    committed, prepared=q_lens)
+            self.tiered.commit_step_planes(
+                tuple(out["pool_" + n] for n in names), rids, committed,
+                prepared=q_lens)
             new_rows = [
                 {"pos": out["pos"][i:i + 1]} if committed[i] == q_lens[i]
                 else {"pos": jnp.asarray([int(ctx[i]) + committed[i]],
@@ -553,6 +593,7 @@ class ServingEngine:
             if mirrored:
                 self._mirror_step_ragged(rids, nbatch, ctx, q_lens, Qb,
                                          committed)
+            nbatch = self._select_state_slots(nbatch, committed, B)
             new_rows = [batching.split_row(nbatch, i) for i in range(B)]
             ctx_np = np.asarray(ctx)
             for i in range(B):
@@ -564,6 +605,65 @@ class ServingEngine:
                         [int(ctx_np[i]) + committed[i]], jnp.int32)
         logit_rows = [logits[i:i + 1, :committed[i]] for i in range(B)]
         return logit_rows, new_rows, committed
+
+    def _step_state_batch(self, rids: list, caches: list, tok_rows: list,
+                          tok_j, qlen_j, q_lens: list, spec: list,
+                          Bb: int, Qb: int):
+        """Fused ragged tick for the state-row (SSM) family: the engine's
+        pool holds per-sequence state rows instead of pages, so the tick
+        reads them back as batched views, runs the ragged state scan (which
+        emits PER-SLOT states), and commits each row's committed slot —
+        committing an earlier slot IS the speculative rollback, and a
+        fully-rejected or padding row (``committed == 0``) commits nothing.
+        Zero device→host bytes, same as the paged branch."""
+        B = len(rids)
+        ctx = np.concatenate([np.asarray(c["pos"]) for c in caches])
+        eng_len = [int(self.tiered.seq_len.get(r, 0)) for r in rids]
+        if eng_len != [int(c) for c in ctx]:
+            raise RuntimeError(
+                f"state-row drift: engine lengths {eng_len} != model "
+                f"positions {ctx.tolist()}")
+        ctx_p = np.zeros(Bb, np.int32)
+        ctx_p[:B] = ctx
+        # bucket-ladder padding rows replicate row 0's state: they carry
+        # q_len = 0, so their outputs are discarded and nothing commits
+        views = self.tiered.state_views(list(rids) + [rids[0]] * (Bb - B))
+        cache = {p.name: v for p, v in zip(self.desc.seq_planes, views)}
+        self._count_step("pool", Bb, Qb)
+        logits, out = self._step_paged_ragged(
+            self.params, cache, tok_j, jnp.asarray(ctx_p), qlen_j)
+        committed = self._verify_drafts(logits, tok_rows, q_lens, spec)
+        states = []
+        for j, p in enumerate(self.desc.seq_planes):
+            steps = out[p.name + "_steps"]       # (L, Qmax, B, ...)
+            states.append(jnp.stack(
+                [steps[:, committed[i] - 1, i] if committed[i] > 0
+                 else views[j][:, i] for i in range(B)], axis=1))
+        self.tiered.commit_state(rids, committed, tuple(states))
+        new_rows = [{"pos": jnp.asarray([int(ctx[i]) + committed[i]],
+                                        jnp.int32)} for i in range(B)]
+        logit_rows = [logits[i:i + 1, :committed[i]] for i in range(B)]
+        return logit_rows, new_rows, committed
+
+    def _select_state_slots(self, batch: dict, committed: list, B: int):
+        """Mirror-path twin of the state commit: fold the ragged SSM step's
+        per-slot state stacks (``<plane>_steps``, shaped
+        ``(L, Qmax, B, ...)``) down to each row's committed slot before the
+        batch splits back into rows. Rows with ``committed == 0`` keep the
+        step's INPUT state (the rolled-back row re-plans next tick); the
+        ``_steps`` stacks never leave this method."""
+        step_keys = [k for k in batch if k.endswith("_steps")]
+        if not step_keys:
+            return batch
+        out = {k: v for k, v in batch.items() if k not in step_keys}
+        for key in step_keys:
+            name = key[:-len("_steps")]
+            steps = batch[key]
+            out[name] = jnp.stack(
+                [steps[:, committed[i] - 1, i] if i < B and committed[i] > 0
+                 else batch[name][:, i] for i in range(steps.shape[2])],
+                axis=1)
+        return out
 
     def extend_one(self, rid: int, cache, toks: np.ndarray, start: int,
                    mirrored: bool):
@@ -577,18 +677,36 @@ class ServingEngine:
         :meth:`step_batch`. Returns (logits, cache) positioned after the
         chunk."""
         logits = None
+        if self.pooled and not self.desc.has_pages:
+            # state-row family: check the rows out of the engine, run the
+            # chunk through decode_step at batch=1, commit the final state
+            views = self.tiered.state_views([rid])
+            pc = {"pos": cache["pos"]}
+            for p, v in zip(self.desc.seq_planes, views):
+                pc[p.name] = v
+            for t in toks:
+                self._count_step("pool-chunk1", 1, 1)
+                logits, pc = self._decode(
+                    self.params, pc, jnp.asarray([[int(t)]], jnp.int32),
+                    pc["pos"])
+            self.tiered.commit_state(
+                [rid], [len(toks)],
+                tuple(pc[p.name] for p in self.desc.seq_planes))
+            return logits, {"pos": pc["pos"]}
         if self.pooled:
+            names = [p.name for p in self.desc.paged_planes]
             for t in toks:
                 tbl, _ = self.tiered.prepare_decode([rid], self.max_pages)
                 pc = {"pos": cache["pos"],
                       "block_table": jnp.asarray(tbl)}
-                pc["pool_k"], pc["pool_v"] = self.tiered.pool_views()
+                for n, v in zip(names, self.tiered.pool_views()):
+                    pc["pool_" + n] = v
                 self._count_step("pool-chunk1", 1, 1)
                 logits, out = self._decode_paged(
                     self.params, pc, jnp.asarray([[int(t)]], jnp.int32),
                     cache["pos"])
-                self.tiered.commit_decode(out["pool_k"], out["pool_v"],
-                                          [rid])
+                self.tiered.commit_step_planes(
+                    tuple(out["pool_" + n] for n in names), [rid], [1])
                 cache = {"pos": out["pos"]}
             return logits, cache
         for t in toks:

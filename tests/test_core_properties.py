@@ -231,6 +231,88 @@ def test_scheduler_matches_sequential_for_any_schedule(
             assert r.done and r.generated == want[r.rid], (name, r.rid)
 
 
+# one model per cache-layout family (ISSUE 9), shared across examples so
+# the jit caches warm once: dense GQA, MLA latent (the deepseek smoke
+# config with its MoE stripped — the MLA cache is the axis under test),
+# int8 quantized KV + scale planes, and Mamba-2 SSM state rows
+_FAMILY_MODELS: dict = {}
+
+
+def _family_model(fam):
+    if fam not in _FAMILY_MODELS:
+        import dataclasses
+        import jax
+        from repro.configs import get_config
+        from repro.models import build_model
+        if fam == "mla":
+            cfg = dataclasses.replace(get_config("deepseek-v2-236b-smoke"),
+                                      family="attn_dense", moe=None)
+            model = build_model(cfg, remat=False)
+        elif fam == "int8":
+            cfg = get_config("internlm2-1.8b-smoke")
+            model = build_model(cfg, remat=False, kv_cache_dtype="int8")
+        elif fam == "ssm":
+            cfg = get_config("mamba2-1.3b-smoke")
+            model = build_model(cfg, remat=False)
+        else:
+            cfg = get_config("internlm2-1.8b-smoke")
+            model = build_model(cfg, remat=False)
+        params = model.init(jax.random.PRNGKey(0))
+        _FAMILY_MODELS[fam] = (cfg, model, params)
+    return _FAMILY_MODELS[fam]
+
+
+@pytest.mark.slow
+@settings(max_examples=8)
+@given(
+    family=st.sampled_from(["dense", "mla", "int8", "ssm"]),
+    engine=st.sampled_from(["paged", "log", "kvhybrid"]),
+    arrival_perm=st.permutations(range(3)),
+    max_new=st.integers(1, 3),
+    max_batch_seqs=st.integers(1, 3),
+    chunk=st.sampled_from([None, 5]),
+    speculate_k=st.sampled_from([0, 2]),
+    seed=st.integers(0, 2),
+)
+def test_families_match_sequential_for_any_schedule(
+        family, engine, arrival_perm, max_new, max_batch_seqs, chunk,
+        speculate_k, seed):
+    """ISSUE 9 invariant — the config-family axis: every cache-descriptor
+    family (dense GQA, MLA, int8, SSM) through every registered KV engine,
+    random arrival schedules, batch widths, chunked prefill, and
+    speculation depths is token-identical to the sequential mirrored
+    reference. Pool-capable engines must run these families MIRROR-FREE
+    (``mirror_d2h_bytes == 0``); the rest fall back transparently."""
+    from repro.serving import Request, ServeConfig, ServingEngine
+    cfg, model, params = _family_model(family)
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size, (6, 9, 7)[i], dtype=np.int32)
+               for i in range(3)]
+
+    def mk_engine(name):
+        return ServingEngine(model, params, ServeConfig(
+            max_len=16, page_tokens=4,
+            engine_spec=EngineSpec(engine=name, kv_hbm_bytes=64 << 20,
+                                   kv_hot_window=4, drain_shards=2),
+            max_batch_seqs=max_batch_seqs, prefill_chunk_tokens=chunk,
+            speculate_k=speculate_k))
+
+    ref = [Request(rid=i, prompt=p.copy(), max_new=max_new)
+           for i, p in enumerate(prompts)]
+    mk_engine("log").generate_sequential(ref)
+    want = {r.rid: list(r.generated) for r in ref}
+
+    reqs = [Request(rid=i, prompt=p.copy(), max_new=max_new)
+            for i, p in enumerate(prompts)]
+    eng = mk_engine(engine)
+    eng.generate([reqs[i] for i in arrival_perm])
+    for r in reqs:
+        assert r.done and r.generated == want[r.rid], (family, engine, r.rid)
+    if eng.tiered.supports_pool():
+        assert eng.pooled, (family, engine)
+        assert eng.stats()["mirror_d2h_bytes"] == 0, (family, engine)
+
+
 @pytest.mark.slow
 @settings(max_examples=5)
 @given(

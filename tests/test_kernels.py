@@ -13,15 +13,21 @@ try:        # only the hypothesis property test skips without hypothesis —
 except ModuleNotFoundError:          # the shape/dtype sweeps always run
     given = None
 
-from repro.kernels import (flash_attention, log_patch, paged_attention,
+from repro.kernels import (flash_attention, log_patch, mla_paged_attention,
+                           mla_paged_attention_layers_ragged,
+                           mla_paged_attention_ragged, paged_attention,
                            paged_attention_layers,
                            paged_attention_layers_ragged,
-                           paged_attention_ragged)
+                           paged_attention_layers_ragged_q8,
+                           paged_attention_q8, paged_attention_ragged,
+                           paged_attention_ragged_q8)
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.log_patch.ref import log_patch_ref
 from repro.kernels.paged_attention.ref import (
-    paged_attention_layers_ragged_ref, paged_attention_layers_ref,
-    paged_attention_ragged_ref, paged_attention_ref)
+    mla_paged_attention_layers_ragged_ref,
+    paged_attention_layers_ragged_q8_ref, paged_attention_layers_ragged_ref,
+    paged_attention_layers_ref, paged_attention_ragged_ref,
+    paged_attention_ref)
 
 _RTOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
@@ -433,6 +439,192 @@ def test_ragged_rolled_back_draft_slots_are_invisible():
     out2 = paged_attention_layers_ragged(q, jnp.asarray(pk2),
                                          jnp.asarray(pv2), jnp.asarray(tbl2),
                                          lens_arr, qls, force_pallas=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-5)
+
+
+# ------------------------------------- descriptor-plane entries (int8 + MLA)
+def _q8_inputs(seed=31):
+    """Small int8 pool + bf16 per-(token, head) scale planes, ragged batch
+    with a padding row (q_len = 0), a decode row, and two chunk rows."""
+    L, B, Qm, H, K, D, T, MP = 2, 4, 3, 4, 2, 64, 8, 3
+    P = B * MP                                       # disjoint tables
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((L, B, Qm, H, D)), jnp.float32)
+    pk = jnp.asarray(rng.integers(-127, 128, (L, P, T, K, D)), jnp.int8)
+    pv = jnp.asarray(rng.integers(-127, 128, (L, P, T, K, D)), jnp.int8)
+    ks = jnp.asarray(rng.random((L, P, T, K)) * 0.1 + 0.01, jnp.bfloat16)
+    vs = jnp.asarray(rng.random((L, P, T, K)) * 0.1 + 0.01, jnp.bfloat16)
+    tbl = jnp.asarray(np.arange(P, dtype=np.int32).reshape(B, MP))
+    lens = jnp.asarray([6, 5, T, T * MP - 2], jnp.int32)
+    qls = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    return q, pk, pv, ks, vs, tbl, lens, qls
+
+
+def _mla_inputs(seed=32):
+    """Latent + rope-key planes (no KV-head axis), same ragged batch edges."""
+    L, B, Qm, H, dc, dr, T, MP = 2, 4, 3, 4, 64, 32, 8, 3
+    P = B * MP
+    rng = np.random.default_rng(seed)
+    q_c = jnp.asarray(rng.standard_normal((L, B, Qm, H, dc)), jnp.float32)
+    q_r = jnp.asarray(rng.standard_normal((L, B, Qm, H, dr)), jnp.float32)
+    pc = jnp.asarray(rng.standard_normal((L, P, T, dc)), jnp.float32)
+    pkr = jnp.asarray(rng.standard_normal((L, P, T, dr)), jnp.float32)
+    tbl = jnp.asarray(np.arange(P, dtype=np.int32).reshape(B, MP))
+    lens = jnp.asarray([6, 5, T, T * MP - 2], jnp.int32)
+    qls = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    scale = float(1.0 / np.sqrt(dc + dr))
+    return q_c, q_r, pc, pkr, tbl, lens, qls, scale
+
+
+def test_q8_ragged_matches_oracle_and_pads_zero():
+    """int8 ragged entries vs the pure-jnp oracle, plus exact zeros in every
+    padding query slot (q_len = 0 rows included)."""
+    q, pk, pv, ks, vs, tbl, lens, qls = _q8_inputs()
+    out = paged_attention_layers_ragged_q8(q, pk, pv, ks, vs, tbl, lens,
+                                           qls, force_pallas=True)
+    ref = paged_attention_layers_ragged_q8_ref(q, pk, pv, ks, vs, tbl,
+                                               lens, qls)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=4e-5)
+    o1 = paged_attention_ragged_q8(q[0], pk[0], pv[0], ks[0], vs[0], tbl,
+                                   lens, qls, force_pallas=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(out)[0],
+                               atol=1e-4, rtol=4e-5)
+    o = np.asarray(out)
+    for b in range(o.shape[1]):
+        assert np.all(o[:, b, int(qls[b]):] == 0.0), b
+
+
+def test_q8_dequant_parity_vs_fp32_oracle():
+    """Kernel-body dequant (int8 × bf16 scale → fp32) must agree with the
+    dense fp32 oracle run over a MANUALLY dequantized pool — the pin that
+    the half-bytes pool read does not change the numerics contract."""
+    q, pk, pv, ks, vs, tbl, lens, qls = _q8_inputs(seed=33)
+    deq_k = pk.astype(jnp.float32) * ks.astype(jnp.float32)[..., None]
+    deq_v = pv.astype(jnp.float32) * vs.astype(jnp.float32)[..., None]
+    out = paged_attention_layers_ragged_q8(q, pk, pv, ks, vs, tbl, lens,
+                                           qls, force_pallas=True)
+    ref = paged_attention_layers_ragged_ref(q, deq_k, deq_v, tbl, lens, qls)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=4e-5)
+
+
+def test_q8_qlen1_is_bitwise_decode_entry():
+    """q_len = 1 through the int8 ragged entries IS the int8 decode entry
+    bit for bit, and the multi-layer launch is bitwise the stacked
+    single-layer launches — no numerics audit needed to route batched int8
+    decode through the fused tick."""
+    q, pk, pv, ks, vs, tbl, lens, _ = _q8_inputs(seed=34)
+    lens = jnp.maximum(lens, 1)
+    q1 = q[:, :, :1]
+    qls = jnp.ones(q.shape[1], jnp.int32)
+    r = paged_attention_layers_ragged_q8(q1, pk, pv, ks, vs, tbl, lens,
+                                         qls, force_pallas=True)
+    d = paged_attention_q8(q1[0, :, 0], pk[0], pv[0], ks[0], vs[0], tbl,
+                           lens, force_pallas=True)
+    assert np.array_equal(np.asarray(r[0, :, 0]), np.asarray(d))
+    per_layer = [paged_attention_ragged_q8(q1[l], pk[l], pv[l], ks[l],
+                                           vs[l], tbl, lens, qls,
+                                           force_pallas=True)
+                 for l in range(q.shape[0])]
+    assert np.array_equal(np.asarray(r), np.stack([np.asarray(x)
+                                                   for x in per_layer]))
+
+
+def test_q8_ragged_ignores_dead_pages():
+    """Poisoning int8 slots AND their scale planes past each row's length
+    must not change the int8 ragged output."""
+    q, pk, pv, ks, vs, tbl, lens, qls = _q8_inputs(seed=35)
+    out1 = paged_attention_layers_ragged_q8(q, pk, pv, ks, vs, tbl, lens,
+                                            qls, force_pallas=True)
+    pk2, pv2 = np.asarray(pk).copy(), np.asarray(pv).copy()
+    ks2 = np.asarray(ks.astype(jnp.float32)).copy()
+    vs2 = np.asarray(vs.astype(jnp.float32)).copy()
+    T, MP = pk.shape[2], tbl.shape[1]
+    tl = np.asarray(tbl)
+    ln = np.asarray(lens)
+    for b in range(tl.shape[0]):
+        for lp in range(MP):
+            phys, start = tl[b, lp], lp * T
+            if start >= ln[b]:
+                pk2[:, phys], pv2[:, phys] = 127, -127
+                ks2[:, phys], vs2[:, phys] = 1e6, 1e6
+            elif start + T > ln[b]:
+                pk2[:, phys, ln[b] - start:] = 127
+                pv2[:, phys, ln[b] - start:] = -127
+                ks2[:, phys, ln[b] - start:] = 1e6
+                vs2[:, phys, ln[b] - start:] = 1e6
+    out2 = paged_attention_layers_ragged_q8(
+        q, jnp.asarray(pk2), jnp.asarray(pv2),
+        jnp.asarray(ks2, jnp.bfloat16), jnp.asarray(vs2, jnp.bfloat16),
+        tbl, lens, qls, force_pallas=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-5)
+
+
+def test_mla_ragged_matches_oracle_and_pads_zero():
+    """MLA ragged entries vs the pure-jnp oracle over the latent + rope-key
+    planes, plus exact zeros in every padding query slot."""
+    q_c, q_r, pc, pkr, tbl, lens, qls, scale = _mla_inputs()
+    out = mla_paged_attention_layers_ragged(q_c, q_r, pc, pkr, tbl, lens,
+                                            qls, scale=scale,
+                                            force_pallas=True)
+    ref = mla_paged_attention_layers_ragged_ref(q_c, q_r, pc, pkr, tbl,
+                                                lens, qls, scale=scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=4e-5)
+    o1 = mla_paged_attention_ragged(q_c[0], q_r[0], pc[0], pkr[0], tbl,
+                                    lens, qls, scale=scale,
+                                    force_pallas=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(out)[0],
+                               atol=1e-4, rtol=4e-5)
+    o = np.asarray(out)
+    for b in range(o.shape[1]):
+        assert np.all(o[:, b, int(qls[b]):] == 0.0), b
+
+
+def test_mla_qlen1_is_bitwise_decode_entry():
+    """q_len = 1 through the MLA ragged entries IS the MLA decode entry bit
+    for bit, and the multi-layer launch is bitwise the stacked
+    single-layer launches."""
+    q_c, q_r, pc, pkr, tbl, lens, _, scale = _mla_inputs(seed=36)
+    lens = jnp.maximum(lens, 1)
+    qc1, qr1 = q_c[:, :, :1], q_r[:, :, :1]
+    qls = jnp.ones(q_c.shape[1], jnp.int32)
+    r = mla_paged_attention_layers_ragged(qc1, qr1, pc, pkr, tbl, lens,
+                                          qls, scale=scale,
+                                          force_pallas=True)
+    d = mla_paged_attention(qc1[0, :, 0], qr1[0, :, 0], pc[0], pkr[0], tbl,
+                            lens, scale=scale, force_pallas=True)
+    assert np.array_equal(np.asarray(r[0, :, 0]), np.asarray(d))
+    per_layer = [mla_paged_attention_ragged(qc1[l], qr1[l], pc[l], pkr[l],
+                                            tbl, lens, qls, scale=scale,
+                                            force_pallas=True)
+                 for l in range(q_c.shape[0])]
+    assert np.array_equal(np.asarray(r), np.stack([np.asarray(x)
+                                                   for x in per_layer]))
+
+
+def test_mla_ragged_ignores_dead_pages():
+    """Poisoning latent AND rope-key slots past each row's length must not
+    change the MLA ragged output."""
+    q_c, q_r, pc, pkr, tbl, lens, qls, scale = _mla_inputs(seed=37)
+    out1 = mla_paged_attention_layers_ragged(q_c, q_r, pc, pkr, tbl, lens,
+                                             qls, scale=scale,
+                                             force_pallas=True)
+    pc2, pkr2 = np.asarray(pc).copy(), np.asarray(pkr).copy()
+    T, MP = pc.shape[2], tbl.shape[1]
+    tl, ln = np.asarray(tbl), np.asarray(lens)
+    for b in range(tl.shape[0]):
+        for lp in range(MP):
+            phys, start = tl[b, lp], lp * T
+            if start >= ln[b]:
+                pc2[:, phys], pkr2[:, phys] = 1e6, -1e6
+            elif start + T > ln[b]:
+                pc2[:, phys, ln[b] - start:] = 1e6
+                pkr2[:, phys, ln[b] - start:] = -1e6
+    out2 = mla_paged_attention_layers_ragged(
+        q_c, q_r, jnp.asarray(pc2), jnp.asarray(pkr2), tbl, lens, qls,
+        scale=scale, force_pallas=True)
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-5)
 
 

@@ -131,21 +131,32 @@ def test_log_engines_fall_back_to_mirror(lm, reference):
         assert eng.stats()["mirror_d2h_bytes"] > 0
 
 
-def test_ssm_family_falls_back_to_mirror():
-    """No (k, v) cache → paged decode unsupported → transparent mirror
-    path even on a pool-capable engine."""
+def test_ssm_family_runs_pooled_mirror_free():
+    """ISSUE 9 flip of the old fallback pin: the SSM descriptor pools ZERO
+    pages — its fixed-size state rows ride in the engine
+    (``state_views``/``commit_state``) — so a pool-capable engine now runs
+    Mamba-2 POOLED, fused, and mirror-free, token-identical to the
+    sequential mirrored reference."""
     cfg = get_config("mamba2-1.3b-smoke")
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.PRNGKey(0))
-    eng = ServingEngine(model, params, ServeConfig(
-        max_len=16, page_tokens=4,
-        engine_spec=EngineSpec(engine="paged")))
-    assert not eng.pooled
+
+    def engine():
+        return ServingEngine(model, params, ServeConfig(
+            max_len=16, page_tokens=4,
+            engine_spec=EngineSpec(engine="paged")))
     rng = np.random.default_rng(3)
-    req = Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 8,
-                                             dtype=np.int32), max_new=4)
+    prompt = rng.integers(0, cfg.vocab_size, 8, dtype=np.int32)
+    ref = Request(rid=0, prompt=prompt.copy(), max_new=4)
+    engine().generate_sequential([ref])
+    eng = engine()
+    assert eng.pooled and eng.fused
+    assert not eng.desc.has_pages and eng.desc.has_state
+    req = Request(rid=0, prompt=prompt.copy(), max_new=4)
     eng.generate([req])
-    assert len(req.generated) == 4
+    assert req.generated == ref.generated
+    assert eng.stats()["mirror_d2h_bytes"] == 0
+    assert eng.stats()["pool_appends"] > 0
 
 
 # --------------------------------------------------------------- zero-mirror
@@ -399,6 +410,41 @@ def test_pooled_prepare_commit_step_multi_token():
     assert ctx2.tolist() == [2]
     kv.commit_decode(pk, pv, [1])
     assert kv.seq_len[1] == 3
+
+
+def test_per_plane_byte_counters_uniform_and_exact():
+    """Satellite pin (ISSUE 9): every registered engine exposes the SAME
+    ``pool_d2h_bytes_<plane>``/``pool_h2d_bytes_<plane>`` key set — zeroed
+    on engines without a pool — and on a pooled int8 descriptor the paged
+    -plane counters are exact: ``spills × that plane's page bytes``, so
+    the aggregate splits by plane with nothing lost."""
+    from repro.core.engines.desc import PLANE_STAT_NAMES, descriptor_for
+    kvspec = KVSpec(num_layers=2, kv_heads=2, head_dim=8, page_tokens=4)
+    for name in list_kv_engines():
+        kv = create_kv_engine(EngineSpec(engine=name), kvspec, SimClock())
+        for p in PLANE_STAT_NAMES:
+            assert kv.stats[f"pool_d2h_bytes_{p}"] == 0, (name, p)
+            assert kv.stats[f"pool_h2d_bytes_{p}"] == 0, (name, p)
+    # int8 pool under page thrash: the spill/fault traffic splits by plane
+    cfg = get_config(ARCH)
+    desc = descriptor_for(cfg, "int8", page_tokens=4)
+    spec8 = KVSpec(num_layers=cfg.num_layers, kv_heads=max(cfg.num_kv_heads, 1),
+                   head_dim=max(cfg.head_dim, 1), page_tokens=4, desc=desc)
+    kv = create_kv_engine(EngineSpec(engine="paged", kv_hbm_bytes=1 << 30),
+                          spec8, SimClock())
+    kv.init_pool(pages=2)
+    kv.alloc_prefill(0, 8)                  # 2 pages: fills the pool
+    kv.commit_prefill_planes(kv.pool_views(), 0, 8)
+    kv.alloc_prefill(1, 4)                  # forces an LRU page spill
+    spills = kv.stats["pool_page_spills"]
+    assert spills >= 1
+    for p in desc.paged_planes:
+        assert (kv.stats[f"pool_d2h_bytes_{p.name}"]
+                == spills * desc.plane_page_bytes(p)), p.name
+    assert kv.stats["pool_d2h_bytes"] == spills * desc.page_group_bytes
+    # scale planes really ride next to int8 pages: half-ish the fp16 bytes
+    assert desc.token_group_bytes < 0.55 * (
+        cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim * 2)
 
 
 def test_pooled_can_admit_tokens_counts_free_pages():
