@@ -53,6 +53,16 @@ under ``tiering`` in BENCH_serve.json. ``--tiering-gate`` (CI) exits
 nonzero unless async beats sync on *simulated* throughput (deterministic,
 like every hard gate here) with ``prefetch_hits > 0`` and
 ``stall_ticks_saved > 0``.
+
+``--faults`` runs the fault-tolerance benchmark (ISSUE 10): a seeded
+chaos run — transfer attempts failed/delayed at ``--fault-rate`` (~1e-2)
+over a deliberately tight pool — plus the model-backed crash-at-tick-k
+recovery sweep through the NVMM token journal. Recorded under ``faults``
+in BENCH_serve.json. ``--fault-gate`` (CI) exits nonzero unless the chaos
+run is byte-identical to the fault-free run with the exact conservation
+law ``prefetch_hits + pool_faults + retried_faults == fault-free
+pool_faults`` and nonzero injected/retried faults, and every
+crash-at-tick-k recovery is token-identical to the uninterrupted run.
 """
 from __future__ import annotations
 
@@ -550,6 +560,158 @@ def bench_families(*, smoke=False, seed=0, families="all") -> list:
     return rows
 
 
+def bench_faults(*, smoke=False, arch="internlm2-1.8b-smoke", seed=0,
+                 fault_rate=1e-2) -> dict:
+    """Fault-tolerance benchmark (ISSUE 10's acceptance measurement), in
+    two legs.
+
+    **Chaos leg** (engine level, where transfer faults are real): a fixed
+    append/read schedule over a deliberately tight page pool, synchronous
+    fault-free vs async under a seeded FaultPlan failing/delaying ~1% of
+    transfer attempts. The schedule is clock-free, so placement is
+    identical and the conservation law is exact: every read must come back
+    byte-identical, ``prefetch_hits + pool_faults + retried_faults`` must
+    equal the fault-free run's ``pool_faults``, and the injected failures
+    must show up as nonzero ``transfer_retries``.
+
+    **Recovery leg** (model-backed): the real ServingEngine on a tight
+    pool with speculation on, journaling every tick, crashed at each tick
+    k of a sweep with the same chaos rates underneath — then a FRESH
+    engine sharing the journal recovers. Every recovered stream must be
+    token-identical to the uninterrupted fault-free run; the sweep also
+    records the durable-token count at the crash and the recovery's
+    simulated time."""
+    from repro.serving.faults import CrashFault, FaultInjector, FaultPlan
+    from repro.serving.journal import ServingJournal
+
+    # ---- chaos leg: deterministic KV drive, tight pool ------------------
+    kvspec = KVSpec(num_layers=2, kv_heads=2, head_dim=8, page_tokens=4)
+    pool_pages, n_seqs, steps = 6, 3, 40 if smoke else 120
+
+    def kv_chaos(async_tiering: bool, plan) -> tuple:
+        clock = SimClock()
+        kv = create_kv_engine(
+            EngineSpec(engine="paged", kv_hbm_bytes=1 << 30,
+                       async_tiering=async_tiering), kvspec, clock)
+        kv.init_pool(pages=pool_pages)
+        if plan is not None:
+            kv.set_fault_injector(FaultInjector(plan))
+        rng = np.random.default_rng(seed)
+        reads = []
+        active = list(range(n_seqs))       # serving-like row slots
+        seq_len = dict.fromkeys(active, 0)
+        next_seq = n_seqs
+        for step in range(steps):
+            slot = step % n_seqs
+            seq = active[slot]
+            n = int(rng.integers(2, 6))
+            if seq_len[seq] + n > 20:      # row finished: release, readmit
+                kv.release(seq)
+                seq = active[slot] = next_seq
+                seq_len[seq] = 0
+                next_seq += 1
+            toks = rng.standard_normal(
+                (kvspec.num_layers, 2, n, kvspec.kv_heads,
+                 kvspec.head_dim)).astype(np.float32)
+            kv.append(seq, toks)
+            seq_len[seq] += n
+            if async_tiering:
+                kv.prefetch(sorted(kv.block_table))
+            if step % 3 == 2:      # periodic gather faults spilled pages
+                reads.append(np.asarray(
+                    kv.read(seq, step % kvspec.num_layers)))
+        kv.flush_transfers()
+        return reads, dict(kv.stats), clock.now
+
+    plan = FaultPlan(seed=seed, transfer_fail_rate=fault_rate,
+                     transfer_delay_rate=fault_rate)
+    ref_reads, s, t_sync = kv_chaos(False, None)
+    chaos_reads, a, t_chaos = kv_chaos(True, plan)
+    chaos = {
+        "fault_rate": fault_rate,
+        "reads_identical": all(np.array_equal(x, y) for x, y
+                               in zip(ref_reads, chaos_reads)),
+        "conservation": (a["prefetch_hits"] + a["pool_faults"]
+                         + a["retried_faults"] == s["pool_faults"]),
+        "sync_pool_faults": s["pool_faults"],
+        "sim_time_s": t_chaos, "sync_sim_time_s": t_sync,
+    }
+    for key in ("transfer_failures", "transfer_retries", "retried_faults",
+                "prefetch_hits", "pool_faults", "tiering_degraded"):
+        chaos[key] = a[key]
+
+    # ---- recovery leg: model-backed crash-at-tick-k sweep ---------------
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import Request, ServeConfig, ServingEngine
+
+    cfg = get_config(arch)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    n_req = 3 if smoke else 4
+    prompt_lens = [int(x) for x in rng.choice((12, 20), n_req)]
+    max_new = 12 if smoke else 24
+    max_len = max(prompt_lens) + max_new + 1
+    max_len += -max_len % 8
+    page_tokens = 8
+    mcfg = model.cfg
+    group_bytes = (mcfg.num_layers * 2 * page_tokens
+                   * max(mcfg.num_kv_heads, 1) * max(mcfg.head_dim, 1)
+                   * np.dtype(model.compute_dtype).itemsize)
+    tight = (-(-max_len // page_tokens) + 3) * group_bytes
+    prompts = [rng.integers(0, cfg.vocab_size, n, dtype=np.int32)
+               for n in prompt_lens]
+
+    def mk_engine(journal=None, fault_plan=None):
+        return ServingEngine(model, params, ServeConfig(
+            max_len=max_len, page_tokens=page_tokens,
+            engine_spec=EngineSpec(engine="paged", kv_hbm_bytes=tight,
+                                   async_tiering=True),
+            max_batch_seqs=4, speculate_k=2,
+            journal=journal, fault_plan=fault_plan))
+
+    def reqs():
+        return [Request(rid=i, prompt=prompts[i].copy(), max_new=max_new)
+                for i in range(n_req)]
+
+    ref = reqs()
+    mk_engine().generate(ref)
+    want = [list(r.generated) for r in ref]
+
+    sweep = []
+    for crash_tick in ((2, 5) if smoke else (1, 3, 6, 10)):
+        journal = ServingJournal()
+        cplan = FaultPlan(seed=seed, transfer_fail_rate=fault_rate,
+                          transfer_delay_rate=fault_rate,
+                          crash_at_tick=crash_tick)
+        eng, rs = mk_engine(journal, cplan), reqs()
+        try:
+            eng.generate(rs)
+            crashed = False
+        except CrashFault:
+            crashed = True
+        state, last_tick = journal.replay()
+        durable = sum(len(t) for t in state.values())
+        rec = mk_engine(journal)
+        rec.recover(rs)
+        sweep.append({
+            "crash_tick": crash_tick, "crashed": crashed,
+            "durable_tokens_at_crash": durable,
+            "journal_tick_at_crash": last_tick,
+            "token_identical": [list(r.generated) for r in rs] == want,
+            "recovery_sim_time_s": rec.stats()["sim_time_s"],
+            "degraded_ticks": eng.sched_stats.get(
+                "sched_degraded_ticks", 0),
+        })
+    return {"chaos": chaos, "crash_sweep": sweep,
+            "config": {"arch": arch, "fault_rate": fault_rate,
+                       "chaos_steps": steps, "chaos_pool_pages": pool_pages,
+                       "requests": n_req, "prompt_lens": prompt_lens,
+                       "max_new": max_new, "smoke": smoke}}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--tokens", type=int, default=512)
@@ -610,6 +772,21 @@ def main(argv=None):
                          "with prefetch_hits > 0 and stall_ticks_saved > "
                          "0, stays token-identical, and satisfies the "
                          "fault-conservation invariant")
+    ap.add_argument("--faults", action="store_true",
+                    help="run the fault-tolerance benchmark: a seeded "
+                         "chaos run (failed/delayed transfers at ~1e-2 "
+                         "per attempt) on a tight pool plus the "
+                         "model-backed crash-at-tick-k recovery sweep "
+                         "through the NVMM token journal")
+    ap.add_argument("--fault-rate", type=float, default=1e-2,
+                    help="per-attempt transfer fail AND delay probability "
+                         "for the chaos leg")
+    ap.add_argument("--fault-gate", action="store_true",
+                    help="CI: exit nonzero unless the chaos run stays "
+                         "byte-identical with exact fault conservation and "
+                         "nonzero injected retries, and every "
+                         "crash-at-tick-k recovery is token-identical to "
+                         "the uninterrupted run")
     ap.add_argument("--out", default="artifacts/kvcache_bench.json")
     ap.add_argument("--serve-out", default="BENCH_serve.json",
                     help="repo-root serving perf record (written whenever "
@@ -636,6 +813,9 @@ def main(argv=None):
     fam_rows = None
     if args.families:
         fam_rows = bench_families(smoke=args.smoke, families=args.families)
+    faults = None
+    if args.faults:
+        faults = bench_faults(smoke=args.smoke, fault_rate=args.fault_rate)
     print("design,workload,sim_time_s,write_amp,host_read_MB,"
           "tput_tok_s,p50_ms,p99_ms,preempts,pool_hit,d2h_saved_MB")
     for r in rows:
@@ -692,13 +872,24 @@ def main(argv=None):
               f"{ta['stall_ticks_saved']} stalls saved, "
               f"token-identical={tm['token_identical']}, "
               f"fault-conservation={tm['fault_conservation']}")
+    if faults is not None:
+        fc, sw = faults["chaos"], faults["crash_sweep"]
+        n_ok = sum(1 for e in sw if e["token_identical"])
+        print(f"faults: chaos rate={fc['fault_rate']:g} injected "
+              f"{fc['transfer_failures']} failures / "
+              f"{fc['transfer_retries']} retries, "
+              f"reads-identical={fc['reads_identical']}, "
+              f"conservation={fc['conservation']}; crash sweep "
+              f"{n_ok}/{len(sw)} recoveries token-identical "
+              f"(crashed at ticks "
+              f"{[e['crash_tick'] for e in sw if e['crashed']]})")
     # write the artifacts BEFORE the gates so a failing CI run still leaves
     # the evidence of what regressed
     out = Path(args.out)
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(rows, indent=1))
     if (serve_rows or spec is not None or tiering is not None
-            or fam_rows is not None):
+            or fam_rows is not None or faults is not None):
         # merge into the existing record so separate CI steps (the
         # serve/prefill_heavy smoke, the shared_prefix smoke, the
         # speculative smoke) compose instead of clobbering each other:
@@ -728,7 +919,9 @@ def main(argv=None):
              "speculative": (prior.get("speculative")
                              if spec is None else spec),
              "tiering": (prior.get("tiering")
-                         if tiering is None else tiering)},
+                         if tiering is None else tiering),
+             "faults": (prior.get("faults")
+                        if faults is None else faults)},
             indent=1, sort_keys=True))
     if any(r["workload"] in serve_workloads() and not r["preempts"]
            for r in rows):
@@ -864,6 +1057,43 @@ def main(argv=None):
                 f"{ta['prefetch_hits']}, stall_ticks_saved="
                 f"{ta['stall_ticks_saved']} — transfers are not actually "
                 f"overlapping the forward")
+    if args.fault_gate:
+        if faults is None:
+            raise SystemExit("--fault-gate needs --faults")
+        fc = faults["chaos"]
+        # correctness first, same order as the other gates: faults are
+        # only survivable because retry/degradation is exact
+        if not fc["reads_identical"]:
+            raise SystemExit(
+                "chaos run returned DIFFERENT bytes than the fault-free "
+                "run — transfer faults are no longer timing-only")
+        if not fc["conservation"]:
+            raise SystemExit(
+                f"fault conservation broken under chaos: prefetch_hits "
+                f"({fc['prefetch_hits']}) + pool_faults "
+                f"({fc['pool_faults']}) + retried_faults "
+                f"({fc['retried_faults']}) != fault-free pool_faults "
+                f"({fc['sync_pool_faults']})")
+        # the gate is vacuous unless faults actually fired and were
+        # retried — a silent injector must fail CI, not pass it
+        if not fc["transfer_failures"] or not fc["transfer_retries"]:
+            raise SystemExit(
+                f"chaos leg injected no retried faults "
+                f"(failures={fc['transfer_failures']}, "
+                f"retries={fc['transfer_retries']}) — the injector or the "
+                f"retry path is dead")
+        for e in faults["crash_sweep"]:
+            if not e["token_identical"]:
+                raise SystemExit(
+                    f"recovery after crash at tick {e['crash_tick']} "
+                    f"produced DIFFERENT tokens than the uninterrupted "
+                    f"run — the journal/recovery path lost or reordered "
+                    f"committed tokens")
+        if not any(e["crashed"] for e in faults["crash_sweep"]):
+            raise SystemExit(
+                "crash sweep never actually crashed — every crash tick "
+                "fell past the run's end, the recovery path went "
+                "unexercised")
     return rows
 
 

@@ -76,9 +76,63 @@ def family_sweep():
     print()
 
 
+def crash_and_recover():
+    """Fault tolerance (ISSUE 10): crash the scheduler mid-run with chaos
+    transfer faults underneath, then recover a FRESH engine from the shared
+    NVMM token journal — the spliced stream is token-identical to the
+    uninterrupted reference."""
+    from repro.serving.faults import CrashFault, FaultPlan
+    from repro.serving.journal import ServingJournal
+    print("crash-and-recover through the NVMM token journal")
+    cfg = get_config("internlm2-1.8b-smoke")
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, 12, dtype=np.int32)
+               for _ in range(3)]
+
+    def reqs():
+        return [Request(rid=i, prompt=p.copy(), max_new=12)
+                for i, p in enumerate(prompts)]
+
+    def engine(journal, plan):
+        return ServingEngine(model, params, ServeConfig(
+            max_len=32, page_tokens=8,
+            engine_spec=EngineSpec(engine="paged", kv_hot_window=16,
+                                   drain_shards=2, kv_hbm_bytes=64 << 20,
+                                   async_tiering=True),
+            max_batch_seqs=2, journal=journal, fault_plan=plan))
+
+    ref = reqs()
+    engine(None, None).generate_sequential(ref)
+    reference = [r.generated for r in ref]
+
+    journal = ServingJournal()
+    plan = FaultPlan(seed=7, transfer_fail_rate=0.2,
+                     transfer_delay_rate=0.2, crash_at_tick=6)
+    crashed, rs = engine(journal, plan), reqs()
+    try:
+        crashed.generate(rs)
+        raise AssertionError("the injected crash must fire")
+    except CrashFault as e:
+        state, last_tick = journal.replay()
+        durable = sum(len(t) for t in state.values())
+        print(f"  {e} — journal holds {durable} committed tokens "
+              f"across {len(state)} rows through tick {last_tick}")
+    recovered = engine(journal, None)
+    recovered.recover(rs)
+    assert [r.generated for r in rs] == reference, \
+        "recovery must splice to the exact reference stream"
+    print(f"  recovered engine finished all rows; tokens identical to the "
+          f"uninterrupted reference "
+          f"(journal_appends={recovered.stats()['journal_appends']})")
+    print()
+
+
 def main():
     print_matrix()
     family_sweep()
+    crash_and_recover()
     cfg = get_config("internlm2-1.8b-smoke")
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.PRNGKey(0))

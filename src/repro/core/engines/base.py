@@ -55,6 +55,11 @@ class EngineSpec:
     # transfer pipeline (double-buffered D2H/H2D drain queues) instead of
     # stalling the foreground; False keeps every transfer synchronous
     async_tiering: bool = False
+    # fault tolerance (ISSUE 10): retry budget and base backoff for failed
+    # async transfer submissions; past the budget the pipeline escalates to
+    # synchronous tiering (degradation ladder in engines/README.md)
+    transfer_max_retries: int = 3
+    transfer_backoff_s: float = 1e-4
 
 
 class CacheEngine(abc.ABC):

@@ -183,6 +183,27 @@ class KVCacheEngine(abc.ABC):
         reading ``sim_time_s`` so async runs pay for their outstanding
         background traffic; a no-op on engines without a pipeline."""
 
+    # ------------------------------------------------- faults & recovery
+    # ISSUE 10: hooks the serving fault layer uses. Engines without an
+    # async pipeline (log, kvhybrid — no tier transfers to fail) keep the
+    # no-op defaults; pooled engines forward them to their TransferPipeline.
+
+    def set_fault_injector(self, injector) -> None:
+        """Attach a :class:`~repro.serving.faults.FaultInjector` so tier
+        transfers (and spilled-host-page reads) can fail deterministically.
+        No-op on engines without a transfer pipeline."""
+
+    def abort_step(self, seqs: Sequence[int]) -> None:
+        """Roll back an in-flight prepared step for ``seqs`` (exception
+        between ``prepare_step`` and ``commit_step``): unpin the batch and
+        drop any pages allocated beyond each row's committed length, so a
+        poisoned tick cannot leak pool pages. No-op on unpooled engines."""
+
+    def stall_transfers(self, direction: int, seconds: float) -> None:
+        """Inject a drainer-shard stall on one transfer channel (0 = D2H,
+        1 = H2D): the channel serves nothing for ``seconds``. Timing-only;
+        no-op on engines without a pipeline."""
+
     # ----------------------------------------------- device-resident KV pool
     # The mirror-free serving path (ISSUE 4): an engine that supports
     # pooling owns (L, P, T, K, D) device arrays of KV pages; the serving

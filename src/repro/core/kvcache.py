@@ -107,7 +107,13 @@ class _TieredKV(KVCacheEngine):
                             # async-tiering counters (ISSUE 8) — zero on
                             # engines without a transfer pipeline, same rule
                             "async_spills": 0, "prefetch_hits": 0,
-                            "stall_ticks_saved": 0}
+                            "stall_ticks_saved": 0,
+                            # fault-tolerance counters (ISSUE 10) — zero on
+                            # engines without a pipeline or when no injector
+                            # is attached, so the key set stays uniform
+                            "transfer_retries": 0, "transfer_failures": 0,
+                            "retried_faults": 0, "host_pages_lost": 0,
+                            "shard_stalls": 0, "tiering_degraded": 0}
         # per-plane pool traffic (ISSUE 9) — one counter pair per plane in
         # the descriptor universe, zero on engines without a pool, so the
         # stats key set stays identical across every registered engine.
@@ -221,7 +227,9 @@ class PagedKVCache(_TieredKV):
     """
 
     def __init__(self, spec: KVSpec, clock: SimClock, *,
-                 hbm_budget_bytes: int, async_tiering: bool = False):
+                 hbm_budget_bytes: int, async_tiering: bool = False,
+                 transfer_max_retries: int = 3,
+                 transfer_backoff_s: float = 1e-4):
         super().__init__(spec, clock)
         self.pool: dict[tuple, np.ndarray] = {}      # (layer, phys) → page
         self.block_table: dict[int, list[int]] = {}  # seq → [phys per logical]
@@ -233,6 +241,9 @@ class PagedKVCache(_TieredKV):
         self._share_index = None       # prefix index (set_share_index)
         self.async_tiering = bool(async_tiering)
         self._pipeline = None          # TransferPipeline once pooled + async
+        self._injector = None          # FaultInjector (set_fault_injector)
+        self._xfer_retries = transfer_max_retries
+        self._xfer_backoff = transfer_backoff_s
         self.stats.update({"hbm_hits": 0, "hbm_misses": 0, "dma_up_bytes": 0,
                            "host_writes": 0, "redo_bytes": 0})
 
@@ -240,7 +251,9 @@ class PagedKVCache(_TieredKV):
     def from_spec(cls, spec: EngineSpec, kvspec: KVSpec,
                   clock: SimClock) -> "PagedKVCache":
         return cls(kvspec, clock, hbm_budget_bytes=spec.kv_hbm_bytes,
-                   async_tiering=spec.async_tiering)
+                   async_tiering=spec.async_tiering,
+                   transfer_max_retries=spec.transfer_max_retries,
+                   transfer_backoff_s=spec.transfer_backoff_s)
 
     # ------------------------------------------------------ device page pool
     def supports_pool(self) -> bool:
@@ -309,7 +322,10 @@ class PagedKVCache(_TieredKV):
         # _cow_page's batching import).
         from repro.serving.tiering import PageHeat, TransferPipeline
         if self.async_tiering:
-            self._pipeline = TransferPipeline(self.clock)
+            self._pipeline = TransferPipeline(
+                self.clock, stats=self.stats, injector=self._injector,
+                max_retries=self._xfer_retries,
+                backoff_s=self._xfer_backoff)
         self._heat = PageHeat()
         self._alloc_seq = 0            # allocation counter (logical time)
         self._fault_mark: dict[int, int] = {}   # phys → _alloc_seq at fault
@@ -409,12 +425,14 @@ class PagedKVCache(_TieredKV):
         self.block_table[seq][logical] = -1
         self.page_users.pop(phys)
         self.pool_lru.remove(phys)
-        if self._pipeline is not None:
+        if self._pipeline is not None and not self._pipeline.degraded:
             self._pipeline.submit(self._pipeline.D2H, ("d2h", seq, logical),
                                   HOST_LINK, "write", nbytes)
             self.stats["async_spills"] += 1
             self.stats["stall_ticks_saved"] += 1   # sync stalls right here
         else:
+            # no pipeline, or terminal transfer faults flipped it to
+            # degraded: synchronous tiering on the foreground clock
             self.clock.charge(HOST_LINK, "write", nbytes,
                               random_access=True)          # D2H page out
         self.stats["pool_page_spills"] += 1
@@ -456,23 +474,46 @@ class PagedKVCache(_TieredKV):
 
     def _fault_page(self, seq: int, logical: int, pinned: set) -> None:
         import jax.numpy as jnp
+        if self._injector is not None \
+                and self._injector.page_lost(seq, logical):
+            # the spilled host copy is gone (ISSUE 10): surface the loss
+            # BEFORE any allocation side effect so there is nothing to
+            # unwind — the scheduler sheds this row back to waiting and
+            # re-prefills it (degradation, never token divergence)
+            from repro.serving.faults import LostPageError
+            if self._pipeline is not None:
+                self._pipeline.cancel(("d2h", seq, logical), reclaim=True)
+                self._pipeline.cancel(("h2d", seq, logical), reclaim=True)
+            self.host_pages.pop((seq, logical), None)
+            self.stats["host_pages_lost"] += 1
+            raise LostPageError(seq, logical)
         phys = self._alloc_page(pinned)
         prefetched = False
-        if self._pipeline is not None:
+        retried = False
+        pipe = self._pipeline
+        use_async = pipe is not None and not pipe.degraded
+        if pipe is not None:
             # coherence: the H2D reads the host staging copy, so it chains
             # after the page's own D2H finish when that is still in flight
             d2h_key = ("d2h", seq, logical)
-            after = self._pipeline.finish_of(d2h_key) or 0.0
-            self._pipeline.cancel(d2h_key)
+            after = pipe.finish_of(d2h_key) or 0.0
             h2d_key = ("h2d", seq, logical)
-            prefetched = self._pipeline.finish_of(h2d_key) is not None
-            if not prefetched:
-                self._pipeline.submit(self._pipeline.H2D, h2d_key, HOST_LINK,
-                                      "read", self._group_bytes, after=after)
-            # drain barrier before the kernel may read this page — the one
-            # foreground wait; a prefetched page usually finished already
-            if self._pipeline.barrier(h2d_key) == 0.0:
-                self.stats["stall_ticks_saved"] += 1
+            prefetched = pipe.finish_of(h2d_key) is not None
+            if use_async:
+                pipe.cancel(d2h_key)      # the h2d chains after= instead
+                if not prefetched:
+                    pipe.submit(pipe.H2D, h2d_key, HOST_LINK,
+                                "read", self._group_bytes, after=after)
+                # drain barrier before the kernel may read this page — the
+                # one foreground wait; a prefetched page usually finished
+                if pipe.barrier(h2d_key) == 0.0:
+                    self.stats["stall_ticks_saved"] += 1
+                retried = pipe.took_retries(h2d_key)
+            else:
+                # degraded: the foreground reads the staging copy directly,
+                # so it must wait out any straggler from before the flip
+                pipe.barrier(d2h_key)
+                pipe.barrier(h2d_key)
         page = self.host_pages.pop((seq, logical))   # plane → (L, T, *shape)
         nbytes = sum(a.nbytes for a in page.values())
         for name in self._plane_names:
@@ -483,13 +524,18 @@ class PagedKVCache(_TieredKV):
         self._heat.assign(phys)
         self._touch_page(phys)
         self._fault_mark[phys] = self._alloc_seq
-        if self._pipeline is None:
+        if pipe is None or (not use_async and not prefetched):
             self.clock.charge(HOST_LINK, "read", nbytes,
                               random_access=True)        # H2D fault-in
         if prefetched:
             # the scheduler's lookahead had this page's transfer in flight:
             # the demand fault becomes a (mostly) free pickup
             self.stats["prefetch_hits"] += 1
+        elif retried:
+            # demand fault whose H2D needed ≥1 retry: counted apart so the
+            # chaos conservation law stays exact —
+            # prefetch_hits + pool_faults + retried_faults == sync faults
+            self.stats["retried_faults"] += 1
         else:
             self.stats["pool_faults"] += 1
         self.stats["pool_h2d_bytes"] += nbytes
@@ -620,8 +666,12 @@ class PagedKVCache(_TieredKV):
                 logical = len(table)
                 self.host_pages.pop((seq, logical), None)
                 if self._pipeline is not None:
-                    self._pipeline.cancel(("d2h", seq, logical))
-                    self._pipeline.cancel(("h2d", seq, logical))
+                    # rolled-back pages' transfers never need to land:
+                    # reclaim their unserved channel reservations
+                    self._pipeline.cancel(("d2h", seq, logical),
+                                          reclaim=True)
+                    self._pipeline.cancel(("h2d", seq, logical),
+                                          reclaim=True)
                 continue
             users = self.page_users.get(phys, {})
             if phys in self.trie_refs or users.keys() - {seq}:
@@ -744,7 +794,8 @@ class PagedKVCache(_TieredKV):
         keeps allocation state bit-identical to a synchronous run, which is
         what makes ``prefetch_hits + pool_faults == sync pool_faults`` an
         exact invariant rather than an approximation."""
-        if not self._pooled or self._pipeline is None:
+        if not self._pooled or self._pipeline is None \
+                or self._pipeline.degraded:
             return 0
         n = 0
         for seq in seqs:
@@ -765,6 +816,33 @@ class PagedKVCache(_TieredKV):
     def flush_transfers(self) -> None:
         if self._pooled and self._pipeline is not None:
             self._pipeline.flush()
+
+    # ------------------------------------------------- faults & recovery
+    def set_fault_injector(self, injector) -> None:
+        """Attach the serving tier's deterministic injector (ISSUE 10).
+        Transfer fail/delay decisions live in the pipeline; the spilled
+        host-page loss check lives in ``_fault_page``. Placement never
+        consults the injector, so transfer faults stay timing-only."""
+        self._injector = injector
+        if self._pipeline is not None:
+            self._pipeline.injector = injector
+
+    def abort_step(self, seqs: Sequence[int]) -> None:
+        """Roll back a prepared-but-uncommitted step (exception between
+        ``prepare_step`` and ``commit_step``): ``seq_len`` never advanced,
+        so rewinding each row to its committed length returns exactly this
+        tick's fresh allocations to the free list — a poisoned tick leaks
+        no pool pages. Pages that faulted back in during prepare hold
+        committed KV and stay resident."""
+        if not self._pooled or self._state_only:
+            return
+        for seq in seqs:
+            if seq in self.block_table:
+                self._rewind_step_pages(seq)
+
+    def stall_transfers(self, direction: int, seconds: float) -> None:
+        if self._pooled and self._pipeline is not None:
+            self._pipeline.stall_channel(direction, seconds)
 
     # ------------------------------------------------------- prefix sharing
     def supports_sharing(self) -> bool:

@@ -100,6 +100,13 @@ and the pooled serving decode path):
   row writes inside it (copy-on-write), so the prefill/decode scatters
   (``mode="drop"``, masked to the row's own slots) still touch only pages
   the row exclusively owns past its covered prefix.
+* **Fault paths never touch this contract** (ISSUE 10) — transfer
+  retry/backoff, degraded synchronous tiering, lost-page row shedding, and
+  journal recovery (``repro.serving.faults`` / ``journal``) all resolve in
+  the engine/scheduler BEFORE a launch: by the time a kernel runs, every
+  table entry below ``lengths`` is resident and committed, exactly as in a
+  fault-free run. No fault state, retry flag, or journal record is ever
+  visible to (or handled by) a kernel.
 
 Each package has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper + XLA fallback) and ref.py (pure-jnp oracle). Kernels are validated

@@ -79,6 +79,21 @@ def main(argv=None):
                          "per decode row per fused tick, verified in the "
                          "same launch (0 = off; tokens are identical "
                          "either way)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for deterministic fault injection (the same "
+                         "seed replays the same faults)")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="per-attempt transfer fail AND delay probability "
+                         "(>0 turns on the injector; retries/degradation "
+                         "show up in the printed stats)")
+    ap.add_argument("--crash-at-tick", type=int, default=None,
+                    help="inject a CrashFault at this scheduler tick; with "
+                         "--journal the run then recovers from the journal "
+                         "and prints both halves")
+    ap.add_argument("--journal", action="store_true",
+                    help="append committed tokens to a crash-consistent "
+                         "NVMM journal every tick (required for recovery "
+                         "after --crash-at-tick)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -88,18 +103,36 @@ def main(argv=None):
     prompt_len = args.prompt_len + args.shared_prefix_tokens
     max_len = prompt_len + args.max_new + 1
     max_len += -max_len % args.page_tokens     # pool wants page alignment
-    engine = ServingEngine(model, params, ServeConfig(
-        max_len=max_len, page_tokens=args.page_tokens,
-        engine_spec=EngineSpec(engine=args.design,
-                               drain_shards=args.drain_shards,
-                               kv_hbm_bytes=args.hbm_budget_bytes,
-                               prefix_cache_tokens=args.prefix_cache_tokens),
-        max_batch_seqs=args.max_batch_seqs,
-        max_batch_tokens=args.max_batch_tokens,
-        paged_decode=args.paged_decode,
-        prefill_chunk_tokens=args.prefill_chunk_tokens,
-        fuse_ticks=args.fuse_ticks,
-        speculate_k=args.speculate_k))
+
+    journal = None
+    if args.journal:
+        from repro.serving.journal import ServingJournal
+        journal = ServingJournal()
+    fault_plan = None
+    if args.fault_rate > 0.0 or args.crash_at_tick is not None:
+        from repro.serving.faults import FaultPlan
+        fault_plan = FaultPlan(seed=args.fault_seed,
+                               transfer_fail_rate=args.fault_rate,
+                               transfer_delay_rate=args.fault_rate,
+                               crash_at_tick=args.crash_at_tick)
+
+    def mk_engine(plan):
+        return ServingEngine(model, params, ServeConfig(
+            max_len=max_len, page_tokens=args.page_tokens,
+            engine_spec=EngineSpec(
+                engine=args.design,
+                drain_shards=args.drain_shards,
+                kv_hbm_bytes=args.hbm_budget_bytes,
+                prefix_cache_tokens=args.prefix_cache_tokens),
+            max_batch_seqs=args.max_batch_seqs,
+            max_batch_tokens=args.max_batch_tokens,
+            paged_decode=args.paged_decode,
+            prefill_chunk_tokens=args.prefill_chunk_tokens,
+            fuse_ticks=args.fuse_ticks,
+            speculate_k=args.speculate_k,
+            journal=journal, fault_plan=plan))
+
+    engine = mk_engine(fault_plan)
 
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(0, cfg.vocab_size, args.shared_prefix_tokens,
@@ -114,7 +147,22 @@ def main(argv=None):
     if args.sequential:
         engine.generate_sequential(reqs)
     else:
-        engine.generate(reqs)
+        try:
+            engine.generate(reqs)
+        except Exception as e:
+            from repro.serving.faults import CrashFault
+            if not isinstance(e, CrashFault):
+                raise
+            print(f"CRASH: {e} "
+                  f"(journal stats: {engine.journal.stats if journal else None})")
+            if journal is None:
+                raise SystemExit(
+                    "crashed without --journal: nothing durable to recover")
+            # a fresh engine sharing the SAME journal resumes exactly where
+            # the last durable tick stopped
+            engine = mk_engine(None)
+            engine.recover(reqs)
+            print("RECOVERED: journal replayed, unfinished rows resumed")
     for r in reqs:
         print(f"req {r.rid}: generated {len(r.generated)} tokens "
               f"{r.generated[:8]}...")

@@ -114,6 +114,16 @@ class ServeConfig:
     # a small draft model from repro/configs; None → the self-drafting
     # NGramProposer
     draft_proposer: Optional[object] = None
+    # fault tolerance (ISSUE 10): a FaultPlan (serving/faults.py) turns on
+    # deterministic fault injection — failed/delayed transfers, lost host
+    # pages, drainer-shard stalls, a crash at a tick boundary. None = no
+    # injection (and zero fault counters).
+    fault_plan: Optional[object] = None
+    # crash-consistent token journal (serving/journal.py): every scheduler
+    # tick appends its committed tokens through the NVMM log tier; after a
+    # CrashFault a fresh engine sharing the SAME journal object calls
+    # recover() to rebuild and resume. None = no journal.
+    journal: Optional[object] = None
 
     def resolved_spec(self) -> EngineSpec:
         """One EngineSpec no matter which knobs the caller used.
@@ -174,6 +184,19 @@ class ServingEngine:
                       head_dim=head_dim, page_tokens=cfg.page_tokens,
                       desc=self.desc)
         self.tiered = create_kv_engine(cfg.resolved_spec(), spec, self.clock)
+        # deterministic fault injection + crash-consistent journal (I10).
+        # The injector attaches BEFORE init_pool so the transfer pipeline
+        # is constructed with it; the journal's WAL region survives a
+        # simulated crash (the object outlives the engine), only its clock
+        # is re-attached to this engine's fresh one.
+        self.injector = None
+        if cfg.fault_plan is not None:
+            from repro.serving.faults import FaultInjector
+            self.injector = FaultInjector(cfg.fault_plan)
+            self.tiered.set_fault_injector(self.injector)
+        self.journal = cfg.journal
+        if self.journal is not None:
+            self.journal.attach_clock(self.clock)
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cfg.max_len))
         self._decode = jax.jit(model.decode_step)
@@ -365,13 +388,17 @@ class ServingEngine:
             self.tiered.append(rid, toks)
 
     # ------------------------------------------------------------- generation
-    def prefill_one(self, req: Request, n: Optional[int] = None):
+    def prefill_one(self, req: Request, n: Optional[int] = None,
+                    tokens: Optional[np.ndarray] = None):
         """Prefill one request at batch=1 (the first ``n`` prompt tokens
         when chunked admission splits it) and land its KV in the tiered
         engine — mirrored as one batched append, or scattered into pool
-        pages on device on the mirror-free path. Returns (logits, cache
-        row) for the scheduler to admit."""
-        toks = req.prompt if n is None else req.prompt[:n]
+        pages on device on the mirror-free path. ``tokens`` overrides the
+        prompt for re-admission of a shed or crash-recovered row (its
+        prompt plus already-committed tokens). Returns (logits, cache row)
+        for the scheduler to admit."""
+        src = req.prompt if tokens is None else tokens
+        toks = src if n is None else src[:n]
         batch = {"tokens": jnp.asarray(toks[None, :])}
         self.jit_stats["prefill_calls"] += 1
         logits, cache = self._prefill(self.params, batch)
@@ -557,27 +584,39 @@ class ServingEngine:
                                           qlen_j, q_lens, spec, Bb, Qb)
         if self.pooled:
             names = [p.name for p in self.desc.paged_planes]
-            tbl, ctx = self.tiered.prepare_step(rids, q_lens, self.max_pages)
-            model_pos = np.concatenate([np.asarray(c["pos"])
-                                        for c in caches])
-            if not np.array_equal(ctx, model_pos):
-                raise RuntimeError(
-                    f"pool/table drift: engine lengths {ctx.tolist()} != "
-                    f"model positions {model_pos.tolist()}")
-            tbl_p = np.zeros((Bb, self.max_pages), np.int32)
-            tbl_p[:B] = tbl
-            ctx_p = np.zeros(Bb, np.int32)
-            ctx_p[:B] = ctx
-            cache = {"block_table": jnp.asarray(tbl_p)}
-            for n, v in zip(names, self.tiered.pool_views()):
-                cache["pool_" + n] = v
-            self._count_step("pool", Bb, Qb)
-            logits, out = self._step_paged_ragged(
-                self.params, cache, tok_j, jnp.asarray(ctx_p), qlen_j)
-            committed = self._verify_drafts(logits, tok_rows, q_lens, spec)
-            self.tiered.commit_step_planes(
-                tuple(out["pool_" + n] for n in names), rids, committed,
-                prepared=q_lens)
+            # fault containment (ISSUE 10 satellite): any exception between
+            # prepare_step and commit_step — a lost host page surfacing as
+            # LostPageError, a drift check, a kernel error — must rewind
+            # the pages prepare_step allocated for this tick, or a poisoned
+            # tick pins them forever (the pool leak the regression test in
+            # tests/test_tiering.py hunts)
+            try:
+                tbl, ctx = self.tiered.prepare_step(rids, q_lens,
+                                                    self.max_pages)
+                model_pos = np.concatenate([np.asarray(c["pos"])
+                                            for c in caches])
+                if not np.array_equal(ctx, model_pos):
+                    raise RuntimeError(
+                        f"pool/table drift: engine lengths {ctx.tolist()} "
+                        f"!= model positions {model_pos.tolist()}")
+                tbl_p = np.zeros((Bb, self.max_pages), np.int32)
+                tbl_p[:B] = tbl
+                ctx_p = np.zeros(Bb, np.int32)
+                ctx_p[:B] = ctx
+                cache = {"block_table": jnp.asarray(tbl_p)}
+                for n, v in zip(names, self.tiered.pool_views()):
+                    cache["pool_" + n] = v
+                self._count_step("pool", Bb, Qb)
+                logits, out = self._step_paged_ragged(
+                    self.params, cache, tok_j, jnp.asarray(ctx_p), qlen_j)
+                committed = self._verify_drafts(logits, tok_rows, q_lens,
+                                                spec)
+                self.tiered.commit_step_planes(
+                    tuple(out["pool_" + n] for n in names), rids, committed,
+                    prepared=q_lens)
+            except Exception:
+                self.tiered.abort_step(rids)
+                raise
             new_rows = [
                 {"pos": out["pos"][i:i + 1]} if committed[i] == q_lens[i]
                 else {"pos": jnp.asarray([int(ctx[i]) + committed[i]],
@@ -721,15 +760,52 @@ class ServingEngine:
             self.tiered.append(rid, kv)
         return logits, cache
 
+    def degraded(self) -> bool:
+        """True once persistent async transfer faults flipped the tiering
+        pipeline to its synchronous fallback (the degradation ladder's
+        second rung — see engines/README.md)."""
+        pipe = getattr(self.tiered, "_pipeline", None)
+        return bool(pipe is not None and pipe.degraded)
+
     def generate(self, requests: list[Request]) -> list[Request]:
         """Continuous-batching decode: all requests share one running batch,
         stepped together and preempted/restored under HBM pressure. Greedy
         outputs are token-identical to :meth:`generate_sequential`."""
         from repro.serving.scheduler import Scheduler
         sched = Scheduler(self, requests)
-        sched.run()
+        try:
+            sched.run()
+        finally:
+            # a CrashFault abandons the run mid-tick, but the scheduler
+            # counters gathered so far are still what the caller inspects
+            self.sched_stats = sched.stats.as_dict()
         self.tiered.flush_transfers()   # run-end drain: sim_time_s includes
-        self.sched_stats = sched.stats.as_dict()   # in-flight transfer tails
+        return requests                 # in-flight transfer tails
+
+    def recover(self, requests: list[Request]) -> list[Request]:
+        """Crash recovery (ISSUE 10): replay the journal this engine shares
+        with the crashed one, rebuild each request's committed stream, and
+        resume decoding the unfinished rows through the normal scheduler —
+        re-admission prefills ``prompt + committed`` so greedy decode
+        continues exactly where the last durable tick stopped. The result
+        is token-identical to an uninterrupted run (property-tested).
+        ``requests`` must be fresh Request objects carrying the original
+        prompts/rids; their ``generated`` fields are overwritten from the
+        journal."""
+        if self.journal is None:
+            raise RuntimeError(
+                "recover() needs the crashed run's journal: construct this "
+                "engine with ServeConfig(journal=<same ServingJournal>)")
+        state, _last_tick = self.journal.replay()
+        pending = []
+        for req in requests:
+            toks = state.get(req.rid, [])
+            req.generated = [int(t) for t in toks[:req.max_new]]
+            req.done = len(req.generated) >= req.max_new
+            if not req.done:
+                pending.append(req)
+        if pending:
+            self.generate(pending)
         return requests
 
     def generate_sequential(self, requests: list[Request]) -> list[Request]:
@@ -752,7 +828,8 @@ class ServingEngine:
         return requests
 
     def stats(self) -> dict:
+        journal = {} if self.journal is None else dict(self.journal.stats)
         return {"sim_time_s": self.clock.now,
                 "mirror_d2h_bytes": self.mirror_d2h_bytes,
                 **self.jit_stats, **self.spec_stats, **self.sched_stats,
-                **self.tiered.stats}
+                **journal, **self.tiered.stats}

@@ -76,6 +76,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serving import batching
+from repro.serving.faults import CrashFault, LostPageError
 
 if TYPE_CHECKING:                      # engine.py imports us for generate()
     from repro.serving.engine import Request, ServingEngine
@@ -130,6 +131,11 @@ class SchedulerStats:
                                        # commits 1 + accepted tokens, so
                                        # committed/decode_rows > 1 is the
                                        # accepted-tokens-per-launch win
+    rows_shed: int = 0                 # rows shed back to waiting after a
+                                       # lost spilled host page (ISSUE 10) —
+                                       # re-prefilled, never token-divergent
+    degraded_ticks: int = 0            # ticks run with the transfer pipeline
+                                       # in degraded (synchronous) mode
 
     def as_dict(self) -> dict:
         return {f"sched_{k}": v for k, v in self.__dict__.items()}
@@ -178,6 +184,17 @@ class Scheduler:
             return prompt_len
         return min(prompt_len, max(self.chunk_tokens, 1))
 
+    @staticmethod
+    def _full_prompt(req: "Request") -> np.ndarray:
+        """The token prefix admission must prefill: the prompt, plus any
+        already-committed tokens for a row that re-enters the waiting queue
+        (shed after a lost host page, or rebuilt by crash recovery)."""
+        if not req.generated:
+            return req.prompt
+        prompt = np.asarray(req.prompt)
+        return np.concatenate(
+            [prompt, np.asarray(req.generated, dtype=prompt.dtype)])
+
     def _admit(self) -> None:
         # preempted sequences re-admit ahead of new arrivals (starvation
         # guard: FIFO, and nothing can overtake them). A row mid-prefill
@@ -201,13 +218,20 @@ class Scheduler:
                 pending=pre.pending, stalled_ticks=pre.stalled_ticks))
             self.stats.restores += 1
         while self.waiting and self._has_room(
-                self._first_chunk(len(self.waiting[0].prompt)) + 1):
+                self._first_chunk(len(self._full_prompt(self.waiting[0])))
+                + 1):
             req = self.waiting.popleft()
+            # effective prompt: a shed or crash-recovered row re-prefills
+            # its prompt PLUS its already-committed tokens (ISSUE 10) —
+            # greedy decode then resumes exactly where the committed
+            # stream left off, so degradation never diverges tokens
+            full = self._full_prompt(req)
             # prefix-cache splice (ISSUE 6): a cached prefix admits as a
             # block-table alias — no prefill launch for the covered tokens;
             # the uncovered tail rides as the row's pending chunk tail and
             # its first chunk pass produces the row's first logits
-            spliced = self.engine.admit_prefix(req)
+            spliced = (self.engine.admit_prefix(req)
+                       if not req.generated else None)
             if spliced is not None:
                 cache, covered = spliced
                 self.running.append(_Running(
@@ -217,15 +241,15 @@ class Scheduler:
                 self.stats.admitted += 1
                 self.stats.spliced += 1
                 continue
-            first = self._first_chunk(len(req.prompt))
-            logits, cache = self.engine.prefill_one(req, first)
-            pending = req.prompt[first:] if first < len(req.prompt) else None
+            first = self._first_chunk(len(full))
+            logits, cache = self.engine.prefill_one(req, first, tokens=full)
+            pending = full[first:] if first < len(full) else None
             self.running.append(_Running(
                 req=req, cache=cache, logits=logits, length=first,
                 mirrored="k" in cache or self.engine.pooled,
                 admitted_tick=self.stats.ticks, pending=pending))
             if pending is None:
-                self.engine.on_prompt_complete(req.rid, req.prompt)
+                self.engine.on_prompt_complete(req.rid, full)
             self.stats.admitted += 1
         self.stats.peak_running = max(self.stats.peak_running,
                                       len(self.running))
@@ -269,9 +293,17 @@ class Scheduler:
             tokens.append(nxt)
             self.stats.decode_rows += 1
         # one batch = one model family, so either every row mirrors or none
-        logits, caches = self.engine.decode_batch(
-            [r.req.rid for r in rows], [r.cache for r in rows], tokens,
-            rows[0].mirrored)
+        try:
+            logits, caches = self.engine.decode_batch(
+                [r.req.rid for r in rows], [r.cache for r in rows], tokens,
+                rows[0].mirrored)
+        except Exception:
+            # the argmaxed tokens were appended BEFORE the model step: a
+            # failed step (poisoned tick, lost host page) must pop them or
+            # the retried tick would double-append and diverge
+            for r in rows:
+                r.req.generated.pop()
+            raise
         for i, r in enumerate(rows):
             r.cache = caches[i]
             r.logits = logits[i:i + 1]
@@ -334,13 +366,14 @@ class Scheduler:
                      else 1 + len(plan[r.req.rid][1])
                      for r in self.running]):
             self._preempt_one()
-        rows, toks, spec = [], [], []
+        rows, toks, spec, appended = [], [], [], []
         for r in self.running:
             if r.pending is not None:
                 m = self._chunk_len(r.pending)
                 rows.append(r)
                 toks.append(np.asarray(r.pending[:m], np.int32))
                 spec.append(0)
+                appended.append(0)
                 self.stats.prefill_chunks += 1
             else:
                 nxt, drafts = plan[r.req.rid]
@@ -348,10 +381,22 @@ class Scheduler:
                 rows.append(r)
                 toks.append(np.asarray([nxt] + drafts, np.int32))
                 spec.append(len(drafts))
+                appended.append(1)
                 self.stats.decode_rows += 1
-        logits, caches, committed = self.engine.step_batch(
-            [r.req.rid for r in rows], [r.cache for r in rows], toks,
-            rows[0].mirrored, spec_lens=spec)
+        try:
+            logits, caches, committed = self.engine.step_batch(
+                [r.req.rid for r in rows], [r.cache for r in rows], toks,
+                rows[0].mirrored, spec_lens=spec)
+        except Exception:
+            # decode rows appended their argmaxed token BEFORE the fused
+            # forward: a failed step (poisoned tick, lost host page) must
+            # pop them, or the row would double-append when it re-plans —
+            # the plan is pure (argmax of unchanged logits), so the retried
+            # tick replans the identical token
+            for r, a in zip(rows, appended):
+                if a:
+                    r.req.generated.pop()
+            raise
         self.stats.fused_ticks += 1
         for i, r in enumerate(rows):
             r.cache = caches[i]
@@ -449,30 +494,88 @@ class Scheduler:
                 len(self.running) > self.min_running:
             self._preempt_one()
 
+    # --------------------------------------------------- faults & shedding
+    def _shed_seq(self, seq: int) -> None:
+        """Graceful degradation for a lost spilled host page (ISSUE 10):
+        the row's pool state is suspect, so release ALL of it and send the
+        request back to the FRONT of the waiting queue — re-admission
+        re-prefills ``prompt + generated`` and greedy decode resumes
+        exactly where the committed stream stopped. Tokens never diverge;
+        the row only pays the re-prefill."""
+        row = next((r for r in self.running if r.req.rid == seq), None)
+        if row is None:
+            return
+        self.running.remove(row)
+        if row.mirrored:
+            self.engine.tiered.release(seq)
+        if self.engine.proposer is not None:
+            self.engine.proposer.drop(seq)
+        self.waiting.appendleft(row.req)
+        self.stats.rows_shed += 1
+
     # ------------------------------------------------------------------- run
     def tick(self) -> bool:
-        """One scheduling round: admit → step → retire finished → preempt
-        under pressure → progress check. On the fused path (the default for
-        ragged-capable models) the step is ONE mixed ragged forward over
-        decode rows and prefill-chunk rows together; the unfused fallback
-        (``fuse_ticks=False`` or a family without a ragged step) keeps the
-        chunk-at-batch-1 then batched-decode structure. Returns False when
-        all work is done."""
+        """One scheduling round: admit → step → journal → retire finished →
+        preempt under pressure → progress check → (maybe) crash. On the
+        fused path (the default for ragged-capable models) the step is ONE
+        mixed ragged forward over decode rows and prefill-chunk rows
+        together; the unfused fallback (``fuse_ticks=False`` or a family
+        without a ragged step) keeps the chunk-at-batch-1 then
+        batched-decode structure. Returns False when all work is done.
+
+        Fault hooks (ISSUE 10): scripted injector events fire at tick
+        start; a :class:`LostPageError` from the step sheds exactly the
+        losing row back to waiting (the step committed nothing — the
+        pre-appended argmax tokens were popped by the step wrappers); the
+        tick's committed tokens append to the journal BEFORE a scripted
+        crash fires, so every durable tick is replayable — a crash placed
+        before the append would simply lose that tick's tokens and
+        recovery would re-decode them identically."""
         self._admit()
         self._finish_done()    # max_new=0 rows retire without decoding
         if not self.running:
             return bool(self.waiting or self.preempted)
         self.stats.ticks += 1
+        inj = self.engine.injector
+        if inj is not None:
+            for ev in inj.begin_tick(self.stats.ticks):
+                if ev.kind == "shard_stall":
+                    self.engine.tiered.stall_transfers(
+                        int(ev.key or 0), float(ev.value or 1e-3))
+                elif ev.kind == "page_lost":
+                    inj.arm_page_loss(ev.key)
         lengths_before = {r.req.rid: r.length for r in self.running}
-        if self.engine.fused:
-            self._fused_step()
-        else:
-            self._prefill_chunks()
-            self._step()
+        gen_before = {r.req.rid: len(r.req.generated) for r in self.running}
+        shed = None
+        try:
+            if self.engine.fused:
+                self._fused_step()
+            else:
+                self._prefill_chunks()
+                self._step()
+        except LostPageError as e:
+            self._shed_seq(e.seq)
+            shed = e
+        if self.engine.journal is not None:
+            commits = [(r.req.rid, gen_before[r.req.rid],
+                        r.req.generated[gen_before[r.req.rid]:])
+                       for r in self.running
+                       if r.req.rid in gen_before
+                       and len(r.req.generated) > gen_before[r.req.rid]]
+            if commits:
+                self.engine.journal.append_tick(self.stats.ticks, commits)
+        if self.engine.degraded():
+            self.stats.degraded_ticks += 1
         self._finish_done()
         self._preempt_under_pressure()
-        self._check_progress(lengths_before)
+        if shed is None:
+            # a shed tick made no progress by design (the injected loss
+            # aborted the whole step) — that is degradation, not the
+            # starvation class the progress guard hunts
+            self._check_progress(lengths_before)
         self._publish_plan()
+        if inj is not None and inj.crash_now(self.stats.ticks):
+            raise CrashFault(self.stats.ticks)
         return bool(self.waiting or self.running or self.preempted)
 
     def _publish_plan(self) -> None:

@@ -50,10 +50,29 @@ class TransferPipeline:
     D2H = 0
     H2D = 1
 
-    def __init__(self, clock: SimClock):
+    BACKOFF_CAP = 6           # exponential backoff multiplier capped at 2^6
+
+    def __init__(self, clock: SimClock, stats: Optional[dict] = None,
+                 injector=None, max_retries: int = 3,
+                 backoff_s: float = 1e-4):
         self.clock = clock
         self.drainer = ShardedDrainer(2)          # shard 0: D2H, shard 1: H2D
+        self.stats = stats                        # engine's uniform stats dict
+        self.injector = injector                  # FaultInjector or None
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.degraded = False     # terminal failure flipped us to sync tiering
         self._inflight: dict[Hashable, float] = {}   # key → finish time
+        # key → (direction, ledger token): which channel holds the live
+        # reservation; tokens are unique per submit so a resubmitted key
+        # never aliases a stale ledger entry
+        self._chan: dict[Hashable, tuple] = {}
+        self._epoch: dict[Hashable, int] = {}     # key → submit count
+        self._retried: set = set()  # keys whose last submit needed a retry
+
+    def _count(self, name: str, delta: int = 1) -> None:
+        if self.stats is not None:
+            self.stats[name] = self.stats.get(name, 0) + delta
 
     def submit(self, direction: int, key: Hashable, tier: TierSpec, op: str,
                nbytes: int, *, random_access: bool = True,
@@ -62,16 +81,74 @@ class TransferPipeline:
 
         Tallies the bytes on the clock WITHOUT advancing it (the transfer
         runs beside the foreground); the channel serves it FIFO starting at
-        ``max(now, after, channel backlog)``."""
+        ``max(now, after, channel backlog)``.
+
+        With a fault injector attached, a submission attempt may fail: the
+        failed attempt still occupied the channel (history, never refunded),
+        and the retry re-enters the FIFO after a capped exponential backoff
+        — all charged to the analytic clock, none of it stalling the
+        foreground. Past ``max_retries`` the pipeline escalates: it waits
+        out the last failed attempt, performs the copy synchronously on the
+        foreground clock (the model's always-succeeds slow path), and flips
+        ``degraded`` so the engine falls back to synchronous tiering.
+        Placement never consults the injector, so faults are timing-only.
+        """
         cost = self.clock.charge(tier, op, nbytes,
                                  random_access=random_access, advance=False)
         arrival = max(self.clock.now, after)
-        self._inflight[key] = self.drainer.push(direction, arrival, cost)
+        inj = self.injector
+        epoch = self._epoch[key] = self._epoch.get(key, 0) + 1
+        self._retried.discard(key)
+        if inj is not None:
+            cost += inj.transfer_delay((key, epoch))
+            attempt = 0
+            while inj.transfer_fails((key, epoch), attempt):
+                # the failed attempt occupied the link: untracked push
+                # (history — a later cancel must not reclaim it)
+                finish = self.drainer.push(direction, arrival, cost)
+                self._count("transfer_failures")
+                if attempt >= self.max_retries:
+                    # terminal: drain the channel, copy synchronously
+                    self.clock.wait_until(finish)
+                    self.clock.charge(tier, op, nbytes,
+                                      random_access=random_access)
+                    self.degraded = True
+                    if self.stats is not None:
+                        self.stats["tiering_degraded"] = 1
+                    self._inflight[key] = self.clock.now
+                    self._chan.pop(key, None)
+                    return self.clock.now
+                self._count("transfer_retries")
+                self._retried.add(key)
+                attempt += 1
+                backoff = self.backoff_s * (1 << min(attempt,
+                                                     self.BACKOFF_CAP))
+                arrival = finish + backoff
+        token = (key, epoch)
+        self._inflight[key] = self.drainer.push(direction, arrival, cost,
+                                                token=token)
+        self._chan[key] = (direction, token)
         return self._inflight[key]
 
     def finish_of(self, key: Hashable) -> Optional[float]:
         """Finish time of an in-flight transfer, or None."""
         return self._inflight.get(key)
+
+    def took_retries(self, key: Hashable) -> bool:
+        """True iff ``key``'s most recent submit needed ≥1 retry; clears
+        the flag (the caller classifies the fault once)."""
+        if key in self._retried:
+            self._retried.discard(key)
+            return True
+        return False
+
+    def _settle(self, key: Hashable, fallback: float) -> float:
+        d = self._chan.pop(key, None)
+        if d is None:
+            return fallback
+        direction, token = d
+        f = self.drainer.queues[direction].settle(token)
+        return fallback if f is None else f
 
     def barrier(self, key: Hashable) -> float:
         """Coherence barrier: wait until ``key``'s transfer has finished.
@@ -80,24 +157,46 @@ class TransferPipeline:
         finish = self._inflight.pop(key, None)
         if finish is None:
             return 0.0
+        # the ledger may have compacted this entry earlier after a cancel
+        finish = min(finish, self._settle(key, finish))
         stall = max(0.0, finish - self.clock.now)
         self.clock.wait_until(finish)
         return stall
 
-    def cancel(self, key: Hashable) -> bool:
-        """Drop the barrier obligation for ``key`` (rolled-back spill, freed
-        page). The channel time already reserved is not refunded — the link
-        was genuinely busy."""
-        return self._inflight.pop(key, None) is not None
+    def cancel(self, key: Hashable, reclaim: bool = False) -> bool:
+        """Drop the barrier obligation for ``key``. By default the channel
+        time already reserved is not refunded — the link was genuinely busy
+        (e.g. the staging D2H a chained fault-in read from). With
+        ``reclaim=True`` (released sequence, rolled-back speculative pages)
+        the unserved portion of the reservation is returned to the channel,
+        so backlog stops counting work that will never run."""
+        present = self._inflight.pop(key, None) is not None
+        d = self._chan.pop(key, None)
+        if d is not None:
+            direction, token = d
+            q = self.drainer.queues[direction]
+            if reclaim:
+                q.cancel(token, self.clock.now)
+            else:
+                q.settle(token)
+        return present
 
     def cancel_seq(self, seq: int) -> int:
         """Cancel every in-flight transfer of one sequence (released or
         preempted: its ``(dir, seq, logical)`` keys must not collide with a
-        later sequence reusing the id)."""
+        later sequence reusing the id). Unserved channel reservations are
+        reclaimed — a released row's queued transfers never run."""
         doomed = [k for k in self._inflight if k[1] == seq]
         for k in doomed:
-            del self._inflight[k]
+            self.cancel(k, reclaim=True)
         return len(doomed)
+
+    def stall_channel(self, direction: int, seconds: float) -> float:
+        """Inject a drainer-shard stall: the channel serves nothing for
+        ``seconds`` starting now (queued transfers finish later). Models a
+        stuck drainer shard; foreground is not stalled."""
+        self._count("shard_stalls")
+        return self.drainer.push(direction, self.clock.now, seconds)
 
     @property
     def pending(self) -> int:
@@ -113,8 +212,11 @@ class TransferPipeline:
         per-page barriers are the steady-state coherence mechanism."""
         if not self._inflight:
             return 0.0
-        finish = max(self._inflight.values())
+        finish = 0.0
+        for key, f in list(self._inflight.items()):
+            finish = max(finish, min(f, self._settle(key, f)))
         self._inflight.clear()
+        self._chan.clear()
         stall = max(0.0, finish - self.clock.now)
         self.clock.wait_until(finish)
         return stall

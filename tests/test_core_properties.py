@@ -504,6 +504,162 @@ def test_async_tiering_matches_sequential_for_any_schedule(
         assert faults[True][0] + faults[True][1] == faults[False][0], name
 
 
+# --------------------------------------------------------------------------
+# Fault tolerance (ISSUE 10): chaos is timing-only; crashes recover exactly
+# --------------------------------------------------------------------------
+
+@settings(max_examples=10)
+@given(ops=kv_ops_strategy, pool_pages=st.sampled_from([3, 4, 6]),
+       fail_rate=st.sampled_from([0.0, 0.4, 0.9]),
+       delay_rate=st.sampled_from([0.0, 0.6]),
+       seed=st.integers(0, 3))
+def test_chaos_transfer_faults_are_timing_only(ops, pool_pages, fail_rate,
+                                               delay_rate, seed):
+    """ISSUE 10 chaos law, at the engine level where transfer faults are
+    real: for ANY schedule and ANY seeded mix of failed/delayed transfers,
+    the faulty async engine returns byte-identical reads, makes identical
+    placement decisions, and the three-way fault split is exactly
+    conservative — ``prefetch_hits + pool_faults + retried_faults`` equals
+    the fault-free synchronous run's ``pool_faults``. A second run under
+    the same FaultPlan injects the identical fault sequence (replayable)."""
+    from repro.serving.faults import FaultInjector, FaultPlan
+    plan = FaultPlan(seed=seed, transfer_fail_rate=fail_rate,
+                     transfer_delay_rate=delay_rate)
+    spec = KVSpec(num_layers=2, kv_heads=2, head_dim=4, page_tokens=4,
+                  dtype=np.dtype(np.float32))
+    kvs = {}
+    for mode in ("sync", "chaos", "replay"):
+        kv = create_kv_engine(
+            EngineSpec(engine="paged", kv_hbm_bytes=1 << 30,
+                       async_tiering=mode != "sync"), spec, SimClock())
+        kv.init_pool(dtype=np.float32, pages=pool_pages)
+        if mode != "sync":
+            kv.set_fault_injector(FaultInjector(plan))
+        kvs[mode] = kv
+    rng = np.random.default_rng(seed)
+    preempted: set[int] = set()
+    for op, seq, arg in ops:
+        if op == "append" and seq not in preempted:
+            toks = rng.standard_normal(
+                (spec.num_layers, 2, arg, spec.kv_heads,
+                 spec.head_dim)).astype(np.float32)
+            if not all(kv.can_admit_tokens(arg) for kv in kvs.values()):
+                continue
+            for kv in kvs.values():
+                kv.append(seq, toks)
+            for mode in ("chaos", "replay"):
+                kvs[mode].prefetch(sorted(kvs[mode].block_table))
+        elif op == "read" and seq not in preempted:
+            if seq not in kvs["sync"].seq_len:
+                continue
+            layer = arg % spec.num_layers
+            want = kvs["sync"].read(seq, layer)
+            for mode in ("chaos", "replay"):
+                assert np.array_equal(want, kvs[mode].read(seq, layer)), \
+                    (mode, seq, layer)
+        elif op == "flip":
+            if seq in preempted:
+                preempted.discard(seq)
+                for kv in kvs.values():
+                    kv.restore(seq)
+            elif seq in kvs["sync"].seq_len:
+                preempted.add(seq)
+                for kv in kvs.values():
+                    kv.preempt(seq)
+    for kv in kvs.values():
+        kv.flush_transfers()
+    s, a = kvs["sync"].stats, kvs["chaos"].stats
+    assert kvs["chaos"].block_table == kvs["sync"].block_table
+    assert a["pool_page_spills"] == s["pool_page_spills"]
+    # exact conservation: every demand fault lands in exactly one bucket
+    assert (a["prefetch_hits"] + a["pool_faults"] + a["retried_faults"]
+            == s["pool_faults"])
+    # counter coherence with the injector's own tally
+    inj = kvs["chaos"]._injector
+    assert a["transfer_failures"] == inj.counts["transfer_fail"]
+    assert a["transfer_retries"] <= a["transfer_failures"]
+    assert a["retried_faults"] <= a["transfer_retries"]
+    if fail_rate == 0.0:
+        assert a["transfer_failures"] == a["transfer_retries"] == 0
+        assert a["retried_faults"] == a["tiering_degraded"] == 0
+    # determinism: the same plan over the same schedule injects the same
+    # faults and lands every counter in the same place
+    r = kvs["replay"].stats
+    assert r == a
+    assert kvs["replay"]._injector.counts == inj.counts
+
+
+@pytest.mark.slow
+@settings(max_examples=4)
+@given(
+    arrival_perm=st.permutations(range(3)),
+    max_new=st.integers(2, 5),
+    max_batch_seqs=st.integers(1, 3),
+    speculate_k=st.sampled_from([0, 2]),
+    crash_tick=st.integers(1, 6),
+    seed=st.integers(0, 3),
+)
+def test_crash_at_any_tick_recovers_token_identically(
+        arrival_perm, max_new, max_batch_seqs, speculate_k, crash_tick,
+        seed):
+    """ISSUE 10 recovery law: every pool-capable engine × random arrival
+    schedule × speculation depth × crash-at-ANY-tick — with transfer
+    fail/delay chaos running underneath — recovers through the shared NVMM
+    journal to a stream token-identical to the uninterrupted sequential
+    reference. Crash ticks past the run's end degenerate to a clean run
+    whose journal replays to the same (already complete) state."""
+    from repro.serving import Request, ServeConfig, ServingEngine
+    from repro.serving.faults import CrashFault, FaultPlan
+    from repro.serving.journal import ServingJournal
+    cfg, model, params = _serve_model()
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size, (6, 9, 7)[i], dtype=np.int32)
+               for i in range(3)]
+    group_bytes = (model.cfg.num_layers * 2 * 4 * model.cfg.num_kv_heads
+                   * model.cfg.head_dim
+                   * np.dtype(model.compute_dtype).itemsize)
+
+    def mk_engine(name, journal=None, fault_plan=None):
+        return ServingEngine(model, params, ServeConfig(
+            max_len=16, page_tokens=4,
+            engine_spec=EngineSpec(engine=name,
+                                   kv_hbm_bytes=6 * group_bytes,
+                                   kv_hot_window=4, drain_shards=2,
+                                   async_tiering=True),
+            max_batch_seqs=max_batch_seqs, speculate_k=speculate_k,
+            journal=journal, fault_plan=fault_plan))
+
+    ref = [Request(rid=i, prompt=p.copy(), max_new=max_new)
+           for i, p in enumerate(prompts)]
+    mk_engine("paged").generate_sequential(ref)
+    want = {r.rid: list(r.generated) for r in ref}
+
+    for name in _pool_capable_engines():
+        journal = ServingJournal(capacity=1 << 16)
+        plan = FaultPlan(seed=seed, transfer_fail_rate=0.3,
+                         transfer_delay_rate=0.3, crash_at_tick=crash_tick)
+        eng = mk_engine(name, journal=journal, fault_plan=plan)
+        reqs = [Request(rid=i, prompt=p.copy(), max_new=max_new)
+                for i, p in enumerate(prompts)]
+        try:
+            eng.generate([reqs[i] for i in arrival_perm])
+            crashed = False
+        except CrashFault:
+            crashed = True
+        if not crashed:   # crash tick past run end: clean finish first
+            for r in reqs:
+                assert r.done and r.generated == want[r.rid], (name, r.rid)
+        # a fresh engine sharing the SAME journal picks up where the last
+        # durable tick stopped — token-identical either way
+        reqs2 = [Request(rid=i, prompt=p.copy(), max_new=max_new)
+                 for i, p in enumerate(prompts)]
+        eng2 = mk_engine(name, journal=journal)
+        eng2.recover(reqs2)
+        for r in reqs2:
+            assert r.done and r.generated == want[r.rid], \
+                (name, crashed, r.rid)
+
+
 @settings(max_examples=15)
 @given(st.integers(2, 64))
 def test_monotone_capacity_no_data_loss(cache_pages):

@@ -1,0 +1,295 @@
+"""Fault-tolerant serving: the ISSUE 10 battery.
+
+Three suites pin the tentpole down at its three layers:
+
+* **injector units** — fault decisions are pure hashes of ``(seed, kind,
+  key, attempt)``: bit-replayable, order-independent, scripted events fire
+  at exactly their tick, armed page losses are one-shot, and the per-page
+  loss generation re-rolls the die after a shed (no lost-forever livelock);
+* **journal units** — the committed-token journal over the NVMM log tier:
+  round-trip replay, idempotent absolute-index overlay, snapshot
+  compaction on a full ring, torn-tail truncation losing exactly the last
+  tick, gap rejection, and the sequential-NVMM-write clock charge;
+* **serving integration** — a poisoned fused tick leaks no pool pages
+  (satellite regression), a scripted lost host page sheds exactly one row
+  and the stream stays token-identical, and a crash at a tick boundary
+  recovers through ``ServingEngine.recover`` to the same tokens an
+  uninterrupted run produces.
+"""
+import numpy as np
+import pytest
+
+from repro.core import SimClock
+from repro.serving.faults import (CrashFault, FaultEvent, FaultInjector,
+                                  FaultPlan, _u01)
+from repro.serving.journal import ServingJournal
+
+
+# ------------------------------------------------------------ injector units
+def test_injector_decisions_are_replayable_and_order_free():
+    plan = FaultPlan(seed=5, transfer_fail_rate=0.3, transfer_delay_rate=0.3)
+    probes = [(("d2h", s, l), att) for s in range(4) for l in range(4)
+              for att in range(3)]
+    a, b = FaultInjector(plan), FaultInjector(plan)
+    got = [(a.transfer_fails(k, att), a.transfer_delay(k))
+           for k, att in probes]
+    # same plan, same probes → bit-identical decisions and tallies
+    assert got == [(b.transfer_fails(k, att), b.transfer_delay(k))
+                   for k, att in probes]
+    assert a.counts == b.counts and a.injected() > 0
+    # decisions are pure hashes, not RNG draws: probing in reverse order
+    # answers every key identically
+    c = FaultInjector(plan)
+    rev = [(c.transfer_fails(k, att), c.transfer_delay(k))
+           for k, att in reversed(probes)]
+    assert rev == list(reversed(got))
+    # a different seed fails a different subset
+    d = FaultInjector(FaultPlan(seed=6, transfer_fail_rate=0.3,
+                                transfer_delay_rate=0.3))
+    assert got != [(d.transfer_fails(k, att), d.transfer_delay(k))
+                   for k, att in probes]
+
+
+def test_armed_page_loss_is_one_shot_and_generations_reroll():
+    inj = FaultInjector(FaultPlan())
+    inj.arm_page_loss((3, 1))
+    assert inj.page_lost(3, 1) and not inj.page_lost(3, 1)
+    inj.arm_page_loss(4)                   # bare seq arms any logical page
+    assert inj.page_lost(4, 7) and not inj.page_lost(4, 7)
+    assert inj.counts["page_lost"] == 2
+    # seeded losses fold a per-page generation into the hash: after a loss
+    # the re-spilled copy rolls a FRESH die (the shed → re-prefill →
+    # re-spill → lost-again livelock guard)
+    seed = next(s for s in range(1000)
+                if _u01(s, "plost", 0, 0, 0) < 0.5
+                and _u01(s, "plost", 0, 0, 1) >= 0.5)
+    inj = FaultInjector(FaultPlan(seed=seed, page_loss_rate=0.5))
+    assert inj.page_lost(0, 0)             # lost once...
+    assert not inj.page_lost(0, 0)         # ...the replacement survives
+
+
+def test_scripted_events_fire_at_exactly_their_tick():
+    plan = FaultPlan(crash_at_tick=4, script=(
+        FaultEvent(tick=2, kind="shard_stall", key=1, value=0.5),
+        FaultEvent(tick=3, kind="page_lost", key=(0, 0)),
+        FaultEvent(tick=5, kind="crash"),
+    ))
+    inj = FaultInjector(plan)
+    assert inj.begin_tick(1) == []
+    assert [e.kind for e in inj.begin_tick(2)] == ["shard_stall"]
+    assert [e.kind for e in inj.begin_tick(3)] == ["page_lost"]
+    assert inj.begin_tick(5) == []         # crash is NOT a begin-tick event
+    assert not inj.crash_now(3)
+    assert inj.crash_now(4) and inj.crash_now(5)   # seeded AND scripted
+    assert inj.counts["crash"] == 2
+
+
+# ------------------------------------------------------------- journal units
+def test_journal_round_trip():
+    j = ServingJournal(capacity=1 << 12)
+    j.append_tick(1, [(0, 0, [11, 12])])
+    j.append_tick(2, [(0, 2, [13]), (1, 0, [21])])
+    state, tick = j.replay()
+    assert state == {0: [11, 12, 13], 1: [21]} and tick == 2
+    assert j.committed(0) == [11, 12, 13] and j.committed(9) == []
+    assert j.stats["journal_appends"] == 2 and j.stats["journal_bytes"] > 0
+
+
+def test_journal_replay_is_idempotent():
+    """A crash DURING recovery restarts replay — scanning twice must give
+    the same state (records are absolute-indexed overlays)."""
+    j = ServingJournal(capacity=1 << 12)
+    j.append_tick(1, [(0, 0, [1, 2])])
+    j.append_tick(2, [(0, 2, [3])])
+    assert j.replay() == j.replay() == ({0: [1, 2, 3]}, 2)
+    # a re-executed tick re-commits the same slots in place
+    j.append_tick(3, [(0, 1, [2, 3])])
+    assert j.replay()[0] == {0: [1, 2, 3]}
+
+
+def test_journal_rejects_gaps():
+    j = ServingJournal(capacity=1 << 12)
+    j.append_tick(1, [(0, 0, [1])])
+    with pytest.raises(ValueError, match="journal gap"):
+        j.append_tick(2, [(0, 5, [9])])
+
+
+def test_journal_compaction_snapshots_and_replays_full_state():
+    """A full ring reclaims into one snapshot record seeding the new tail;
+    replay after many laps still reconstructs every committed token."""
+    j = ServingJournal(capacity=512)
+    want: dict[int, list] = {}
+    for tick in range(1, 60):
+        rid = tick % 3
+        start = len(want.setdefault(rid, []))
+        toks = [tick, tick + 1]
+        want[rid][start:start + 2] = toks
+        j.append_tick(tick, [(rid, start, toks)])
+    assert j.stats["journal_compactions"] > 0
+    state, tick = j.replay()
+    assert state == want and tick == 59
+
+
+def test_journal_torn_tail_loses_only_the_last_tick():
+    """A crash mid-append tears the newest record: replay stops at the CRC
+    failure and recovers everything before it, nothing after."""
+    j = ServingJournal(capacity=1 << 12)
+    j.append_tick(1, [(0, 0, [1])])
+    j.append_tick(2, [(0, 1, [2])])
+    j.append_tick(3, [(0, 2, [3])])
+    j.wal.buf[(j.wal.head - 1) % j.wal.capacity] ^= 0xFF
+    state, tick = j.replay()
+    assert state == {0: [1, 2]} and tick == 2
+
+
+def test_journal_charges_sequential_nvmm_writes():
+    clock = SimClock()
+    j = ServingJournal(capacity=1 << 12, clock=clock)
+    j.append_tick(1, [(0, 0, [5, 6, 7])])
+    # the persist is the ack point: foreground time, sequential NVMM rate
+    assert clock.bytes_moved("nvmm", "write") == j.stats["journal_bytes"]
+    assert clock.now > 0.0
+    j2 = ServingJournal(capacity=1 << 12, clock=SimClock(),
+                        charge_clock=False)
+    j2.append_tick(1, [(0, 0, [5])])
+    assert j2.clock.now == 0.0             # accounting-free mode
+
+
+# ------------------------------------------------------- serving integration
+_MODEL = None
+
+
+def _model():
+    global _MODEL
+    if _MODEL is None:
+        import jax
+        from repro.configs import get_config
+        from repro.models import build_model
+        cfg = get_config("internlm2-1.8b-smoke")
+        model = build_model(cfg, remat=False)
+        params = model.init(jax.random.PRNGKey(0))
+        _MODEL = (cfg, model, params)
+    return _MODEL
+
+
+def _mk_engine(pool_pages=None, **cfg_kw):
+    from repro.core.engines import EngineSpec
+    from repro.serving import ServeConfig, ServingEngine
+    cfg, model, params = _model()
+    if pool_pages is None:
+        hbm = 64 << 20
+    else:
+        group = (model.cfg.num_layers * 2 * 4 * model.cfg.num_kv_heads
+                 * model.cfg.head_dim
+                 * np.dtype(model.compute_dtype).itemsize)
+        hbm = pool_pages * group
+    return cfg, ServingEngine(model, params, ServeConfig(
+        max_len=16, page_tokens=4,
+        engine_spec=EngineSpec(engine="paged", kv_hbm_bytes=hbm,
+                               kv_hot_window=4, drain_shards=2),
+        max_batch_seqs=2, **cfg_kw))
+
+
+def _reqs(cfg, max_new=4, seed=1):
+    from repro.serving import Request
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, n,
+                                               dtype=np.int32),
+                    max_new=max_new)
+            for i, n in enumerate((6, 9))]
+
+
+@pytest.mark.slow
+def test_poisoned_tick_leaves_no_pinned_pool_pages():
+    """Satellite regression at the serving level: an exception raised
+    between ``prepare_step`` and ``commit_step`` inside a fused tick must
+    leave the pool exactly ``free + live + idle-index`` — the old code
+    left that tick's fresh allocations pinned forever."""
+    cfg, eng = _mk_engine()
+    assert eng.pooled
+    reqs = _reqs(cfg)
+    real = eng.tiered.commit_step_planes
+    calls = {"n": 0}
+
+    def poisoned(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("poisoned tick")
+        return real(*a, **kw)
+
+    eng.tiered.commit_step_planes = poisoned
+    with pytest.raises(RuntimeError, match="poisoned tick"):
+        eng.generate(reqs)
+    kv = eng.tiered
+    live = {p for tbl in kv.block_table.values() for p in tbl if p >= 0}
+    assert len(kv.free_pages) + len(live) + kv._idle_index_pages() \
+        == kv.pool_pages
+    assert calls["n"] == 2                 # the poison stopped the run
+
+
+@pytest.mark.slow
+def test_lost_page_sheds_row_and_stream_stays_identical():
+    """A lost host page surfacing mid-tick: the losing row is shed back to
+    the FRONT of waiting, re-prefilled from ``prompt + committed``, and
+    every request still finishes with the fault-free run's exact tokens.
+
+    The loss is injected at the step boundary (the engine raise itself is
+    pinned at the KV level in tests/test_tiering.py): the scheduler's
+    admission and placement guards resolve pool pressure by whole-row
+    preempt/restore, so a running row only holds a spilled page — the
+    organic trigger — under engine-API schedules, not model-backed ones."""
+    from repro.serving.faults import LostPageError
+    cfg, ref_eng = _mk_engine()
+    ref = _reqs(cfg)
+    ref_eng.generate(ref)
+    want = {r.rid: list(r.generated) for r in ref}
+
+    cfg, eng = _mk_engine()
+    reqs = _reqs(cfg)
+    real = eng.step_batch
+    calls = {"n": 0}
+
+    def lossy(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 2:            # rid 0's host page comes up lost
+            raise LostPageError(0, 0)  # (before the step commits anything)
+        return real(*a, **kw)
+
+    eng.step_batch = lossy
+    eng.generate(reqs)
+    for r in reqs:
+        assert r.done and r.generated == want[r.rid], r.rid
+    assert eng.sched_stats["sched_rows_shed"] == 1
+    # the shed cost re-prefill ticks but never a token
+    assert eng.sched_stats["sched_ticks"] > ref_eng.sched_stats["sched_ticks"]
+
+
+@pytest.mark.slow
+def test_crash_at_tick_recovers_token_identically():
+    """Crash at a tick boundary, then recovery on a FRESH engine sharing
+    the same journal (the NVMM region survives, the process does not):
+    the recovered streams equal the uninterrupted run's."""
+    cfg, ref_eng = _mk_engine()
+    ref = _reqs(cfg, max_new=5)
+    ref_eng.generate(ref)
+    want = {r.rid: list(r.generated) for r in ref}
+
+    journal = ServingJournal(capacity=1 << 16)
+    cfg, eng = _mk_engine(journal=journal,
+                          fault_plan=FaultPlan(crash_at_tick=3))
+    reqs = _reqs(cfg, max_new=5)
+    with pytest.raises(CrashFault):
+        eng.generate(reqs)
+    state, last_tick = journal.replay()
+    assert last_tick == 3 and state             # durable mid-stream commits
+    assert any(0 < len(t) < 5 for t in state.values())
+
+    cfg, eng2 = _mk_engine(journal=journal)     # fresh engine, same journal
+    reqs2 = _reqs(cfg, max_new=5)
+    eng2.recover(reqs2)
+    for r in reqs2:
+        assert r.done and r.generated == want[r.rid], r.rid
+    # recovery journaled the resumed ticks too: a second crash replays more
+    state2, t2 = journal.replay()
+    assert t2 >= last_tick
+    assert {r: list(map(int, t)) for r, t in state2.items()} == want

@@ -359,3 +359,151 @@ def test_async_counters_zeroed_on_every_engine():
             assert kv.stats[key] == 0, (name, key)
         assert kv.prefetch([0, 1]) == 0
         kv.flush_transfers()
+
+
+# ------------------------------------ ISSUE 10: faults, retries, degradation
+def test_pipeline_retry_reenters_fifo_after_backoff():
+    """One injected failure: the failed attempt occupies the channel as
+    history, the retry re-enters the FIFO after a capped exponential
+    backoff, the foreground never stalls, and the retry classification is
+    one-shot."""
+    from repro.serving.faults import FaultInjector, FaultPlan, _u01
+    key, rate = ("d2h", 0, 0), 0.5
+    # pick (deterministically) a seed whose hash fails attempt 0 and
+    # passes attempt 1 for this key's first submit epoch
+    seed = next(s for s in range(10_000)
+                if _u01(s, "xfail", (key, 1), 0) < rate
+                and _u01(s, "xfail", (key, 1), 1) >= rate)
+    clock, stats = SimClock(), {}
+    p = TransferPipeline(
+        clock, stats=stats,
+        injector=FaultInjector(FaultPlan(seed=seed, transfer_fail_rate=rate)))
+    base = TransferPipeline(SimClock()).submit(
+        TransferPipeline.D2H, key, HOST_LINK, "write", 1 << 20)
+    fin = p.submit(p.D2H, key, HOST_LINK, "write", 1 << 20)
+    # attempt 0 burned [0, base); retry started at base + 2*backoff_s
+    assert fin == pytest.approx(2 * base + 2 * p.backoff_s)
+    assert clock.now == 0.0                       # background throughout
+    assert stats["transfer_failures"] == 1 and stats["transfer_retries"] == 1
+    assert not p.degraded and "tiering_degraded" not in stats
+    assert p.took_retries(key) and not p.took_retries(key)
+    assert p.barrier(key) == pytest.approx(fin)
+
+
+def test_pipeline_terminal_failure_goes_sync_and_degrades():
+    """Past the attempt budget the pipeline escalates: waits out the last
+    failed attempt, pays the copy synchronously on the foreground, and
+    flips ``degraded`` so the engine falls back to synchronous tiering."""
+    from repro.serving.faults import FaultInjector, FaultPlan
+    clock, stats = SimClock(), {}
+    p = TransferPipeline(
+        clock, stats=stats, max_retries=2,
+        injector=FaultInjector(FaultPlan(transfer_fail_rate=1.0)))
+    fin = p.submit(p.D2H, ("d2h", 0, 0), HOST_LINK, "write", 1 << 20)
+    assert p.degraded and stats["tiering_degraded"] == 1
+    assert fin == clock.now > 0.0                 # foreground paid the copy
+    assert stats["transfer_failures"] == 3        # max_retries + 1 attempts
+    assert stats["transfer_retries"] == 2
+    assert p.barrier(("d2h", 0, 0)) == 0.0        # nothing left in flight
+
+
+def test_cancel_seq_reclaims_unserved_backlog():
+    """Satellite pin: cancelling every in-flight transfer of a sequence
+    reclaims its unserved channel reservations — ``backlog_s() == 0`` after
+    cancel-all (the old ledger kept counting work that would never run) —
+    while time already served stays on the record."""
+    clock = SimClock()
+    p = TransferPipeline(clock)
+    for logical in range(3):
+        p.submit(p.D2H, ("d2h", 7, logical), HOST_LINK, "write", 1 << 20)
+    p.submit(p.H2D, ("h2d", 7, 0), HOST_LINK, "read", 1 << 20)
+    assert p.backlog_s() > 0.0
+    assert p.cancel_seq(7) == 4 and p.pending == 0
+    assert p.backlog_s() == 0.0
+    # a half-served transfer: the unserved half is reclaimed, the served
+    # half is history — the next transfer starts now, not in the past
+    f = p.submit(p.D2H, ("d2h", 8, 0), HOST_LINK, "write", 1 << 20)
+    cost = f - clock.now
+    clock.wait_until(clock.now + cost / 2)
+    p.cancel_seq(8)
+    assert p.backlog_s() == 0.0
+    g = p.submit(p.D2H, ("d2h", 9, 0), HOST_LINK, "write", 1 << 20)
+    assert g == pytest.approx(clock.now + cost)   # starts at now: no refund
+                                                  # of the served half
+
+
+def test_stall_channel_delays_queue_not_foreground():
+    """An injected drainer-shard stall pushes queued transfers out without
+    stalling the foreground, and leaves the other channel alone."""
+    clock, stats = SimClock(), {}
+    p = TransferPipeline(clock, stats=stats)
+    base = TransferPipeline(SimClock()).submit(
+        TransferPipeline.D2H, ("d2h", 0, 0), HOST_LINK, "write", 1 << 20)
+    p.stall_channel(p.D2H, 0.25)
+    fin = p.submit(p.D2H, ("d2h", 0, 0), HOST_LINK, "write", 1 << 20)
+    assert fin == pytest.approx(0.25 + base)      # queued behind the stall
+    assert clock.now == 0.0 and stats["shard_stalls"] == 1
+    assert p.submit(p.H2D, ("h2d", 0, 0), HOST_LINK, "read", 1 << 20) < fin
+
+
+def test_abort_step_returns_poisoned_tick_pages():
+    """Satellite pin: an exception between ``prepare_step`` and
+    ``commit_step`` (the poisoned tick) must leak no pool pages —
+    ``abort_step`` returns exactly the tick's fresh allocations, and the
+    retried tick then runs clean."""
+    kv, _ = _pooled_kv(pages=6)
+    rng = np.random.default_rng(11)
+    kv.append(0, _toks(rng, 8))                   # 2 committed pages
+    kv.append(1, _toks(rng, 4))                   # 1 committed page
+    free_before = len(kv.free_pages)
+    kv.prepare_step([0, 1], [2, 2], max_pages=16)
+    assert len(kv.free_pages) < free_before       # the tick allocated
+    kv.abort_step([0, 1])                         # tick poisoned: no commit
+    assert len(kv.free_pages) == free_before
+    assert len(kv.block_table[0]) == 2 and len(kv.block_table[1]) == 1
+    k, v = kv.pool_views()                        # the retried tick commits
+    kv.prepare_step([0, 1], [1, 1], max_pages=16)
+    kv.commit_step(k, v, [0, 1], [1, 1])
+    kv.release(0)
+    kv.release(1)
+    assert not kv.page_users
+    assert len(kv.free_pages) + kv._idle_index_pages() == kv.pool_pages
+
+
+def test_lost_host_page_raises_and_drops_the_copy():
+    """An armed page loss fires on the demand-fault read: LostPageError
+    names the victim (seq, logical), the corrupt staging copy is dropped,
+    the loss is counted, and releasing the shed row leaves the pool
+    consistent."""
+    from repro.serving.faults import FaultInjector, FaultPlan, LostPageError
+    kv, _ = _pooled_kv(pages=2)
+    kv.set_fault_injector(FaultInjector(FaultPlan()))
+    rng = np.random.default_rng(12)
+    kv.append(0, _toks(rng, 8))                   # fills the pool
+    kv.append(1, _toks(rng, 4))                   # spills seq 0's LRU page
+    lost = (0, kv.block_table[0].index(-1))
+    kv._injector.arm_page_loss(lost)
+    with pytest.raises(LostPageError) as ei:
+        kv.read(0, layer=0)
+    assert (ei.value.seq, ei.value.logical) == lost
+    assert kv.stats["host_pages_lost"] == 1
+    assert lost not in kv.host_pages              # corrupt copy is gone
+    kv.release(0)                                 # the scheduler sheds it
+    assert len(kv.free_pages) == kv.pool_pages - 1    # only seq 1 lives on
+
+
+def test_fault_api_and_counters_on_every_engine():
+    """Uniform surface: the ISSUE 10 counters exist — zeroed — on every
+    registered KV engine, and the fault hooks are safe no-ops off the
+    pooled paged path."""
+    from repro.serving.faults import FaultInjector, FaultPlan
+    for name in list_kv_engines():
+        kv = create_kv_engine(
+            EngineSpec(engine=name, kv_hbm_bytes=1 << 20), KV_SPEC,
+            SimClock())
+        for key in ("transfer_retries", "transfer_failures", "retried_faults",
+                    "host_pages_lost", "shard_stalls", "tiering_degraded"):
+            assert kv.stats[key] == 0, (name, key)
+        kv.set_fault_injector(FaultInjector(FaultPlan()))
+        kv.abort_step([0, 1])
+        kv.stall_transfers(0, 1e-3)
